@@ -1,0 +1,67 @@
+"""Paper Fig. 4 + Table 2: end-to-end cost across methods.
+
+Methods: ScaleDoc (trained proxy + adaptive cascade), direct embedding
+matching (NvEmbed-analog cascade), oracle-only. Reports per-method data
+reduction, oracle invocations, total FLOPs (the paper's own cost model:
+proxy 2T / oracle 500P per 10k docs), and speedup over oracle-only.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (N_DOCS, Rows, default_cascade_cfg,
+                               default_proxy_cfg, timed, workload)
+from repro.core import ScaleDocPipeline, SimulatedOracle, run_cascade
+from repro.core.oracle import ORACLE_FLOPS_PER_DOC, OUR_PROXY_FLOPS_PER_DOC
+from repro.core.scoring import direct_embedding_scores
+
+
+def run(rows: Rows) -> dict:
+    corpus, queries = workload()
+    pcfg, ccfg = default_proxy_cfg(), default_cascade_cfg()
+    pipe = ScaleDocPipeline(corpus.embeds, pcfg, ccfg)
+
+    agg = {"scaledoc": [], "direct": [], "oracle": []}
+    for i, q in enumerate(queries):
+        oracle = SimulatedOracle(q.truth)
+        stats, us = timed(pipe.query, q.embed, oracle,
+                          ground_truth=q.truth, seed=i)
+        c = stats.cascade
+        agg["scaledoc"].append({
+            "f1": c.achieved_f1, "calls": stats.oracle_calls_total,
+            "flops": stats.total_flops, "us": us,
+            "reduction": 1 - stats.oracle_calls_total / N_DOCS})
+
+        o2 = SimulatedOracle(q.truth)
+        scores = direct_embedding_scores(q.embed, corpus.embeds)
+        c2, us2 = timed(run_cascade, scores, o2, ccfg, ground_truth=q.truth)
+        agg["direct"].append({
+            "f1": c2.achieved_f1, "calls": o2.calls,
+            "flops": o2.calls * ORACLE_FLOPS_PER_DOC, "us": us2,
+            "reduction": 1 - o2.calls / N_DOCS})
+
+        agg["oracle"].append({
+            "f1": 1.0, "calls": N_DOCS,
+            "flops": N_DOCS * ORACLE_FLOPS_PER_DOC, "us": 0.0,
+            "reduction": 0.0})
+
+    out = {}
+    base_flops = np.mean([r["flops"] for r in agg["oracle"]])
+    for method, rs in agg.items():
+        f1 = float(np.mean([r["f1"] for r in rs]))
+        red = float(np.mean([r["reduction"] for r in rs]))
+        flops = float(np.mean([r["flops"] for r in rs]))
+        us = float(np.mean([r["us"] for r in rs]))
+        speedup = base_flops / flops if flops else float("inf")
+        rows.add(f"cascade/{method}", us,
+                 f"f1={f1:.3f};reduction={red:.3f};flops={flops:.3e};"
+                 f"speedup_vs_oracle={speedup:.2f}x")
+        out[method] = {"f1": f1, "reduction": red, "flops": flops,
+                       "speedup": speedup}
+    return out
+
+
+if __name__ == "__main__":
+    rows = Rows()
+    run(rows)
+    rows.emit()

@@ -1,0 +1,114 @@
+"""Kernel-layer benchmark: allclose vs oracle (interpret mode) + CPU
+wall-time of the jitted reference paths at production-like shapes, plus
+analytic VMEM/HBM traffic for the Pallas kernels (the dry-run/roofline
+companion: no TPU in this container, so per-kernel *time* is the jnp
+reference; correctness is the kernel itself in interpret mode).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(rows: Rows) -> dict:
+    out = {}
+
+    # fused scoring @ 100k docs x 256 dims (CPU-scaled)
+    from repro.kernels.fused_scoring import ref as sref
+    from repro.kernels.fused_scoring.scoring import fused_scores
+    D, H, L, N = 256, 128, 64, 100_000
+    docs = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (D, H)) * 0.05
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (H, H)) * 0.05
+    w3 = jax.random.normal(jax.random.PRNGKey(3), (H, L)) * 0.05
+    b1, b2, b3 = jnp.zeros(H), jnp.zeros(H), jnp.zeros(L)
+    zq = jax.random.normal(jax.random.PRNGKey(4), (L,))
+    zq = zq / jnp.linalg.norm(zq)
+    ref_fn = jax.jit(lambda d: sref.ref_scores(d, w1, b1, w2, b2, w3, b3,
+                                               zq))
+    us = _time(ref_fn, docs)
+    small = docs[:512]
+    k_out = fused_scores(small, w1, b1, w2, b2, w3, b3, zq, interpret=True)
+    r_out = sref.ref_scores(small, w1, b1, w2, b2, w3, b3, zq)
+    err = float(jnp.abs(k_out - r_out).max())
+    flops = 2 * N * (D * H + H * H + H * L)
+    hbm = N * D * 4  # kernel reads docs once; activations stay in VMEM
+    rows.add("kernels/fused_scoring", us,
+             f"docs={N};err={err:.1e};flops={flops:.2e};"
+             f"min_hbm_bytes={hbm:.2e};ai={flops / hbm:.1f}")
+    out["fused_scoring"] = {"us": us, "err": err}
+
+    # contrastive loss batch
+    from repro.kernels.contrastive import ref as cref
+    from repro.kernels.contrastive.contrastive import contrastive_losses
+    n, p = 256, 64
+    zq2 = jax.random.normal(jax.random.PRNGKey(0), (p,))
+    zd = jax.random.normal(jax.random.PRNGKey(1), (n, p))
+    y = (jax.random.uniform(jax.random.PRNGKey(2), (n,)) > 0.6
+         ).astype(jnp.float32)
+    ref_fn2 = jax.jit(lambda a, b, c: cref.ref_losses(a, b, c, 0.07, 0.2))
+    us = _time(ref_fn2, zq2, zd, y)
+    err = float(jnp.abs(
+        contrastive_losses(zq2, zd, y, 0.07, 0.2, interpret=True)
+        - cref.ref_losses(zq2, zd, y, 0.07, 0.2)).max())
+    rows.add("kernels/contrastive", us, f"n={n};err={err:.1e}")
+    out["contrastive"] = {"us": us, "err": err}
+
+    # flash attention tile (prefill shape scaled down)
+    from repro.kernels.flash_attention.ref import ref_attention
+    from repro.models.attention import attention_blocked
+    b, s, h, hd = 1, 2048, 4, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd))
+    blocked = jax.jit(lambda q, k, v: attention_blocked(
+        q, k, v, hd ** -0.5, causal=True))
+    us = _time(blocked, q, k, v)
+    flops = 4 * b * h * s * s * hd
+    rows.add("kernels/flash_attention", us,
+             f"seq={s};flops={flops:.2e};"
+             f"xla_tile_traffic_bytes={b * h * s * s * 4 * 2:.2e};"
+             f"pallas_hbm_bytes={b * s * h * hd * 4 * 4:.2e}")
+    out["flash"] = {"us": us}
+
+    # wkv6 chunked
+    from repro.kernels.wkv6 import ref as wref
+    from repro.kernels.wkv6.ops import wkv6
+    b2, s2, H2, K2 = 2, 1024, 8, 64
+    r = jax.random.normal(jax.random.PRNGKey(0), (b2, s2, H2, K2)) * 0.5
+    kk = jax.random.normal(jax.random.PRNGKey(1), (b2, s2, H2, K2)) * 0.5
+    vv = jax.random.normal(jax.random.PRNGKey(2), (b2, s2, H2, K2)) * 0.5
+    lw = -jnp.exp(jax.random.normal(jax.random.PRNGKey(3),
+                                    (b2, s2, H2, K2)))
+    u = jax.random.normal(jax.random.PRNGKey(4), (H2, K2)) * 0.3
+    seq_fn = jax.jit(lambda *a: wref.ref_wkv6(*a))
+    us_seq = _time(seq_fn, r, kk, vv, lw, u)
+    err = float(jnp.abs(
+        wkv6(r[:, :128], kk[:, :128], vv[:, :128], lw[:, :128], u,
+             chunk=32, interpret=True)
+        - wref.ref_wkv6(r[:, :128], kk[:, :128], vv[:, :128],
+                        lw[:, :128], u)).max())
+    rows.add("kernels/wkv6", us_seq,
+             f"seq={s2};sequential_ref_us={us_seq:.0f};err={err:.1e}")
+    out["wkv6"] = {"us": us_seq, "err": err}
+    return out
+
+
+if __name__ == "__main__":
+    rows = Rows()
+    print(run(rows))
+    rows.emit()

@@ -1,0 +1,49 @@
+"""Paper §4.3: Algorithm 2's linear frontier walk vs the quadratic brute
+force — result parity + runtime scaling over discretization granularity.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.config.base import CascadeConfig
+from repro.core import calibration as C
+from repro.core import thresholds as T
+
+
+def run(rows: Rows) -> dict:
+    rng = np.random.default_rng(0)
+    n = 20000
+    pos = 1 / (1 + np.exp(-rng.normal(1.2, 1.0, n // 3)))
+    neg = 1 / (1 + np.exp(-rng.normal(-1.2, 1.0, n - n // 3)))
+    scores = np.concatenate([pos, neg])
+    labels = np.concatenate([np.ones(n // 3, bool),
+                             np.zeros(n - n // 3, bool)])
+    out = {}
+    for bins in (16, 32, 64, 128, 256):
+        cfg = CascadeConfig(num_bins=bins)
+        calib = C.calibrate(scores, lambda idx: labels[idx], cfg,
+                            np.random.default_rng(0))
+        t0 = time.time()
+        reps = 20
+        for _ in range(reps):
+            fast = T.select_thresholds(calib, 0.9)
+        t_fast = (time.time() - t0) / reps * 1e6
+        t0 = time.time()
+        brute = T.brute_force_thresholds(calib, 0.9)
+        t_brute = (time.time() - t0) * 1e6
+        match = abs(fast.unfiltered - brute.unfiltered) < 1e-9
+        rows.add(f"thresholds/bins{bins}", t_fast,
+                 f"brute_us={t_brute:.0f};speedup={t_brute / t_fast:.1f}x;"
+                 f"optimal={match};path={fast.path_len}")
+        out[bins] = {"fast_us": t_fast, "brute_us": t_brute,
+                     "match": bool(match)}
+    return out
+
+
+if __name__ == "__main__":
+    rows = Rows()
+    print(run(rows))
+    rows.emit()

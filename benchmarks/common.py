@@ -1,0 +1,63 @@
+"""Shared benchmark scaffolding: workload construction + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.data import make_corpus, make_query
+
+# CPU-scaled workload: the paper uses 10k docs x 20 queries x 3 datasets;
+# we default to 6k docs x 6 queries x 1 corpus (same ratios: 10% train,
+# 5% calibration) so the full suite runs in minutes on one core.
+N_DOCS = 10000
+DIM = 128
+N_QUERIES = 6
+# diverse query mix, mirroring the paper's "wide range of semantic
+# characteristics": easy topical (direct cosine suffices), hidden-negative
+# concepts, and nonlinear composites (embeddings are weakest)
+QUERY_SPECS = [
+    dict(selectivity=0.20, neg_weight=0.0, nonlinearity=0.0),   # easy
+    dict(selectivity=0.35, neg_weight=0.0, nonlinearity=0.0),   # easy
+    dict(selectivity=0.25, neg_weight=0.5, nonlinearity=0.0),   # medium
+    dict(selectivity=0.30, neg_weight=0.8, nonlinearity=0.3),   # hard
+    dict(selectivity=0.15, neg_weight=0.8, nonlinearity=0.3),   # hard/skew
+    dict(selectivity=0.40, neg_weight=0.4, nonlinearity=0.6),   # composite
+]
+
+
+def default_proxy_cfg() -> ProxyConfig:
+    return ProxyConfig(embed_dim=DIM, hidden_dim=256, latent_dim=128,
+                       proj_dim=64, phase1_steps=120, phase2_steps=120,
+                       batch_size=128)
+
+
+def default_cascade_cfg(**kw) -> CascadeConfig:
+    return CascadeConfig(accuracy_target=0.9, **kw)
+
+
+def workload(seed: int = 0):
+    corpus = make_corpus(seed, n_docs=N_DOCS, dim=DIM)
+    queries = [make_query(corpus, 100 + i, **spec)
+               for i, spec in enumerate(QUERY_SPECS)]
+    return corpus, queries
+
+
+class Rows:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append(f"{name},{us_per_call:.1f},{derived}")
+
+    def emit(self):
+        for r in self.rows:
+            print(r)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6

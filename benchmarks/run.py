@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
+                            bench_kernels, bench_thresholds, bench_tradeoff)
+    from benchmarks.common import Rows
+
+    suites = [
+        ("cascade (Fig4+Table2)", bench_cascade.run),
+        ("ablation (Fig9+Fig11)", bench_ablation.run),
+        ("calibration (Fig12+Table4)", bench_calibration.run),
+        ("thresholds (Alg2)", bench_thresholds.run),
+        ("tradeoff (Fig7/8/13)", bench_tradeoff.run),
+        ("kernels", bench_kernels.run),
+    ]
+    rows = Rows()
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn(rows)
+        except Exception as e:  # keep the suite running
+            rows.add(f"{name}/ERROR", 0.0, repr(e)[:200])
+        print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+    rows.emit()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,8 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    gc_old_steps,
+    latest_step,
+    list_steps,
+    restore,
+    save,
+)

@@ -1,0 +1,152 @@
+"""Checkpointing: atomic pytree save/restore + async writer + step GC +
+elastic re-shard on restore.
+
+Layout (one directory per step):
+    <dir>/step_000123/manifest.json   — tree structure, shapes, dtypes,
+                                        mesh signature, user metadata
+    <dir>/step_000123/arrays.npz      — flat leaves (host-gathered)
+    <dir>/step_000123/.complete      — commit marker (atomicity)
+
+Restore targets any mesh: arrays are loaded on host and device_put with
+the *destination* shardings, so a 256-chip checkpoint restores onto 8
+chips or 512 (elastic scaling; see runtime/fault.py for the policy).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(directory: str, step: int, tree: Any,
+         metadata: Optional[Dict] = None, mesh_signature: str = "") -> Path:
+    """Synchronous atomic save."""
+    base = Path(directory)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:09d}"
+    tmp = base / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    named = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "mesh_signature": mesh_signature,
+                "metadata": metadata or {}, "leaves": {}}
+    for key, leaf in named:
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if arr.dtype not in (np.float64, np.float32, np.float16, np.int64,
+                             np.int32, np.int16, np.int8, np.uint8,
+                             np.bool_):
+            arr = arr.astype(np.float32)  # bf16/fp8: store widened
+        arrays[key] = arr
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": dtype_name}
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    (tmp / ".complete").write_text(str(time.time()))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a background thread; at most one pending
+    write (a newer save waits for the previous to finish)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, tree: Any, metadata=None,
+             mesh_signature: str = "") -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save(self.directory, step, host_tree, metadata, mesh_signature)
+            self.last_saved = step
+            gc_old_steps(self.directory, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def list_steps(directory: str) -> List[int]:
+    base = Path(directory)
+    if not base.exists():
+        return []
+    steps = []
+    for p in base.iterdir():
+        if p.name.startswith("step_") and (p / ".complete").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return sorted(steps)
+
+
+def gc_old_steps(directory: str, keep: int) -> None:
+    steps = list_steps(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(Path(directory) / f"step_{s:09d}", ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, target_tree: Any,
+            shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``target_tree`` (shapes validated).
+    ``shardings``: matching tree of NamedShardings for elastic placement
+    onto the *current* mesh (None = host arrays)."""
+    path = Path(directory) / f"step_{step:09d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+
+    named = _flatten_with_paths(target_tree)
+    flat_shardings = (None if shardings is None
+                      else [s for _, s in _flatten_with_paths(shardings)])
+    leaves = []
+    for i, (key, leaf) in enumerate(named):
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        expect = tuple(np.shape(leaf)) if hasattr(leaf, "shape") else None
+        if expect is not None and tuple(arr.shape) != expect:
+            raise ValueError(
+                f"leaf {key!r} shape {arr.shape} != expected {expect}")
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = np.asarray(jnp.asarray(arr).astype(leaf.dtype))
+        if flat_shardings is not None:
+            leaves.append(jax.device_put(arr, flat_shardings[i]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    treedef = jax.tree.structure(target_tree)
+    return treedef.unflatten(leaves), manifest

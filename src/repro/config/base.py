@@ -1,0 +1,340 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything is a frozen dataclass so configs are hashable (usable as jit
+static args) and safely shareable across the launcher / dry-run / tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by models/transformer.py
+BLOCK_ATTN = "attn"            # full (causal) attention
+BLOCK_LOCAL_ATTN = "local"     # sliding-window attention
+BLOCK_MAMBA2 = "mamba2"        # Mamba2 / SSD block
+BLOCK_RWKV6 = "rwkv6"          # RWKV6 (Finch) time-mix block
+BLOCK_SHARED_ATTN = "shared"   # shared-weight attention block (Zamba2)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    # capacity factor for GShard-style dispatch (tokens per expert =
+    # capacity_factor * tokens * top_k / num_experts)
+    capacity_factor: float = 1.25
+    # number of always-on shared experts (DeepSeek-style); 0 for the pool
+    num_shared_experts: int = 0
+    router_aux_weight: float = 0.01
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64         # N: SSM state size per head
+    conv_width: int = 4         # short conv width in the Mamba block
+    head_dim: int = 64          # P: channels per SSD head
+    expand: int = 2             # d_inner = expand * d_model
+    chunk: int = 128            # SSD chunked-scan block length
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64          # RWKV6 head size (k,v per head)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. One instance per assigned architecture."""
+    name: str = "unnamed"
+    family: str = "dense"        # dense | moe | hybrid | ssm | audio | vlm
+
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2
+    d_ff: int = 512
+    vocab_size: int = 1024
+    head_dim: int = 0            # 0 -> d_model // num_heads
+
+    # layer pattern: tuple of block kinds, tiled to num_layers.
+    # e.g. gemma3: 5x local + 1x global; zamba2: mamba2 with shared attn.
+    block_pattern: Tuple[str, ...] = (BLOCK_ATTN,)
+    sliding_window: int = 0      # window for BLOCK_LOCAL_ATTN layers
+
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    rwkv: RWKVConfig = field(default_factory=RWKVConfig)
+
+    # encoder-decoder (whisper): number of encoder layers; 0 = decoder-only
+    encoder_layers: int = 0
+    encoder_d_ff: int = 0
+    # stub modality frontend ("none" | "audio" | "vision"): input_specs()
+    # provide pre-computed frame/patch embeddings of dim d_model.
+    frontend: str = "none"
+
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    act: str = "silu"            # mlp activation
+    dtype: str = "bfloat16"      # activation/param dtype for large runs
+
+    # remat policy for the scanned layer stack: "none" | "full" | "dots"
+    remat: str = "full"
+    # scan layers (compile-time compactness); required for the big archs
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab padded to a multiple of 256 so the vocab dim shards over
+        any mesh axis (standard practice; logical ids stay < vocab_size —
+        padded logit columns are masked to -inf)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return all(b in (BLOCK_MAMBA2, BLOCK_RWKV6) for b in self.layer_kinds())
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Expand block_pattern to num_layers entries."""
+        pat = self.block_pattern
+        reps = (self.num_layers + len(pat) - 1) // len(pat)
+        return tuple((pat * reps)[: self.num_layers])
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+
+        def attn_params() -> int:
+            return d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+
+        def mlp_params(ff: int) -> int:
+            return 3 * d * ff  # gated (SwiGLU): up, gate, down
+
+        def moe_params() -> int:
+            e = self.moe.num_experts
+            return e * mlp_params(f) + d * e  # experts + router
+
+        def mamba_params() -> int:
+            di = self.ssm.expand * d
+            nh = di // self.ssm.head_dim
+            # in_proj (z,x,B,C,dt) + out_proj + conv + A,D
+            return (d * (2 * di + 2 * self.ssm.state_dim * nh + nh)
+                    + di * d + self.ssm.conv_width * di + 2 * nh)
+
+        def rwkv_params() -> int:
+            # r,k,v,g,o projections + decay/lora + channel-mix (k,r,v)
+            return 5 * d * d + 2 * d * 64 + (d * int(3.5 * d) * 2 + d * d)
+
+        kinds = self.layer_kinds()
+        shared_counted = False
+        for k in kinds:
+            total += 2 * d  # norms
+            if k in (BLOCK_ATTN, BLOCK_LOCAL_ATTN):
+                total += attn_params()
+                total += moe_params() if self.moe.enabled else mlp_params(f)
+            elif k == BLOCK_SHARED_ATTN:
+                if not shared_counted:
+                    total += attn_params() + mlp_params(f)
+                    shared_counted = True
+            elif k == BLOCK_MAMBA2:
+                total += mamba_params()
+            elif k == BLOCK_RWKV6:
+                total += rwkv_params()
+        if self.is_encdec:
+            ef = self.encoder_d_ff or f
+            per_enc = attn_params() + mlp_params(ef) + 2 * d
+            total += self.encoder_layers * per_enc
+            # decoder cross-attention
+            total += self.num_layers * attn_params()
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts only top_k experts)."""
+        if not self.moe.enabled:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        e, k = self.moe.num_experts, self.moe.top_k
+        inactive = (e - k) * 3 * d * f * len(
+            [b for b in self.layer_kinds() if b in (BLOCK_ATTN, BLOCK_LOCAL_ATTN)]
+        )
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes
+
+
+SINGLE_POD = MeshConfig(shape=(16, 16), axes=("data", "model"))
+MULTI_POD = MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
+# tiny meshes for CPU tests
+TEST_MESH = MeshConfig(shape=(1, 1), axes=("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the four assigned LM shapes)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Training / serving / cascade configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"     # cosine | linear | constant
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # int8 gradient compression (error feedback) for the DP all-reduce
+    compress_grads: bool = False
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    shape: InputShape = TRAIN_4K
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    microbatch: int = 0          # 0 = no gradient accumulation
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    shape: InputShape = DECODE_32K
+    # decode attention strategy: "gspmd" (baseline) | "flash_shmap"
+    # (sequence-sharded flash-decoding via shard_map; beyond-paper perf opt)
+    decode_attention: str = "gspmd"
+    max_batch: int = 128
+
+
+@dataclass(frozen=True)
+class ProxyConfig:
+    """ScaleDoc's lightweight query-aware encoder (paper §3, §5)."""
+    embed_dim: int = 4096        # D: LLM embedding dim (NvEmbed = 4096)
+    hidden_dim: int = 512        # MLP hidden
+    latent_dim: int = 128        # l: shared latent space
+    proj_dim: int = 64           # projector head (discarded at inference)
+    num_layers: int = 3          # "3-layer perceptron" per paper §5
+    temperature: float = 0.07    # tau
+    lambda_supcon: float = 0.2   # lambda balancing L_supcon vs L_polar
+    phase1_steps: int = 60
+    phase2_steps: int = 60
+    batch_size: int = 128        # docs per contrastive mini-batch
+    lr: float = 1e-3
+    train_fraction: float = 0.10   # paper: 10% sampled for training
+    rebalance: bool = True         # fallback-style rebalancing (paper §5)
+    rebalance_min_frac: float = 0.25
+    rebalance_noise: float = 0.05
+    # generalization controls (small labeled samples memorize otherwise)
+    aug_noise: float = 0.05        # Gaussian embedding augmentation per batch
+    weight_decay: float = 0.01
+    qsim_variant: str = "perpos"   # "perpos" (DPR form) | "sum" (literal eq.1)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class CascadeConfig:
+    """ScaleDoc's adaptive cascade (paper §4, §5)."""
+    accuracy_target: float = 0.90
+    num_bins: int = 64           # discretization granularity (paper §5)
+    calib_fraction: float = 0.05  # calibration sample (paper: 5%)
+    jitter_density: float = 0.01  # mass injected into empty bins
+    ma_window: int = 5           # moving-average smoothing window
+    metric: str = "f1"           # "f1" | "exact" (BARGAIN comparison)
+    delta: float = 0.05          # confidence for the Bernstein margin
+    # selection safety margin: "none" | "bernstein" (Prop.1 epsilon) |
+    # "bootstrap" (resample the calibration sample; widen the target until
+    # boot_conf of resamples certify the accuracy target)
+    margin_mode: str = "bootstrap"
+    boot_samples: int = 64
+    boot_conf: float = 0.95
+    use_margin: bool = False     # legacy alias for margin_mode="bernstein"
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Top-level config: one run of the framework."""
+    arch: str = "smollm-360m"
+    model: ModelConfig = field(default_factory=ModelConfig)
+    mesh: MeshConfig = SINGLE_POD
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+    proxy: ProxyConfig = field(default_factory=ProxyConfig)
+    cascade: CascadeConfig = field(default_factory=CascadeConfig)
+
+
+def replace(cfg, **kw):
+    """dataclasses.replace that tolerates nested dotted keys."""
+    direct = {k: v for k, v in kw.items() if "." not in k}
+    nested = {k: v for k, v in kw.items() if "." in k}
+    out = dataclasses.replace(cfg, **direct) if direct else cfg
+    for key, val in nested.items():
+        head, rest = key.split(".", 1)
+        sub = getattr(out, head)
+        out = dataclasses.replace(out, **{head: replace(sub, **{rest: val})})
+    return out

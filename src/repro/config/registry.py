@@ -1,0 +1,44 @@
+"""Architecture registry: --arch <id> -> ModelConfig.
+
+Each assigned architecture registers itself from src/repro/configs/<id>.py.
+`get_arch(name)` returns the full-size config; `get_smoke_arch(name)` returns
+the reduced same-family config used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.config.base import ModelConfig
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_SMOKE: Dict[str, ModelConfig] = {}
+
+
+def register(full: ModelConfig, smoke: ModelConfig) -> ModelConfig:
+    if full.name in _REGISTRY:
+        raise ValueError(f"duplicate arch {full.name!r}")
+    _REGISTRY[full.name] = full
+    _SMOKE[full.name] = smoke
+    return full
+
+
+def _ensure_loaded() -> None:
+    # importing the package registers every config module
+    import repro.configs  # noqa: F401
+
+
+def get_arch(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def get_smoke_arch(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _SMOKE[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

@@ -1,0 +1,15 @@
+"""Assigned-architecture configs. Importing this package registers all
+architectures with repro.config.registry."""
+from repro.configs import (  # noqa: F401
+    codeqwen15_7b,
+    dbrx_132b,
+    gemma3_12b,
+    internvl2_1b,
+    llama3_8b,
+    qwen3_moe_30b_a3b,
+    rwkv6_7b,
+    smollm_360m,
+    whisper_base,
+    zamba2_27b,
+)
+from repro.configs.shapes import arch_cells, cell_is_runnable, skip_reason  # noqa: F401

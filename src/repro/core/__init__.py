@@ -1,0 +1,20 @@
+# ScaleDoc's primary contribution: query-aware contrastive proxy training
+# (§3) + adaptive cascade with calibrated thresholds (§4), composed by
+# ScaleDocPipeline.
+from repro.core.cascade import (  # noqa: F401
+    CascadeResult,
+    f1_score,
+    naive_cascade,
+    probe_cascade,
+    run_cascade,
+    supg_cascade,
+)
+from repro.core.encoder import (  # noqa: F401
+    decision_scores,
+    encoder_apply,
+    encoder_init,
+    projector_apply,
+)
+from repro.core.oracle import LMOracle, SimulatedOracle  # noqa: F401
+from repro.core.pipeline import QueryStats, ScaleDocPipeline  # noqa: F401
+from repro.core.trainer import train_proxy, train_proxy_variant  # noqa: F401

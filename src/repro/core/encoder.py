@@ -1,0 +1,83 @@
+"""ScaleDoc's lightweight query-aware proxy encoder (paper §3.2, §5).
+
+A 3-layer MLP ``E : R^D -> R^l`` maps LLM embeddings (documents and the
+query) into a shared latent space; the decision score is the cosine
+similarity between latents. A projector head (standard contrastive-learning
+practice, paper §5) is appended during training and discarded at inference.
+
+Scores are mapped from cosine [-1, 1] to [0, 1] via (1+cos)/2 to match the
+paper's stated score interval.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ProxyConfig
+from repro.models.common import dense_init
+
+Params = Dict[str, Any]
+
+
+def encoder_init(key, cfg: ProxyConfig, dtype=jnp.float32) -> Params:
+    dims = [cfg.embed_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1) \
+        + [cfg.latent_dim]
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    layers = []
+    for i in range(cfg.num_layers):
+        layers.append({
+            "w": dense_init(keys[i], dims[i], (dims[i + 1],), dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    proj = {
+        "w": dense_init(keys[-1], cfg.latent_dim, (cfg.proj_dim,), dtype),
+        "b": jnp.zeros((cfg.proj_dim,), dtype),
+    }
+    return {"layers": {f"l{i}": l for i, l in enumerate(layers)},
+            "proj": proj}
+
+
+def encoder_axes(cfg: ProxyConfig) -> Params:
+    layers = {}
+    for i in range(cfg.num_layers):
+        layers[f"l{i}"] = {"w": ("proxy_in", "proxy_out"),
+                           "b": ("proxy_out",)}
+    return {"layers": layers,
+            "proj": {"w": ("proxy_in", "proxy_out"), "b": ("proxy_out",)}}
+
+
+def encoder_apply(params: Params, e: jnp.ndarray) -> jnp.ndarray:
+    """e: (..., D) -> latent z: (..., l)."""
+    x = e
+    n = len(params["layers"])
+    for i in range(n):
+        l = params["layers"][f"l{i}"]
+        x = x @ l["w"] + l["b"]
+        if i < n - 1:
+            x = jax.nn.gelu(x)
+    return x
+
+
+def projector_apply(params: Params, z: jnp.ndarray) -> jnp.ndarray:
+    """Training-only projector head."""
+    p = params["proj"]
+    return z @ p["w"] + p["b"]
+
+
+def l2_normalize(x: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def cosine(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(l2_normalize(a) * l2_normalize(b), axis=-1)
+
+
+def decision_scores(params: Params, e_q: jnp.ndarray, e_docs: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """(1 + cos(z_q, z_d)) / 2 in [0, 1]. e_q: (D,); e_docs: (N, D)."""
+    z_q = encoder_apply(params, e_q)
+    z_d = encoder_apply(params, e_docs)
+    cos = l2_normalize(z_d) @ l2_normalize(z_q)
+    return (1.0 + cos) / 2.0

@@ -1,0 +1,117 @@
+"""ScaleDoc's three contrastive objectives (paper §3.2, Fig. 3).
+
+All losses operate on *projected, L2-normalized* latents:
+  z_q : (p,)   query anchor
+  z_d : (n, p) documents in the mini-batch
+  y   : (n,)   binary labels (1 = positive)
+
+  L_qsim   (eq. 1): InfoNCE with the query as anchor — pulls positives
+           toward the query, pushes negatives away (semantic monotonicity).
+  L_supcon (eq. 2): supervised contrastive — intra-class clustering.
+  L_polar  (eq. 3): bellwether polarization — per-batch bellwethers
+           d_pos = argmin_{d+} sim(q, d),  d_neg = argmax_{d-} sim(q, d)
+           anchor pulls that enlarge the inter-class margin (bipolarity).
+
+Degenerate batches (no positives / no negatives) contribute 0 to the
+affected terms (guarded with masked logsumexp).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoder import l2_normalize
+
+NEG = -1e30
+
+
+def _masked_lse(logits: jnp.ndarray, mask: jnp.ndarray,
+                axis: int = -1) -> jnp.ndarray:
+    """log sum_{i in mask} exp(logits_i); returns NEG if mask empty."""
+    masked = jnp.where(mask, logits, NEG)
+    return jax.nn.logsumexp(masked, axis=axis)
+
+
+def qsim_loss(z_q: jnp.ndarray, z_d: jnp.ndarray, y: jnp.ndarray,
+              tau: float, variant: str = "perpos") -> jnp.ndarray:
+    """Eq. (1) InfoNCE with the query as anchor.
+
+    variant="perpos" (default): mean over positives of
+        -log( e^{sim_i/tau} / sum_all e^{sim/tau} )
+    — the DPR [20] form the paper builds on. The literal eq. (1) puts the
+    positive sum *inside* the log ("sum" variant); with multiple positives
+    per batch that objective is satisfied by a single well-placed positive
+    and demonstrably under-trains (see tests/test_losses.py and
+    EXPERIMENTS.md §Paper-validation), so we default to the DPR form and
+    keep "sum" for the ablation.
+    """
+    zq = l2_normalize(z_q)
+    zd = l2_normalize(z_d)
+    sims = zd @ zq / tau                           # (n,)
+    pos = y > 0.5
+    any_pos = jnp.any(pos)
+    lse_all = jax.nn.logsumexp(sims)
+    if variant == "sum":
+        lse_pos = _masked_lse(sims, pos)
+        loss = -(lse_pos - lse_all)
+    else:
+        per = -(sims - lse_all)
+        loss = (jnp.sum(jnp.where(pos, per, 0.0))
+                / jnp.maximum(jnp.sum(pos), 1))
+    return jnp.where(any_pos, loss, 0.0)
+
+
+def supcon_loss(z_d: jnp.ndarray, y: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """Eq. (2): for each anchor i,
+    -1/|U(i)| log( sum_{p in U(i)} e^{sim_ip/tau} / sum_{k in A(i)} ... )."""
+    n = z_d.shape[0]
+    zd = l2_normalize(z_d)
+    sims = zd @ zd.T / tau                         # (n, n)
+    eye = jnp.eye(n, dtype=bool)
+    same = (y[:, None] > 0.5) == (y[None, :] > 0.5)
+    u_mask = same & ~eye                            # U(i)
+    a_mask = ~eye                                   # A(i)
+    u_count = jnp.sum(u_mask, axis=1)
+    lse_u = _masked_lse(sims, u_mask, axis=1)
+    lse_a = _masked_lse(sims, a_mask, axis=1)
+    per_anchor = -(lse_u - lse_a) / jnp.maximum(u_count, 1)
+    valid = u_count > 0
+    return jnp.sum(jnp.where(valid, per_anchor, 0.0)) / jnp.maximum(
+        jnp.sum(valid), 1)
+
+
+def polar_loss(z_q: jnp.ndarray, z_d: jnp.ndarray, y: jnp.ndarray,
+               tau: float) -> jnp.ndarray:
+    """Eq. (3): bellwether-anchored bipolarization."""
+    zq = l2_normalize(z_q)
+    zd = l2_normalize(z_d)
+    sim_q = zd @ zq                                 # (n,)
+    pos = y > 0.5
+    neg = ~pos
+    any_pos = jnp.any(pos)
+    any_neg = jnp.any(neg)
+
+    # bellwethers: weakest positive / hardest negative w.r.t. the query
+    pos_scores = jnp.where(pos, sim_q, jnp.inf)
+    neg_scores = jnp.where(neg, sim_q, -jnp.inf)
+    i_pos = jnp.argmin(pos_scores)
+    i_neg = jnp.argmax(neg_scores)
+    z_bp = zd[i_pos]                                # d_pos
+    z_bn = zd[i_neg]                                # d_neg
+
+    sims_bp = zd @ z_bp / tau
+    sims_bn = zd @ z_bn / tau
+    loss_p = -(_masked_lse(sims_bp, pos) - jax.nn.logsumexp(sims_bp))
+    loss_n = -(_masked_lse(sims_bn, neg) - jax.nn.logsumexp(sims_bn))
+    return (jnp.where(any_pos, loss_p, 0.0)
+            + jnp.where(any_neg, loss_n, 0.0))
+
+
+def phase1_loss(z_q, z_d, y, tau, variant: str = "perpos"):
+    return qsim_loss(z_q, z_d, y, tau, variant)
+
+
+def phase2_loss(z_q, z_d, y, tau, lam):
+    """L2 = lam * L_supcon + (1 - lam) * L_polar (paper §5, lam=0.2)."""
+    return (lam * supcon_loss(z_d, y, tau)
+            + (1.0 - lam) * polar_loss(z_q, z_d, y, tau))

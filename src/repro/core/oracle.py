@@ -1,0 +1,135 @@
+"""Oracle LLM interfaces.
+
+* SimulatedOracle — planted ground-truth labels + optional flip noise +
+  a FLOPs cost model (the container has no GPT-4o / GPU; the paper's own
+  Table 2 reports cost in FLOPs, which we mirror). Counts invocations.
+* LMOracle — runs one of the assigned-architecture LMs as a judge: scores
+  a verbalized (query, document) pair by comparing yes/no token logits.
+  Used by the end-to-end LM example; slow on CPU, so sized down there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+# FLOPs cost model per document (~400 words, paper §6.2 Table 2):
+# oracle LLM >500P total / 10k docs -> ~50 TFLOPs per doc. We mirror the
+# paper's per-model numbers, normalized per document.
+ORACLE_FLOPS_PER_DOC = 500e15 / 10_000
+PROXY_LLM_3B_FLOPS_PER_DOC = 27e15 / 10_000
+PROXY_LLM_1B_FLOPS_PER_DOC = 10e15 / 10_000
+OUR_PROXY_FLOPS_PER_DOC = 2e12 / 10_000   # paper: 2T per 10k docs
+
+
+class CachedOracle:
+    """Memoizing wrapper: labels already purchased are never re-paid.
+    The pipeline samples training, calibration and ambiguous-band labels
+    independently; overlaps are common at high selectivity and should
+    cost nothing."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self._cache = {}
+
+    @property
+    def calls(self):
+        return self.inner.calls
+
+    @property
+    def queried(self):
+        return self.inner.queried
+
+    @property
+    def flops_per_doc(self):
+        return getattr(self.inner, "flops_per_doc", ORACLE_FLOPS_PER_DOC)
+
+    def label(self, indices):
+        indices = np.asarray(indices, dtype=np.int64)
+        missing = [int(i) for i in indices if int(i) not in self._cache]
+        if missing:
+            got = self.inner.label(np.asarray(missing, dtype=np.int64))
+            for i, v in zip(missing, got):
+                self._cache[i] = bool(v)
+        return np.array([self._cache[int(i)] for i in indices], dtype=bool)
+
+
+class SimulatedOracle:
+    """Ground-truth labeler with invocation accounting."""
+
+    def __init__(self, labels: np.ndarray, flip_noise: float = 0.0,
+                 seed: int = 0,
+                 flops_per_doc: float = ORACLE_FLOPS_PER_DOC):
+        self._labels = np.asarray(labels).astype(bool)
+        self._rng = np.random.default_rng(seed)
+        self.flip_noise = flip_noise
+        self.flops_per_doc = flops_per_doc
+        self.calls = 0
+        self.queried = set()
+
+    def label(self, indices: Sequence[int]) -> np.ndarray:
+        indices = np.asarray(indices, dtype=np.int64)
+        self.calls += len(indices)
+        self.queried.update(int(i) for i in indices)
+        out = self._labels[indices].copy()
+        if self.flip_noise > 0:
+            flips = self._rng.random(len(indices)) < self.flip_noise
+            out = out ^ flips
+        return out
+
+    @property
+    def total_flops(self) -> float:
+        return self.calls * self.flops_per_doc
+
+    def reset(self):
+        self.calls = 0
+        self.queried = set()
+
+
+@dataclasses.dataclass
+class LMOracleConfig:
+    yes_token: int = 1
+    no_token: int = 2
+    max_doc_tokens: int = 64
+
+
+class LMOracle:
+    """LM-as-judge oracle over tokenized documents.
+
+    verbalize(query_tokens, doc_tokens) builds the prompt; the label is
+    logit(yes) > logit(no) at the final position.
+    """
+
+    def __init__(self, model, params, query_tokens: np.ndarray,
+                 doc_tokens: np.ndarray, cfg: LMOracleConfig = LMOracleConfig()):
+        import jax
+        import jax.numpy as jnp
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.query_tokens = np.asarray(query_tokens)
+        self.doc_tokens = np.asarray(doc_tokens)
+        self.calls = 0
+
+        def judge(params, tokens):
+            logits, _ = model.forward(params, tokens)
+            last = logits[:, -1]
+            return last[:, cfg.yes_token] > last[:, cfg.no_token]
+
+        self._judge = jax.jit(judge)
+        self._jnp = jnp
+
+    def _prompt(self, doc_idx: int) -> np.ndarray:
+        doc = self.doc_tokens[doc_idx][: self.cfg.max_doc_tokens]
+        return np.concatenate([self.query_tokens, doc])
+
+    def label(self, indices: Sequence[int]) -> np.ndarray:
+        indices = np.asarray(indices, dtype=np.int64)
+        self.calls += len(indices)
+        prompts = [self._prompt(int(i)) for i in indices]
+        width = max(len(p) for p in prompts)
+        batch = np.zeros((len(prompts), width), np.int32)
+        for i, p in enumerate(prompts):
+            batch[i, -len(p):] = p  # left-pad
+        return np.asarray(self._judge(self.params, self._jnp.asarray(batch)))

@@ -1,0 +1,95 @@
+"""ScaleDocPipeline — the public API (deliverable a).
+
+  pipeline = ScaleDocPipeline(embeddings, proxy_cfg, cascade_cfg)
+  result = pipeline.query(e_q, oracle, accuracy_target=0.9)
+
+Orchestrates the full online phase for one ad-hoc semantic predicate:
+  1. sample + oracle-label a training subset (train_fraction)
+  2. two-phase contrastive proxy training (repro.core.trainer)
+  3. full-collection scoring (repro.core.scoring / Pallas kernels)
+  4. adaptive cascade (repro.core.cascade)
+and reports end-to-end cost accounting (oracle calls, FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.config.base import CascadeConfig, ProxyConfig, replace
+from repro.core import oracle as oracle_mod
+from repro.core.cascade import CascadeResult, run_cascade
+from repro.core.scoring import score_collection
+from repro.core.trainer import train_proxy
+
+
+@dataclasses.dataclass
+class QueryStats:
+    cascade: CascadeResult
+    oracle_calls_total: int
+    oracle_calls_train: int
+    proxy_flops: float
+    oracle_flops: float
+    total_flops: float
+    wall_seconds: float
+    scores: np.ndarray
+
+
+class ScaleDocPipeline:
+    def __init__(self, embeds: np.ndarray, proxy_cfg: ProxyConfig,
+                 cascade_cfg: CascadeConfig, use_kernel: bool = False):
+        self.embeds = np.asarray(embeds, np.float32)
+        self.proxy_cfg = replace(proxy_cfg, embed_dim=self.embeds.shape[1])
+        self.cascade_cfg = cascade_cfg
+        self.use_kernel = use_kernel
+
+    def query(self, e_q: np.ndarray, oracle, *,
+              accuracy_target: Optional[float] = None,
+              ground_truth: Optional[np.ndarray] = None,
+              seed: int = 0) -> QueryStats:
+        t0 = time.time()
+        ccfg = self.cascade_cfg
+        if accuracy_target is not None:
+            ccfg = replace(ccfg, accuracy_target=accuracy_target)
+        n = len(self.embeds)
+        rng = np.random.default_rng(seed)
+        from repro.core.oracle import CachedOracle
+        oracle = CachedOracle(oracle)   # never pay twice for one label
+
+        # 1. training sample + oracle labels
+        calls0 = oracle.calls
+        n_train = max(int(self.proxy_cfg.train_fraction * n), 16)
+        train_idx = rng.choice(n, size=n_train, replace=False)
+        train_labels = oracle.label(train_idx)
+        train_calls = oracle.calls - calls0
+
+        # 2. proxy training (two-phase contrastive)
+        res = train_proxy(jax.random.PRNGKey(seed), e_q,
+                          self.embeds[train_idx], train_labels,
+                          self.proxy_cfg)
+
+        # 3. full-collection scoring
+        scores = score_collection(res.params, e_q, self.embeds,
+                                  use_kernel=self.use_kernel)
+
+        # 4. adaptive cascade
+        cascade = run_cascade(scores, oracle, ccfg,
+                              ground_truth=ground_truth, rng=rng)
+
+        total_calls = oracle.calls - calls0
+        proxy_flops = n * oracle_mod.OUR_PROXY_FLOPS_PER_DOC
+        oracle_flops = total_calls * getattr(
+            oracle, "flops_per_doc", oracle_mod.ORACLE_FLOPS_PER_DOC)
+        return QueryStats(
+            cascade=cascade,
+            oracle_calls_total=total_calls,
+            oracle_calls_train=train_calls,
+            proxy_flops=proxy_flops,
+            oracle_flops=oracle_flops,
+            total_flops=proxy_flops + oracle_flops,
+            wall_seconds=time.time() - t0,
+            scores=scores,
+        )

@@ -1,0 +1,50 @@
+"""Full-collection proxy scoring — the online hot loop.
+
+For every ad-hoc query, ScaleDoc scores *all N* document embeddings with
+the freshly trained proxy: z_d = MLP(e_d); s = (1+cos(z_q, z_d))/2.
+
+On TPU this dispatches to the fused Pallas kernels
+(repro.kernels.mlp_encoder + repro.kernels.fused_scoring) so hidden
+activations never leave VMEM; the pure-jnp path below is the oracle and
+the CPU fallback. Batched in chunks so the working set stays bounded for
+collections of millions of documents.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoder import encoder_apply, l2_normalize
+
+
+def score_collection(params: Dict, e_q: jnp.ndarray, embeds: jnp.ndarray,
+                     chunk: int = 8192, use_kernel: bool = False
+                     ) -> np.ndarray:
+    """Scores for all docs. embeds: (N, D) -> (N,) float32 in [0, 1]."""
+    if use_kernel:
+        from repro.kernels.fused_scoring import ops as scoring_ops
+        return np.asarray(scoring_ops.score_collection(params, e_q, embeds))
+    z_q = l2_normalize(encoder_apply(params, e_q))
+
+    @jax.jit
+    def score_chunk(chunk_embeds):
+        z = encoder_apply(params, chunk_embeds)
+        cos = l2_normalize(z) @ z_q
+        return (1.0 + cos) * 0.5
+
+    n = embeds.shape[0]
+    outs = []
+    for start in range(0, n, chunk):
+        outs.append(np.asarray(score_chunk(embeds[start:start + chunk])))
+    return np.concatenate(outs).astype(np.float32)
+
+
+def direct_embedding_scores(e_q: jnp.ndarray, embeds: jnp.ndarray
+                            ) -> np.ndarray:
+    """Baseline: off-the-shelf embedding matching (paper §6.4 / Table 3) —
+    cosine between raw embeddings, no trained proxy."""
+    cos = l2_normalize(embeds) @ l2_normalize(e_q)
+    return np.asarray((1.0 + cos) * 0.5, dtype=np.float32)

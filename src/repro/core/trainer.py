@@ -1,0 +1,224 @@
+"""Two-phase contrastive training of the query-aware proxy (paper §3.2, §5).
+
+Given a small oracle-labeled sample of document embeddings, trains the
+lightweight encoder:
+  Phase 1: L_qsim only              -> semantic monotonicity
+  Phase 2: lam*L_supcon + (1-lam)*L_polar -> bipolarity
+
+Implementation details from paper §5:
+  * fallback-style rebalancing: if the labeled sample is heavily skewed,
+    augment the minority class with Gaussian-noised copies of its
+    embeddings;
+  * mini-batches contain the query embedding + documents; the projector
+    head exists only during training;
+  * losses are computed on projector outputs, scores on encoder outputs.
+
+The train step is jit-compiled once and reused across steps; data-parallel
+execution over the `data` mesh axis happens transparently when the inputs
+are sharded (pure jnp ops — pjit handles the rest).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import OptimizerConfig, ProxyConfig
+from repro.core import losses
+from repro.core.encoder import (decision_scores, encoder_apply, encoder_init,
+                                projector_apply)
+from repro.optimizer import adamw
+
+
+class ProxyTrainResult(NamedTuple):
+    params: Dict
+    phase1_losses: np.ndarray
+    phase2_losses: np.ndarray
+
+
+def rebalance(key, embeds: np.ndarray, labels: np.ndarray,
+              cfg: ProxyConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Fallback rebalancing: Gaussian-noise augmentation of the minority."""
+    labels = labels.astype(np.int32)
+    n = len(labels)
+    n_pos = int(labels.sum())
+    n_neg = n - n_pos
+    if n == 0 or min(n_pos, n_neg) >= cfg.rebalance_min_frac * n:
+        return embeds, labels
+    if n_pos == 0 or n_neg == 0:
+        # degenerate sample: nothing to mirror — caller handles
+        return embeds, labels
+    minority = 1 if n_pos < n_neg else 0
+    src = embeds[labels == minority]
+    need = int(cfg.rebalance_min_frac * n) - len(src)
+    if need <= 0:
+        return embeds, labels
+    rng = np.random.default_rng(np.asarray(key)[-1])
+    idx = rng.integers(0, len(src), size=need)
+    noise = rng.normal(0.0, cfg.rebalance_noise, size=(need, embeds.shape[1]))
+    aug = src[idx] + noise.astype(embeds.dtype)
+    embeds = np.concatenate([embeds, aug], axis=0)
+    labels = np.concatenate([labels, np.full(need, minority, labels.dtype)])
+    return embeds, labels
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "phase", "opt_cfg"))
+def _train_step(params, opt_state, key, e_q, e_batch, y_batch, *,
+                cfg: ProxyConfig, phase: int, opt_cfg: OptimizerConfig):
+    if cfg.aug_noise > 0:
+        e_batch = e_batch + cfg.aug_noise * jax.random.normal(
+            key, e_batch.shape, e_batch.dtype)
+
+    def loss_fn(p):
+        z_q = projector_apply(p, encoder_apply(p, e_q))
+        z_d = projector_apply(p, encoder_apply(p, e_batch))
+        if phase == 1:
+            return losses.phase1_loss(z_q, z_d, y_batch, cfg.temperature,
+                                      cfg.qsim_variant)
+        return losses.phase2_loss(z_q, z_d, y_batch, cfg.temperature,
+                                  cfg.lambda_supcon)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt_state, _ = adamw.apply_updates(opt_cfg, params, grads,
+                                               opt_state)
+    return params, opt_state, loss
+
+
+def train_proxy(key, e_q: jnp.ndarray, embeds: jnp.ndarray,
+                labels: jnp.ndarray, cfg: ProxyConfig) -> ProxyTrainResult:
+    """Train the proxy on an oracle-labeled sample.
+
+    e_q: (D,) query embedding; embeds: (n, D); labels: (n,) {0,1}.
+    """
+    kinit, kbal, kbatch = jax.random.split(key, 3)
+    if cfg.rebalance:
+        embeds_np, labels_np = rebalance(kbal, np.asarray(embeds),
+                                         np.asarray(labels), cfg)
+    else:
+        embeds_np, labels_np = np.asarray(embeds), np.asarray(labels)
+    embeds = jnp.asarray(embeds_np)
+    labels = jnp.asarray(labels_np.astype(np.float32))
+    n = embeds.shape[0]
+
+    params = encoder_init(kinit, cfg)
+    opt_cfg = OptimizerConfig(lr=cfg.lr, warmup_steps=5,
+                              total_steps=cfg.phase1_steps + cfg.phase2_steps,
+                              schedule="cosine",
+                              weight_decay=cfg.weight_decay,
+                              grad_clip=1.0)
+    opt_state = adamw.init(opt_cfg, params)
+    bs = min(cfg.batch_size, n)
+
+    rng = np.random.default_rng(int(jax.random.randint(
+        kbatch, (), 0, 2**31 - 1)))
+
+    def batches(steps):
+        for _ in range(steps):
+            idx = rng.choice(n, size=bs, replace=(bs > n))
+            yield jnp.asarray(idx)
+
+    key = kbatch
+    p1_losses, p2_losses = [], []
+    for idx in batches(cfg.phase1_steps):
+        key, kstep = jax.random.split(key)
+        params, opt_state, loss = _train_step(
+            params, opt_state, kstep, e_q, embeds[idx], labels[idx],
+            cfg=cfg, phase=1, opt_cfg=opt_cfg)
+        p1_losses.append(float(loss))
+    for idx in batches(cfg.phase2_steps):
+        key, kstep = jax.random.split(key)
+        params, opt_state, loss = _train_step(
+            params, opt_state, kstep, e_q, embeds[idx], labels[idx],
+            cfg=cfg, phase=2, opt_cfg=opt_cfg)
+        p2_losses.append(float(loss))
+
+    return ProxyTrainResult(params, np.asarray(p1_losses),
+                            np.asarray(p2_losses))
+
+
+def train_proxy_variant(key, e_q, embeds, labels, cfg: ProxyConfig,
+                        variant: str) -> Dict:
+    """Ablation variants for the paper's Fig. 9/11: 'qsim' (phase 1 only),
+    'qsim+supcon', 'qsim+polar', 'full', or 'mlp' (binary classifier)."""
+    if variant == "full":
+        return train_proxy(key, e_q, embeds, labels, cfg).params
+    if variant == "mlp":
+        return _train_mlp_classifier(key, embeds, labels, cfg)
+
+    import dataclasses as _dc
+    kinit, kbatch = jax.random.split(key)
+    params = encoder_init(kinit, cfg)
+    opt_cfg = OptimizerConfig(lr=cfg.lr, warmup_steps=5,
+                              total_steps=cfg.phase1_steps + cfg.phase2_steps,
+                              schedule="cosine",
+                              weight_decay=cfg.weight_decay)
+    opt_state = adamw.init(opt_cfg, params)
+    labels_f = jnp.asarray(np.asarray(labels), jnp.float32)
+    embeds = jnp.asarray(embeds)
+    n = embeds.shape[0]
+    bs = min(cfg.batch_size, n)
+    rng = np.random.default_rng(0)
+
+    lam_map = {"qsim": None, "qsim+supcon": 1.0, "qsim+polar": 0.0}
+    lam = lam_map[variant]
+    kloop = kbatch
+    for step in range(cfg.phase1_steps + cfg.phase2_steps):
+        idx = jnp.asarray(rng.choice(n, size=bs, replace=(bs > n)))
+        phase = 1 if (step < cfg.phase1_steps or lam is None) else 2
+        cfg_used = cfg if lam is None else _dc.replace(cfg, lambda_supcon=lam)
+        kloop, kstep = jax.random.split(kloop)
+        params, opt_state, _ = _train_step(
+            params, opt_state, kstep, e_q, embeds[idx], labels_f[idx],
+            cfg=cfg_used, phase=phase, opt_cfg=opt_cfg)
+    return params
+
+
+def _train_mlp_classifier(key, embeds, labels, cfg: ProxyConfig) -> Dict:
+    """Baseline: plain MLP binary classifier on embeddings (paper Fig. 9
+    'MLP'). Returns params usable with mlp_classifier_scores."""
+    from repro.models.common import dense_init
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"w1": dense_init(k1, cfg.embed_dim, (cfg.hidden_dim,),
+                               jnp.float32),
+              "b1": jnp.zeros((cfg.hidden_dim,)),
+              "w2": dense_init(k2, cfg.hidden_dim, (cfg.hidden_dim,),
+                               jnp.float32),
+              "b2": jnp.zeros((cfg.hidden_dim,)),
+              "w3": dense_init(k3, cfg.hidden_dim, (1,), jnp.float32),
+              "b3": jnp.zeros((1,))}
+    opt_cfg = OptimizerConfig(lr=cfg.lr, warmup_steps=5,
+                              total_steps=cfg.phase1_steps + cfg.phase2_steps,
+                              weight_decay=0.0)
+    opt_state = adamw.init(opt_cfg, params)
+    embeds = jnp.asarray(embeds)
+    y = jnp.asarray(np.asarray(labels), jnp.float32)
+    n = embeds.shape[0]
+    bs = min(cfg.batch_size, n)
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def step_fn(params, opt_state, xb, yb):
+        def loss_fn(p):
+            h = jax.nn.gelu(xb @ p["w1"] + p["b1"])
+            h = jax.nn.gelu(h @ p["w2"] + p["b2"])
+            logit = (h @ p["w3"] + p["b3"])[:, 0]
+            return jnp.mean(jnp.maximum(logit, 0) - logit * yb
+                            + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = adamw.apply_updates(opt_cfg, params, grads,
+                                                   opt_state)
+        return params, opt_state, loss
+
+    for _ in range(cfg.phase1_steps + cfg.phase2_steps):
+        idx = jnp.asarray(rng.choice(n, size=bs, replace=(bs > n)))
+        params, opt_state, _ = step_fn(params, opt_state, embeds[idx], y[idx])
+    return params
+
+
+def mlp_classifier_scores(params, embeds) -> jnp.ndarray:
+    h = jax.nn.gelu(embeds @ params["w1"] + params["b1"])
+    h = jax.nn.gelu(h @ params["w2"] + params["b2"])
+    return jax.nn.sigmoid((h @ params["w3"] + params["b3"])[:, 0])

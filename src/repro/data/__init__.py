@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    Corpus,
+    Query,
+    make_corpus,
+    make_query,
+    make_workload,
+)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused contrastive objectives for one mini-batch.
+
+Computes all three ScaleDoc losses (L_qsim / L_supcon / L_polar) from the
+projected latents in one VMEM-resident pass: the (n, n) similarity matrix
+is built once on the MXU and every masked logsumexp reduction happens
+before anything is written back to HBM. Batches are small (n <= 512,
+p <= 256), so a single program handles the batch:
+
+  VMEM: zd (n, p) + sims (n, n) + masks ~= 512*256*4 + 512*512*4 < 2 MiB.
+
+Output: (4,) f32 = [qsim, supcon, polar, phase2 = lam*supcon+(1-lam)*polar].
+
+(Training still differentiates the pure-jnp losses; the kernel is the
+fast evaluation/monitoring path and the oracle-checked TPU artifact.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _lse(vals, mask):
+    masked = jnp.where(mask, vals, NEG)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    safe = jnp.where(m > NEG / 2, m, 0.0)
+    return (jnp.log(jnp.sum(jnp.where(mask, jnp.exp(masked - safe), 0.0),
+                            axis=-1)) + safe[..., 0])
+
+
+def _contrastive_kernel(zq_ref, zd_ref, y_ref, scalars_ref, out_ref):
+    tau = scalars_ref[0]
+    lam = scalars_ref[1]
+    zq = zq_ref[...]
+    zd = zd_ref[...]
+    y = y_ref[...]
+    n = zd.shape[0]
+
+    # L2 normalize in-register
+    zqn = zq / jnp.sqrt(jnp.maximum(jnp.sum(zq * zq), 1e-16))
+    zdn = zd / jnp.sqrt(jnp.maximum(jnp.sum(zd * zd, axis=-1,
+                                            keepdims=True), 1e-16))
+    pos = y > 0.5
+    neg = ~pos
+    any_pos = jnp.any(pos)
+    any_neg = jnp.any(neg)
+
+    # ---- qsim (per-positive InfoNCE, query anchor) ----
+    sims_q = (zdn @ zqn) / tau                     # (n,)
+    lse_all = _lse(sims_q[None, :], jnp.ones((1, n), bool))[0]
+    per = -(sims_q - lse_all)
+    qsim = jnp.where(any_pos,
+                     jnp.sum(jnp.where(pos, per, 0.0))
+                     / jnp.maximum(jnp.sum(pos), 1), 0.0)
+
+    # ---- pairwise sims (MXU) ----
+    sims = jnp.dot(zdn, zdn.T,
+                   preferred_element_type=jnp.float32) / tau   # (n, n)
+    ids = jax.lax.iota(jnp.int32, n)
+    eye = ids[:, None] == ids[None, :]
+    same = (pos[:, None] == pos[None, :])
+
+    # ---- supcon ----
+    u_mask = same & ~eye
+    a_mask = ~eye
+    u_count = jnp.sum(u_mask, axis=1)
+    lse_u = _lse(sims, u_mask)
+    lse_a = _lse(sims, a_mask)
+    per_anchor = -(lse_u - lse_a) / jnp.maximum(u_count, 1)
+    valid = u_count > 0
+    supcon = (jnp.sum(jnp.where(valid, per_anchor, 0.0))
+              / jnp.maximum(jnp.sum(valid), 1))
+
+    # ---- polar (bellwether anchors) ----
+    pos_scores = jnp.where(pos, sims_q, jnp.inf)
+    neg_scores = jnp.where(neg, sims_q, -jnp.inf)
+    i_pos = jnp.argmin(pos_scores)
+    i_neg = jnp.argmax(neg_scores)
+    sims_bp = sims[i_pos]                           # row against d_pos
+    sims_bn = sims[i_neg]
+    ones = jnp.ones((n,), bool)
+    loss_p = -(_lse(sims_bp[None], pos[None])[0]
+               - _lse(sims_bp[None], ones[None])[0])
+    loss_n = -(_lse(sims_bn[None], neg[None])[0]
+               - _lse(sims_bn[None], ones[None])[0])
+    polar = (jnp.where(any_pos, loss_p, 0.0)
+             + jnp.where(any_neg, loss_n, 0.0))
+
+    out_ref[0] = qsim
+    out_ref[1] = supcon
+    out_ref[2] = polar
+    out_ref[3] = lam * supcon + (1.0 - lam) * polar
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def contrastive_losses(z_q: jnp.ndarray, z_d: jnp.ndarray, y: jnp.ndarray,
+                       tau: float, lam: float, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """z_q: (p,); z_d: (n, p); y: (n,) float {0,1}.
+    Returns (4,) f32 [qsim, supcon, polar, phase2]."""
+    n, p = z_d.shape
+    scalars = jnp.asarray([tau, lam], jnp.float32)
+    return pl.pallas_call(
+        _contrastive_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((n, p), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+        interpret=interpret,
+    )(z_q.astype(jnp.float32), z_d.astype(jnp.float32),
+      y.astype(jnp.float32), scalars)

@@ -1,0 +1,16 @@
+"""Dispatch wrapper: Pallas on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.contrastive import ref
+from repro.kernels.contrastive.contrastive import contrastive_losses
+
+
+def losses(z_q, z_d, y, tau: float, lam: float, *, force_ref: bool = False,
+           interpret: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if (on_tpu or interpret) and not force_ref:
+        return contrastive_losses(z_q, z_d, y, tau, lam,
+                                  interpret=interpret)
+    return ref.ref_losses(z_q, z_d, y, tau, lam)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: delegates to repro.core.losses (the training path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import losses
+
+
+def ref_losses(z_q, z_d, y, tau, lam):
+    qsim = losses.qsim_loss(z_q, z_d, y, tau)
+    supcon = losses.supcon_loss(z_d, y, tau)
+    polar = losses.polar_loss(z_q, z_d, y, tau)
+    return jnp.stack([qsim, supcon, polar,
+                      lam * supcon + (1 - lam) * polar])

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: blocked online-softmax attention (forward).
+
+The offline representation phase runs prefill over every document — the
+single largest FLOP consumer in ScaleDoc's pipeline — and pure-XLA blocked
+attention spills every (q_block, kv_block) score tile to HBM (see the
+roofline baselines in EXPERIMENTS.md). This kernel keeps the running
+max/sum rescale and the score tile in VMEM, streaming K/V blocks HBM→VMEM.
+
+TPU adaptation notes (vs the CUDA FlashAttention it reproduces):
+  * tiles are (Q_BLOCK, KV_BLOCK) = (128, 128) multiples of the MXU's
+    128x128 systolic contraction and the (8, 128) VPU lane layout;
+  * no warp shuffles: the online-softmax running stats (m, l) live in
+    VREGs across the fori_loop over KV blocks;
+  * layout is (b*h, s, hd) so each program owns one (batch, head) row
+    of query blocks — grid (bh, nq).
+
+Forward only (decode/prefill serving); training uses the custom-VJP
+recompute path in repro.models.attention (same math, same oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+Q_BLOCK = 128
+KV_BLOCK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, *, scale, causal, window,
+                  q_offset, kv_len, kv_block):
+    # q_ref: (Q_BLOCK, hd); k_ref/v_ref: (kv_len_padded, hd)
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    qb, hd = q.shape
+    nk = k_ref.shape[0] // kv_block
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(j * kv_block, kv_block), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(j * kv_block, kv_block), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_offset + qi * qb + jax.lax.iota(jnp.int32, qb)
+        kpos = j * kv_block + jax.lax.iota(jnp.int32, kv_block)
+        valid = kpos[None, :] < kv_len
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        if window > 0:
+            valid = valid & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((qb,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((qb,), jnp.float32)
+    a0 = jnp.zeros((qb, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    out_ref[...] = (acc / jnp.maximum(l[:, None], 1e-30)).astype(
+        out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "q_offset", "q_block", "kv_block",
+    "interpret"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        scale: float, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, q_block: int = Q_BLOCK,
+                        kv_block: int = KV_BLOCK,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (b, sq, h, hd); k, v: (b, skv, h, hd) -> (b, sq, h, hd)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    pq = (-sq) % q_block
+    pk = (-skv) % kv_block
+
+    def to_bh(x, pad):
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+
+    qb = to_bh(q, pq)
+    kb = to_bh(k, pk)
+    vb = to_bh(v, pk)
+    nq = (sq + pq) // q_block
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, q_offset=q_offset,
+                               kv_len=skv, kv_block=kv_block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq),
+        in_specs=[
+            pl.BlockSpec((None, q_block, hd), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((None, skv + pk, hd), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((None, skv + pk, hd), lambda bh, i: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_block, hd), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq + pq, hd), q.dtype),
+        interpret=interpret,
+    )(qb, kb, vb)
+    out = out.reshape(b, h, sq + pq, hd)[:, :, :sq]
+    return out.transpose(0, 2, 1, 3)

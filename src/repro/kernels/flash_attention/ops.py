@@ -1,0 +1,18 @@
+"""Dispatch wrapper: Pallas flash on TPU, XLA blocked elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import attention_blocked
+
+
+def attention(q, k, v, *, scale, causal=True, window=0, q_offset=0,
+              force_ref: bool = False, interpret: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if (on_tpu or interpret) and not force_ref:
+        from repro.kernels.flash_attention.flash import flash_attention_fwd
+        return flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                                   window=window, q_offset=q_offset,
+                                   interpret=interpret)
+    return attention_blocked(q, k, v, scale, causal=causal, window=window,
+                             q_offset=q_offset)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash attention kernel: masked einsum softmax."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attention_einsum
+
+
+def ref_attention(q, k, v, *, scale, causal=True, window=0, q_offset=0):
+    sq, skv = q.shape[1], k.shape[1]
+    iq = jnp.arange(sq) + q_offset
+    ik = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (ik[None, :] <= iq[:, None])
+    if window > 0:
+        mask = mask & (ik[None, :] > iq[:, None] - window)
+    return attention_einsum(q, k, v, mask, scale)

@@ -1,0 +1,43 @@
+"""jit'd dispatch wrapper for the fused scoring kernel.
+
+On TPU runs the Pallas kernel; elsewhere (or when ``force_ref``) falls
+back to the pure-jnp oracle (numerically identical, used by tests). The
+proxy params come straight from repro.core.encoder's param tree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoder import encoder_apply, l2_normalize
+from repro.kernels.fused_scoring import ref
+from repro.kernels.fused_scoring.scoring import fused_scores
+
+
+def _unpack(params):
+    ls = params["layers"]
+    assert len(ls) == 3, "fused kernel is specialized for 3-layer proxies"
+    return (ls["l0"]["w"], ls["l0"]["b"], ls["l1"]["w"], ls["l1"]["b"],
+            ls["l2"]["w"], ls["l2"]["b"])
+
+
+def score_collection(params, e_q, embeds, *, chunk: int = 65536,
+                     force_ref: bool = False,
+                     interpret: bool = False) -> np.ndarray:
+    """(N, D) document embeddings -> (N,) scores via the fused kernel."""
+    w1, b1, w2, b2, w3, b3 = _unpack(params)
+    zq = l2_normalize(encoder_apply(params, e_q))
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu or interpret
+    outs = []
+    n = embeds.shape[0]
+    for start in range(0, n, chunk):
+        tile = jnp.asarray(embeds[start:start + chunk])
+        if use_kernel and not force_ref:
+            outs.append(np.asarray(fused_scores(
+                tile, w1, b1, w2, b2, w3, b3, zq, interpret=interpret)))
+        else:
+            outs.append(np.asarray(ref.ref_scores(
+                tile, w1, b1, w2, b2, w3, b3, zq)))
+    return np.concatenate(outs).astype(np.float32)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused scoring kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_scores(docs, w1, b1, w2, b2, w3, b3, zq_normalized):
+    h = jax.nn.gelu(docs.astype(jnp.float32) @ w1.astype(jnp.float32) + b1)
+    h = jax.nn.gelu(h @ w2.astype(jnp.float32) + b2)
+    z = h @ w3.astype(jnp.float32) + b3
+    z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
+    return 0.5 * (1.0 + z @ zq_normalized)

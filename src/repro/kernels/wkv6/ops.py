@@ -1,0 +1,30 @@
+"""Dispatch wrapper for WKV6: Pallas chunked kernel on TPU, exact
+sequential reference elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6 import ref
+from repro.kernels.wkv6.wkv6 import wkv6_chunked
+
+
+def wkv6(r, k, v, lw, u, *, chunk: int = 128, force_ref: bool = False,
+         interpret: bool = False):
+    """r,k,v,lw: (b, s, H, K); u: (H, K) -> y (b, s, H, K) f32."""
+    on_tpu = jax.default_backend() == "tpu"
+    if not ((on_tpu or interpret) and not force_ref):
+        return ref.ref_wkv6(r, k, v, lw, u)
+    b, s, H, K = r.shape
+    Q = min(chunk, s)
+    while s % Q != 0:
+        Q -= 1
+    nc = s // Q
+
+    def split(x):
+        return x.reshape(b, nc, Q, H, K)
+
+    rs, ks, vs, lws = map(split, (r, k, v, lw))
+    cum = jnp.cumsum(lws, axis=2)
+    y = wkv6_chunked(rs, ks, vs, cum, lws, u, interpret=interpret)
+    return y.reshape(b, s, H, K)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for WKV6: the sequential recurrence (exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_wkv6(r, k, v, lw, u):
+    """Sequential WKV6. r,k,v,lw: (b, s, H, K) f32; u: (H, K).
+    Returns y (b, s, H, K):
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T;  w = exp(lw)
+        y_t = r_t^T S_{t-1} + (r_t . u . k_t) v_t
+    """
+    b, s, H, K = r.shape
+    w = jnp.exp(lw)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                      # (b, H, K)
+        y = (jnp.einsum("bhk,bhkv->bhv", rt, S)
+             + jnp.einsum("bhk,hk,bhk->bh", rt, u, kt)[..., None] * vt)
+        S_new = wt[..., None] * S + kt[..., None] * vt[:, :, None, :]
+        return S_new, y
+
+    S0 = jnp.zeros((b, H, K, K), jnp.float32)
+    _, ys = jax.lax.scan(step, S0,
+                         (r.swapaxes(0, 1), k.swapaxes(0, 1),
+                          v.swapaxes(0, 1), w.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: WKV6 (RWKV6 "Finch") intra-chunk recurrence.
+
+The community runs RWKV6 through a sequential CUDA kernel (one thread
+block per (batch, head), stepping token by token). That shape is wrong
+for a TPU; we instead use the *chunked* linear-attention formulation —
+but its intra-chunk matrix
+
+    A[t, j] = sum_k r[t,k] * exp(cum[t-1,k] - cum[j,k]) * k[j,k],  j < t
+
+is numerically unfactorable in f32 (exp(-cum_j) overflows under strong
+decay), so the pure-XLA path must clamp the per-step decay. The kernel
+removes the compromise: the (Q, Q, KS) pairwise-decay slab lives in VMEM
+and is contracted slab-by-slab over the head dim — every exponent is of
+the *difference* (<= 0: no overflow), nothing spills to HBM.
+
+Per program (grid = (b, nc, h)): tiles r, k, v, cum, lw of (Q, K), bonus
+u (K,). Emits everything the (cheap) inter-chunk scan outside needs:
+
+    y_intra (Q, K)  = A @ v + (r.u.k) v        intra-chunk output
+    s_inj   (K, K)  = (k * exp(cum_Q - cum))^T @ v   state injection
+    a_end   (K,)    = exp(cum_Q)               chunk decay of the state
+    r_dec   (Q, K)  = r * exp(cum_{t-1})       inter-chunk read weights
+
+VMEM @ Q=128, K=64, slab=16: 5 tiles * 32 KiB + A 64 KiB + slab buffer
+(128*128*16*4 = 1 MiB) ~= 1.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_SLAB = 16
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, cum_ref, lw_ref, u_ref,
+                 y_ref, sinj_ref, aend_ref, rdec_ref, *, k_slab):
+    r = r_ref[...].astype(jnp.float32)          # (Q, K)
+    kk = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    cum = cum_ref[...].astype(jnp.float32)
+    lw = lw_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)          # (K,)
+    Q, K = r.shape
+    cum_tm1 = cum - lw
+
+    tri = (jax.lax.iota(jnp.int32, Q)[:, None]
+           > jax.lax.iota(jnp.int32, Q)[None, :])   # strict lower
+
+    def slab(i, A):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * k_slab, k_slab,
+                                                    axis=1)
+        ct, cj, rs, ks = sl(cum_tm1), sl(cum), sl(r), sl(kk)
+        seg = ct[:, None, :] - cj[None, :, :]      # (Q, Q, KS) <= 0 on tri
+        dec = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)
+        contrib = jnp.einsum("qs,qjs,js->qj", rs, dec, ks)
+        return A + contrib
+
+    A = jax.lax.fori_loop(0, K // k_slab, slab,
+                          jnp.zeros((Q, Q), jnp.float32))
+    diag = jnp.sum(r * u[None, :] * kk, axis=-1)     # (Q,)
+    y = jnp.dot(A, v, preferred_element_type=jnp.float32) \
+        + diag[:, None] * v
+    dec_end = jnp.exp(cum[-1][None, :] - cum)        # (Q, K)
+    s_inj = jnp.dot((kk * dec_end).T, v,
+                    preferred_element_type=jnp.float32)   # (K, K)
+    y_ref[...] = y
+    sinj_ref[...] = s_inj
+    aend_ref[...] = jnp.exp(cum[-1])
+    rdec_ref[...] = r * jnp.exp(cum_tm1)
+
+
+@functools.partial(jax.jit, static_argnames=("k_slab", "interpret"))
+def wkv6_intra_chunk(r, k, v, cum, lw, u, *, k_slab: int = K_SLAB,
+                     interpret: bool = False):
+    """All inputs (b, nc, Q, H, K) f32 (cum = within-chunk cumsum of
+    log-decay); u: (H, K). Returns (y_intra, s_inj, a_end, r_dec) with
+    shapes ((b,nc,Q,H,K), (b,nc,H,K,K), (b,nc,H,K), (b,nc,Q,H,K))."""
+    b, nc, Q, H, K = r.shape
+    ks = min(k_slab, K)
+
+    def to_grid(x):  # (b, nc, Q, H, K) -> (b*nc*H, Q, K)
+        return (x.transpose(0, 1, 3, 2, 4)
+                .reshape(b * nc * H, Q, K).astype(jnp.float32))
+
+    rg, kg, vg, cg, lg = map(to_grid, (r, k, v, cum, lw))
+    ug = jnp.broadcast_to(u[None, None], (b, nc, H, K)).reshape(
+        b * nc * H, K).astype(jnp.float32)
+
+    kernel = functools.partial(_wkv6_kernel, k_slab=ks)
+    y, sinj, aend, rdec = pl.pallas_call(
+        kernel,
+        grid=(b * nc * H,),
+        in_specs=[
+            pl.BlockSpec((None, Q, K), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, Q, K), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, Q, K), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, Q, K), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, Q, K), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, K), lambda g: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, Q, K), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, K, K), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, K), lambda g: (g, 0)),
+            pl.BlockSpec((None, Q, K), lambda g: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * nc * H, Q, K), jnp.float32),
+            jax.ShapeDtypeStruct((b * nc * H, K, K), jnp.float32),
+            jax.ShapeDtypeStruct((b * nc * H, K), jnp.float32),
+            jax.ShapeDtypeStruct((b * nc * H, Q, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rg, kg, vg, cg, lg, ug)
+
+    def back(x, extra):  # (b*nc*H, ...) -> (b, nc, ..., H, ...)
+        return x.reshape((b, nc, H) + extra)
+
+    y = back(y, (Q, K)).transpose(0, 1, 3, 2, 4)
+    rdec = back(rdec, (Q, K)).transpose(0, 1, 3, 2, 4)
+    sinj = back(sinj, (K, K))
+    aend = back(aend, (K,))
+    return y, sinj, aend, rdec
+
+
+def wkv6_chunked(r, k, v, cum, lw, u, *, interpret: bool = False):
+    """Full WKV6: Pallas intra-chunk + lax.scan inter-chunk combine.
+    Inputs (b, nc, Q, H, K); returns y (b, nc, Q, H, K) f32."""
+    y_intra, s_inj, a_end, r_dec = wkv6_intra_chunk(
+        r, k, v, cum, lw, u, interpret=interpret)
+    b, nc, Q, H, K = r.shape
+
+    def body(S, inp):
+        yc, sc, ac, rc = inp
+        y_int = jnp.einsum("bqhk,bhkv->bqhv", rc, S)
+        S_new = ac[..., None] * S + sc
+        return S_new, yc + y_int
+
+    S0 = jnp.zeros((b, H, K, K), jnp.float32)
+    _, ys = jax.lax.scan(
+        body, S0,
+        (y_intra.transpose(1, 0, 2, 3, 4), s_inj.transpose(1, 0, 2, 3, 4),
+         a_end.transpose(1, 0, 2, 3), r_dec.transpose(1, 0, 2, 3, 4)))
+    return ys.transpose(1, 0, 2, 3, 4)

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run (deliverable e): lower + compile every
+# (architecture x input shape) cell against the production meshes
+# (16x16 single pod, 2x16x16 multi-pod), print memory/cost analysis, and
+# record the trip-count-corrected roofline terms (deliverable g inputs).
+#
+# The XLA_FLAGS line above MUST run before any jax import — jax locks the
+# device count on first init. Do not set this flag anywhere else (smoke
+# tests and benches must see 1 device).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.config import SHAPES_BY_NAME, get_arch, list_archs  # noqa: E402
+from repro.configs.shapes import arch_cells, skip_reason  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_plan, needs_fsdp  # noqa: E402
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             causal_skip: bool = False, rule_overrides=None,
+             moe_dispatch: str = "onehot", pad_heads: int = 0,
+             last_logit: bool = False) -> dict:
+    cfg = get_arch(arch)
+    if pad_heads:
+        import dataclasses as _dc
+        # TP alignment: zero-padded attention heads (mathematically
+        # identical outputs; +pad/nq attention params)
+        up = lambda n: ((n + pad_heads - 1) // pad_heads) * pad_heads
+        cfg = _dc.replace(cfg, num_heads=up(cfg.num_heads),
+                          num_kv_heads=up(cfg.num_kv_heads))
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    reason = skip_reason(arch, shape)
+    if reason is not None:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    plan = make_plan(cfg, shape, mesh, rule_overrides=rule_overrides,
+                     causal_skip=causal_skip, moe_dispatch=moe_dispatch,
+                     last_logit=last_logit)
+
+    with mesh:
+        lowered = jax.jit(plan.step_fn,
+                          in_shardings=plan.arg_shardings,
+                          out_shardings=plan.out_shardings).lower(
+                              *plan.arg_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    rep = hlo_analysis.analyze_hlo_text(txt)
+
+    # roofline terms (totals across chips / aggregate peaks)
+    flops_total = rep.flops * chips
+    bytes_total = rep.bytes * chips
+    coll_total = rep.collective_bytes * chips
+    t_compute = flops_total / (chips * PEAK_FLOPS)
+    t_memory = bytes_total / (chips * HBM_BW)
+    t_coll = coll_total / (chips * ICI_BW)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "kind": shape.kind,
+        "chips": chips,
+        "fsdp": needs_fsdp(cfg),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes_per_device": getattr(
+                mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(
+                mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "xla_cost_analysis_flops_per_device": cost.get("flops"),
+        "analyzer": {
+            "flops_per_device": rep.flops,
+            "bytes_per_device": rep.bytes,
+            "collective_bytes_per_device": rep.collective_bytes,
+            "transcendental_per_device": rep.transcendental,
+            "unknown_trip_whiles": rep.unknown_trip_whiles,
+        },
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": max(
+                [("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)], key=lambda kv: kv[1])[0],
+        },
+        "sharding_fallbacks": plan.ruleset.fallback_report(),
+        "timings": {"lower_s": t_lower, "compile_s": t_compile},
+        "hlo_text_bytes": len(txt),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="input shape name (default: all four)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cached cells")
+    ap.add_argument("--causal-skip", action="store_true",
+                    help="static triangular KV extents in blocked attention "
+                         "(perf-iteration variant)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output file (perf variants)")
+    ap.add_argument("--moe-dispatch", default="onehot",
+                    choices=["onehot", "sort"])
+    ap.add_argument("--dp-over-model", action="store_true",
+                    help="small-arch mode: fold the model axis into data "
+                         "parallelism (batch over data+model)")
+    ap.add_argument("--last-logit", action="store_true",
+                    help="prefill computes logits only at the last position")
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="pad head counts up to a multiple of N "
+                         "(TP alignment for awkward head counts)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="disable ZeRO/FSDP weight sharding (pure TP): "
+                         "correct for <=15B params on 256 chips")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES_BY_NAME)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                tag = f"_{args.tag}" if args.tag else ""
+                fn = outdir / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+                if fn.exists() and not args.force:
+                    print(f"[cached] {fn}")
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ...",
+                      flush=True)
+                overrides = None
+                if args.dp_over_model:
+                    overrides = {"batch": ("pod", "data", "model"),
+                                 "heads": None, "kv_heads": None,
+                                 "mlp": None, "vocab": None,
+                                 "act_vocab": None, "qkv_out": None}
+                if args.no_fsdp:
+                    overrides = dict(overrides or {})
+                    overrides.update({"embed": None, "fsdp_embed": None})
+                try:
+                    res = run_cell(arch, shape_name, multi,
+                                   causal_skip=args.causal_skip,
+                                   rule_overrides=overrides,
+                                   moe_dispatch=args.moe_dispatch,
+                                   pad_heads=args.pad_heads,
+                                   last_logit=args.last_logit)
+                except Exception as e:  # record the failure — it's a bug
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                fn.write_text(json.dumps(res, indent=2, default=str))
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" tc={r['t_compute_s']:.3e}"
+                             f" tm={r['t_memory_s']:.3e}"
+                             f" tx={r['t_collective_s']:.3e}"
+                             f" compile={res['timings']['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = " " + res["error"][:160]
+                print(f"  -> {status}{extra}", flush=True)
+    print(f"done ({failures} failures)")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

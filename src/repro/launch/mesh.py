@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — jax locks the device count on first use, and
+only dryrun.py sets the 512-host-device XLA flag.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.config.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices the test process has."""
+    return jax.make_mesh((data, model), ("data", "model"))

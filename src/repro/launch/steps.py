@@ -1,0 +1,286 @@
+"""Step-function + sharding assembly shared by dryrun/train/serve.
+
+Builds, for an (arch, shape, mesh) cell:
+  * the step function (train_step / prefill_step / decode_step)
+  * abstract input/state ShapeDtypeStructs
+  * NamedShardings resolved through the logical-axis rule engine
+    (with FSDP weight sharding for the multi-billion-parameter archs,
+    and KV-sequence sharding for the 500k-context decode cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import InputShape, ModelConfig, OptimizerConfig
+from repro.models import build_model, input_axes, input_specs
+from repro.optimizer import adamw
+from repro.sharding.rules import DEFAULT_RULES, RuleSet
+
+# archs whose weights + optimizer state need ZeRO/FSDP sharding over `data`
+FSDP_PARAM_THRESHOLD = 3e9
+
+
+def needs_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() > FSDP_PARAM_THRESHOLD
+
+
+def rules_for(cfg: ModelConfig, shape: InputShape, mesh,
+              overrides: Optional[Dict] = None) -> RuleSet:
+    rules = dict(DEFAULT_RULES)
+    if needs_fsdp(cfg):
+        rules["embed"] = "data"       # FSDP: weight embed dims over data
+        rules["fsdp_embed"] = "data"
+        rules["expert_mlp"] = None
+    if shape.kind == "decode":
+        kv_axes = []
+        if shape.global_batch < mesh.shape.get("data", 1):
+            # long-context decode: batch can't fill the data axis — shard
+            # the KV cache sequence dim instead (flash-decoding layout)
+            kv_axes.append("data")
+        if cfg.num_kv_heads % mesh.shape.get("model", 1) != 0:
+            # KV heads can't split the model axis — spread the cache over
+            # sequence instead of replicating gigabytes per device
+            kv_axes.append("model")
+        if kv_axes:
+            rules["kv_seq"] = tuple(kv_axes)
+    if overrides:
+        rules.update(overrides)
+    return RuleSet(mesh, rules)
+
+
+def _axes_is_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def shardings_for_tree(ruleset: RuleSet, axes_tree, sds_tree):
+    def one(axes, sds):
+        return ruleset.sharding(axes, sds.shape)
+    return jax.tree.map(one, axes_tree, sds_tree, is_leaf=_axes_is_leaf)
+
+
+def replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P())
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    step_fn: Callable
+    arg_sds: Tuple
+    arg_shardings: Tuple
+    out_shardings: Any
+    ruleset: RuleSet
+    description: str
+
+
+def build_model_for_scale(cfg: ModelConfig, causal_skip: bool = False,
+                          ruleset: Optional[RuleSet] = None,
+                          moe_dispatch: str = "onehot"):
+    """Model with large-scale execution strategies selected: flash
+    (recompute-in-backward) attention, factored WKV6, and explicit
+    per-layer activation sharding constraints."""
+    kw = {} if cfg.is_encdec else {"moe_dispatch": moe_dispatch}
+    model = build_model(cfg, attn_impl="flash", rwkv_mode="factored",
+                        causal_skip=causal_skip, **kw)
+    if ruleset is not None:
+        def constrain(x):
+            sh = ruleset.sharding(("batch", "seq", None), x.shape)
+            return jax.lax.with_sharding_constraint(x, sh)
+        model.act_constraint = constrain
+
+        from repro.models import common as model_common
+
+        def generic_constrain(x, logical_axes):
+            sh = ruleset.sharding(logical_axes, x.shape)
+            return jax.lax.with_sharding_constraint(x, sh)
+        model_common.set_constrainer(generic_constrain)
+    return model
+
+
+# target tokens per device per microbatch: bounds live activation memory
+MICROBATCH_TOKENS_PER_DEVICE = 16384
+
+
+def default_microbatches(shape: InputShape, mesh,
+                         cfg: Optional[ModelConfig] = None) -> int:
+    data_ways = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    local_tokens = shape.global_batch * shape.seq_len // max(data_ways, 1)
+    k = max(1, local_tokens // MICROBATCH_TOKENS_PER_DEVICE)
+    if cfg is not None and cfg.param_count() > 5e10:
+        # 100B-class: halve live activations again (dbrx fits 16 GB at 8)
+        k *= 2
+    while k > 1 and shape.global_batch % k:
+        k -= 1
+    return k
+
+
+def make_train_plan(cfg: ModelConfig, shape: InputShape, mesh,
+                    opt_cfg: Optional[OptimizerConfig] = None,
+                    rule_overrides: Optional[Dict] = None,
+                    causal_skip: bool = False,
+                    microbatches: Optional[int] = None,
+                    moe_dispatch: str = "onehot") -> CellPlan:
+    opt_cfg = opt_cfg or OptimizerConfig()
+    rs = rules_for(cfg, shape, mesh, rule_overrides)
+    model = build_model_for_scale(cfg, causal_skip=causal_skip, ruleset=rs,
+                                  moe_dispatch=moe_dispatch)
+    if microbatches is None:
+        microbatches = default_microbatches(shape, mesh, cfg)
+
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    axes = model.param_axes()
+    param_sh = shardings_for_tree(rs, axes, params_sds)
+    mu_sh = param_sh
+    nu_sh = param_sh
+    state_sh = (param_sh, adamw.AdamWState(step=replicated(mesh),
+                                           mu=mu_sh, nu=nu_sh))
+    opt_sds = adamw.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                        params_sds),
+        nu=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                        params_sds))
+    state_sds = (params_sds, opt_sds)
+
+    batch_sds = input_specs(cfg, shape)
+    batch_axes = input_axes(cfg, shape)
+    batch_sh = shardings_for_tree(rs, batch_axes, batch_sds)
+
+    nmicro = microbatches
+
+    def train_step(state, batch):
+        params, opt_state = state
+        if nmicro <= 1:
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches; grads f32
+            # accumulate in the (sharded) param layout
+            def split(x):
+                return x.reshape((nmicro, x.shape[0] // nmicro)
+                                 + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, gacc = carry
+                loss, grads = jax.value_and_grad(model.loss_fn)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / nmicro,
+                    gacc, grads)
+                return (loss_acc + loss / nmicro, gacc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), g0), micro)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return (params, opt_state), metrics
+
+    metrics_sh = {"loss": replicated(mesh), "grad_norm": replicated(mesh),
+                  "lr": replicated(mesh)}
+    return CellPlan(step_fn=train_step,
+                    arg_sds=(state_sds, batch_sds),
+                    arg_shardings=(state_sh, batch_sh),
+                    out_shardings=(state_sh, metrics_sh),
+                    ruleset=rs,
+                    description=(f"train {cfg.name} {shape.name} "
+                                 f"(microbatches={microbatches})"))
+
+
+def make_prefill_plan(cfg: ModelConfig, shape: InputShape, mesh,
+                      rule_overrides: Optional[Dict] = None,
+                      causal_skip: bool = False,
+                      moe_dispatch: str = "onehot",
+                      last_logit: bool = False) -> CellPlan:
+    rs = rules_for(cfg, shape, mesh, rule_overrides)
+    model = build_model_for_scale(cfg, causal_skip=causal_skip, ruleset=rs,
+                                  moe_dispatch=moe_dispatch)
+    if last_logit and not cfg.is_encdec:
+        model.prefill_last_only = True
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    param_sh = shardings_for_tree(rs, model.param_axes(), params_sds)
+    batch_sds = input_specs(cfg, shape)
+    batch_sh = shardings_for_tree(rs, input_axes(cfg, shape), batch_sds)
+
+    if cfg.is_encdec:
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(params, batch["frames"],
+                                          batch["tokens"])
+            return logits[:, -1], cache
+    else:
+        key = "embeds" if model.takes_embeds else "tokens"
+
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(params, batch[key])
+            return logits[:, -1], cache
+
+    # output cache shardings via cache axes
+    cache_sds, cache_axes = model.cache_spec(shape.global_batch,
+                                             shape.seq_len)
+    cache_sh = shardings_for_tree(rs, cache_axes, cache_sds)
+    logits_sh = rs.sharding(("batch", "act_vocab"),
+                            (shape.global_batch, cfg.padded_vocab_size))
+    return CellPlan(step_fn=prefill_step,
+                    arg_sds=(params_sds, batch_sds),
+                    arg_shardings=(param_sh, batch_sh),
+                    out_shardings=(logits_sh, cache_sh),
+                    ruleset=rs,
+                    description=f"prefill {cfg.name} {shape.name}")
+
+
+def make_decode_plan(cfg: ModelConfig, shape: InputShape, mesh,
+                     rule_overrides: Optional[Dict] = None,
+                     moe_dispatch: str = "onehot") -> CellPlan:
+    rs = rules_for(cfg, shape, mesh, rule_overrides)
+    model = build_model_for_scale(cfg, ruleset=rs,
+                                  moe_dispatch=moe_dispatch)
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    param_sh = shardings_for_tree(rs, model.param_axes(), params_sds)
+
+    batch_sds = input_specs(cfg, shape)          # tokens, pos, cache
+    batch_axes = input_axes(cfg, shape)
+    batch_sh = shardings_for_tree(rs, batch_axes, batch_sds)
+
+    def decode_step(params, batch):
+        logits, cache = model.decode_step(params, batch["tokens"],
+                                          batch["pos"], batch["cache"])
+        return logits[:, -1], cache
+
+    logits_sh = rs.sharding(("batch", "act_vocab"),
+                            (shape.global_batch, cfg.padded_vocab_size))
+    cache_sh = batch_sh["cache"]
+    return CellPlan(step_fn=decode_step,
+                    arg_sds=(params_sds, batch_sds),
+                    arg_shardings=(param_sh, batch_sh),
+                    out_shardings=(logits_sh, cache_sh),
+                    ruleset=rs,
+                    description=f"decode {cfg.name} {shape.name}")
+
+
+def make_plan(cfg: ModelConfig, shape: InputShape, mesh,
+              rule_overrides: Optional[Dict] = None,
+              causal_skip: bool = False,
+              moe_dispatch: str = "onehot",
+              last_logit: bool = False) -> CellPlan:
+    if shape.kind == "train":
+        return make_train_plan(cfg, shape, mesh,
+                               rule_overrides=rule_overrides,
+                               causal_skip=causal_skip,
+                               moe_dispatch=moe_dispatch)
+    if shape.kind == "prefill":
+        return make_prefill_plan(cfg, shape, mesh,
+                                 rule_overrides=rule_overrides,
+                                 causal_skip=causal_skip,
+                                 moe_dispatch=moe_dispatch,
+                                 last_logit=last_logit)
+    return make_decode_plan(cfg, shape, mesh,
+                            rule_overrides=rule_overrides,
+                            moe_dispatch=moe_dispatch)

@@ -1,0 +1,8 @@
+from repro.models.model import (  # noqa: F401
+    build_model,
+    input_axes,
+    input_specs,
+    make_decode_step,
+    make_forward_loss,
+    make_prefill_step,
+)

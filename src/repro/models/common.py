@@ -1,0 +1,153 @@
+"""Shared building blocks for the model zoo.
+
+Models are pure-functional: each module exposes
+  ``init(key, cfg, ...) -> params``          (nested dict of jnp arrays)
+  ``axes(cfg, ...) -> params-like tree``     (tuples of logical axis names)
+  ``apply(params, x, ...) -> y``
+The ``axes`` trees feed the sharding rule engine (repro.sharding.rules);
+leaves are tuples of logical dimension names, mirroring the param tree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# global activation-sharding constrainer
+# ---------------------------------------------------------------------------
+# Deep scans (WKV/SSD chunk scans) lose GSPMD sharding on their carries and
+# slices, silently replicating activations (observed: per-chunk f32
+# all-gathers of the full hidden state). Block implementations call
+# ``constrain(x, logical_axes)``; the launcher installs a resolver mapping
+# logical axes -> NamedShardings for the active mesh. Tests/CPU runs leave
+# it unset (identity).
+
+_CONSTRAINER = None
+
+
+def set_constrainer(fn) -> None:
+    global _CONSTRAINER
+    _CONSTRAINER = fn
+
+
+def constrain(x, logical_axes):
+    if _CONSTRAINER is None:
+        return x
+    return _CONSTRAINER(x, logical_axes)
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_shape: Tuple[int, ...], dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init (maxtext-style)."""
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim,) + out_shape)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm_axes() -> Params:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm_apply(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = rope_freqs(head_dim, theta)                       # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def sinusoidal_position_at(pos: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """PE row for a (possibly traced) scalar position. Returns (dim,)."""
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((dim,), dtype=jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy (vocab-sharded friendly)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits: (..., V) possibly sharded on V; labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder LM.
+
+The audio frontend (conv stem over mel spectrograms) is a STUB per the
+assignment: inputs are precomputed frame embeddings (b, s, d). Sinusoidal
+absolute positions are added (no RoPE, as in Whisper).
+
+Decoder blocks: causal self-attention (KV cache) + cross-attention against
+cached encoder K/V + MLP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (Params, cross_entropy, dtype_of, embed_init,
+                                 rmsnorm_apply, rmsnorm_axes, rmsnorm_init,
+                                 sinusoidal_position_at, sinusoidal_positions)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, *, attn_impl: str = "blocked",
+                 **_unused):
+        assert cfg.encoder_layers > 0
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.takes_embeds = True  # encoder input is stubbed frame embeddings
+        self.act_constraint = None
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg.dtype)
+        n_enc, n_dec = cfg.encoder_layers, cfg.num_layers
+        keys = jax.random.split(key, 2 * (n_enc + n_dec) + 2)
+
+        def enc_block(k):
+            k1, k2 = jax.random.split(k)
+            return {"norm1": rmsnorm_init(cfg.d_model, dtype),
+                    "attn": attn.attn_init(k1, cfg, dtype),
+                    "norm2": rmsnorm_init(cfg.d_model, dtype),
+                    "mlp": mlp_mod.mlp_init(k2, cfg, dtype,
+                                            cfg.encoder_d_ff or cfg.d_ff)}
+
+        def dec_block(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"norm1": rmsnorm_init(cfg.d_model, dtype),
+                    "self_attn": attn.attn_init(k1, cfg, dtype),
+                    "norm2": rmsnorm_init(cfg.d_model, dtype),
+                    "cross_attn": attn.cross_attn_init(k2, cfg, dtype),
+                    "norm3": rmsnorm_init(cfg.d_model, dtype),
+                    "mlp": mlp_mod.mlp_init(k3, cfg, dtype)}
+
+        enc = [enc_block(keys[i]) for i in range(n_enc)]
+        dec = [dec_block(keys[n_enc + i]) for i in range(n_dec)]
+        stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+        return {
+            "embed": {"table": embed_init(keys[-1], cfg.padded_vocab_size,
+                                          cfg.d_model, dtype)},
+            "encoder": stack(enc),
+            "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+            "decoder": stack(dec),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+
+    def param_axes(self) -> Params:
+        cfg = self.cfg
+        from repro.models.transformer import prepend_axis
+        enc = {"norm1": rmsnorm_axes(), "attn": attn.attn_axes(cfg),
+               "norm2": rmsnorm_axes(), "mlp": mlp_mod.mlp_axes(cfg)}
+        dec = {"norm1": rmsnorm_axes(), "self_attn": attn.attn_axes(cfg),
+               "norm2": rmsnorm_axes(), "cross_attn": attn.attn_axes(cfg),
+               "norm3": rmsnorm_axes(), "mlp": mlp_mod.mlp_axes(cfg)}
+        return {
+            "embed": {"table": ("vocab", "fsdp_embed")},
+            "encoder": prepend_axis(enc),
+            "enc_norm": rmsnorm_axes(),
+            "decoder": prepend_axis(dec),
+            "final_norm": rmsnorm_axes(),
+        }
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = frames.astype(dtype_of(cfg.dtype))
+        x = x + sinusoidal_positions(x.shape[1],
+                                     cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, bp):
+            if self.act_constraint is not None:
+                x = self.act_constraint(x)
+            h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+            y, _ = attn.attn_apply(bp["attn"], h, cfg, positions=positions,
+                                   causal=False, impl=self.attn_impl,
+                                   use_rope=False)
+            x = x + y
+            h = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+            x = x + mlp_mod.mlp_apply(bp["mlp"], h, cfg)
+            return x, None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+    # -- decoder (teacher-forced / prefill) --------------------------------------
+    def _decoder_fullseq(self, params: Params, enc_out: jnp.ndarray,
+                         tokens: jnp.ndarray, collect_cache: bool):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        x = x + sinusoidal_positions(x.shape[1],
+                                     cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, bp):
+            if self.act_constraint is not None:
+                x = self.act_constraint(x)
+            h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+            y, kv = attn.attn_apply(bp["self_attn"], h, cfg,
+                                    positions=positions, causal=True,
+                                    impl=self.attn_impl,
+                                    kv_out=collect_cache, use_rope=False)
+            x = x + y
+            h = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+            cross_kv = attn.encode_kv(bp["cross_attn"], enc_out)
+            x = x + attn.cross_attn_apply(bp["cross_attn"], h, cfg,
+                                          kv=cross_kv)
+            h = rmsnorm_apply(bp["norm3"], x, cfg.norm_eps)
+            x = x + mlp_mod.mlp_apply(bp["mlp"], h, cfg)
+            out = {"self": kv, "cross": cross_kv} if collect_cache else None
+            return x, out
+
+        if cfg.remat == "full" and not collect_cache:
+            body = jax.checkpoint(body)
+        x, caches = jax.lax.scan(body, x, params["decoder"])
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]["table"]).astype(jnp.float32)
+        if cfg.padded_vocab_size != cfg.vocab_size:
+            ids = jnp.arange(cfg.padded_vocab_size)
+            logits = jnp.where(ids[None, None, :] < cfg.vocab_size,
+                               logits, -1e30)
+        return logits, caches
+
+    def forward(self, params: Params, frames: jnp.ndarray,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        enc_out = self.encode(params, frames)
+        logits, _ = self._decoder_fullseq(params, enc_out, tokens, False)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss_fn(self, params: Params, batch: Dict[str, jnp.ndarray]
+                ) -> jnp.ndarray:
+        logits, _ = self.forward(params, batch["frames"], batch["tokens"])
+        return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    # -- prefill / decode ---------------------------------------------------------
+    def prefill(self, params: Params, frames: jnp.ndarray,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        enc_out = self.encode(params, frames)
+        logits, kv = self._decoder_fullseq(params, enc_out, tokens, True)
+        # write self-attn K/V into a fixed-size cache
+        seq = tokens.shape[1]
+        cache_self = jax.tree.map(
+            lambda t: t, kv["self"])  # (L, b, s, kv, hd) already full
+        return logits, {"self": cache_self, "cross": kv["cross"]}
+
+    def cache_spec(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.dtype)
+        L = cfg.num_layers
+        s, a = attn.kv_cache_spec(cfg, batch, seq_len, 0, dtype)
+        from repro.models.transformer import prepend_axis
+        stackL = lambda t: jax.ShapeDtypeStruct((L,) + t.shape, t.dtype)
+        spec = {"self": jax.tree.map(stackL, s),
+                "cross": jax.tree.map(stackL, s)}
+        axes = {"self": prepend_axis(a), "cross": prepend_axis(a)}
+        return spec, axes
+
+    def init_cache(self, batch: int, seq_len: int):
+        spec, _ = self.cache_spec(batch, seq_len)
+        return jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), spec)
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray,
+                    pos: jnp.ndarray, cache: Dict[str, Any]
+                    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """tokens: (b, 1); cache: {"self": (L,b,S,kv,hd) k/v, "cross": ...}."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        pe = sinusoidal_position_at(pos, cfg.d_model).astype(x.dtype)
+        x = x + pe[None, None]
+
+        def body(x, scan_in):
+            bp, c_self, c_cross = scan_in
+            h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+            y, nc = attn.attn_decode(bp["self_attn"], h, cfg, pos=pos,
+                                     cache=c_self, use_rope=False)
+            x = x + y
+            h = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+            x = x + attn.cross_attn_decode(bp["cross_attn"], h, cfg,
+                                           kv=c_cross)
+            h = rmsnorm_apply(bp["norm3"], x, cfg.norm_eps)
+            x = x + mlp_mod.mlp_apply(bp["mlp"], h, cfg)
+            return x, nc
+
+        x, new_self = jax.lax.scan(body, x,
+                                   (params["decoder"], cache["self"],
+                                    cache["cross"]))
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]["table"]).astype(jnp.float32)
+        if cfg.padded_vocab_size != cfg.vocab_size:
+            ids = jnp.arange(cfg.padded_vocab_size)
+            logits = jnp.where(ids[None, None, :] < cfg.vocab_size,
+                               logits, -1e30)
+        return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,31 @@
+"""Gated (SwiGLU-family) MLP block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.common import Params, activation, dense_init
+
+
+def mlp_init(key, cfg: ModelConfig, dtype, d_ff: int = 0) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, (f,), dtype),     # up
+        "wg": dense_init(k2, d, (f,), dtype),     # gate
+        "wo": dense_init(k3, f, (d,), dtype),     # down
+    }
+
+
+def mlp_axes(cfg: ModelConfig) -> Params:
+    return {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"),
+            "wo": ("mlp", "embed")}
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    act = activation(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    g = act(jnp.einsum("bsd,df->bsf", x, params["wg"]))
+    return jnp.einsum("bsf,fd->bsd", h * g, params["wo"])

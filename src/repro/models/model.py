@@ -1,0 +1,125 @@
+"""Model builder + per-(arch, shape) input specs for training/serving.
+
+``build_model(cfg)`` returns a TransformerLM or EncDecLM. ``input_specs``
+returns ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
+allocation) for every model input of a given InputShape; ``input_axes``
+returns the matching logical-axis trees for the sharding rule engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import InputShape, ModelConfig
+from repro.models.common import dtype_of
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg: ModelConfig, **opts):
+    if cfg.is_encdec:
+        return EncDecLM(cfg, **opts)
+    return TransformerLM(cfg, **opts)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one step of the given kind."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg.dtype)
+    model = build_model(cfg)
+
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {"frames": _sds((B, S, cfg.d_model), dt),
+                    "tokens": _sds((B, S), jnp.int32),
+                    "labels": _sds((B, S), jnp.int32)}
+        if cfg.frontend != "none":
+            return {"embeds": _sds((B, S, cfg.d_model), dt),
+                    "labels": _sds((B, S), jnp.int32)}
+        return {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {"frames": _sds((B, S, cfg.d_model), dt),
+                    "tokens": _sds((B, S), jnp.int32)}
+        if cfg.frontend != "none":
+            return {"embeds": _sds((B, S, cfg.d_model), dt)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+
+    if shape.kind == "decode":
+        cache_spec, _ = model.cache_spec(B, S)
+        return {"tokens": _sds((B, 1), jnp.int32),
+                "pos": _sds((), jnp.int32),
+                "cache": cache_spec}
+
+    raise ValueError(shape.kind)
+
+
+def input_axes(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Logical-axis tuples mirroring input_specs."""
+    model = build_model(cfg)
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {"frames": ("batch", "seq", "embed"),
+                    "tokens": ("batch", "seq"),
+                    "labels": ("batch", "seq")}
+        if cfg.frontend != "none":
+            return {"embeds": ("batch", "seq", "embed"),
+                    "labels": ("batch", "seq")}
+        return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {"frames": ("batch", "seq", "embed"),
+                    "tokens": ("batch", "seq")}
+        if cfg.frontend != "none":
+            return {"embeds": ("batch", "seq", "embed")}
+        return {"tokens": ("batch", "seq")}
+    if shape.kind == "decode":
+        _, cache_axes = model.cache_spec(shape.global_batch, shape.seq_len)
+        return {"tokens": ("batch", None), "pos": (),
+                "cache": cache_axes}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# step functions (shared by launcher / runtime / dry-run)
+# ---------------------------------------------------------------------------
+
+def make_forward_loss(model):
+    """loss(params, batch) for training."""
+    def loss(params, batch):
+        return model.loss_fn(params, batch)
+    return loss
+
+
+def make_prefill_step(model):
+    cfg = model.cfg
+    if cfg.is_encdec:
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(params, batch["frames"],
+                                          batch["tokens"])
+            return logits[:, -1], cache
+        return prefill_step
+
+    key = "embeds" if model.takes_embeds else "tokens"
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch[key])
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, batch):
+        logits, cache = model.decode_step(params, batch["tokens"],
+                                          batch["pos"], batch["cache"])
+        return logits[:, -1], cache
+    return decode_step

@@ -1,0 +1,282 @@
+"""RWKV6 (Finch) blocks: data-dependent decay time-mix + channel-mix.
+
+The WKV6 recurrence per head (K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T S_{t-1} + (r_t . (u * k_t)) v_t
+with w_t in (0,1) produced per-channel by a LoRA on the shifted input
+(this is the "data-dependent decay" that distinguishes Finch from RWKV5).
+
+Parallel path uses a *chunked* formulation (log-space cumulative decays,
+intra-chunk quadratic + inter-chunk state scan) — the TPU-native shape of
+a linear recurrence; sequential per-token scan only in decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.common import Params, constrain, dense_init
+
+LORA_RANK = 64
+CHUNK = 128
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv.head_dim
+
+
+def timemix_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = _heads(cfg)
+    K = cfg.rwkv.head_dim
+    ks = jax.random.split(key, 12)
+    p: Params = {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        # per-target token-shift mixes + data-dependent lora
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "lora_a": dense_init(ks[0], d, (5, LORA_RANK), dtype),
+        "lora_b": dense_init(ks[1], LORA_RANK, (5, d), dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),   # decay bias (pre -exp(exp))
+        "wa": dense_init(ks[2], d, (LORA_RANK,), dtype),
+        "wb": dense_init(ks[3], LORA_RANK, (d,), dtype),
+        "u": (jax.random.normal(ks[4], (H, K)) * 0.1).astype(jnp.float32),
+        "wr": dense_init(ks[5], d, (d,), dtype),
+        "wk": dense_init(ks[6], d, (d,), dtype),
+        "wv": dense_init(ks[7], d, (d,), dtype),
+        "wg": dense_init(ks[8], d, (d,), dtype),
+        "wo": dense_init(ks[9], d, (d,), dtype),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+    return p
+
+
+def timemix_axes(cfg: ModelConfig) -> Params:
+    return {
+        "mu_x": ("embed",), "mu": (None, "embed"),
+        "lora_a": ("embed", None, None), "lora_b": (None, None, "embed"),
+        # decay / bonus / groupnorm are per-CHANNEL of the head layout —
+        # shard them like the inner (model) dim or the per-chunk reshape
+        # to (.., H, K) forces full-activation all-gathers every chunk
+        "w0": ("inner",), "wa": ("embed", None), "wb": (None, "inner"),
+        "u": ("act_heads", "head_dim"),
+        "wr": ("embed", "inner"), "wk": ("embed", "inner"),
+        "wv": ("embed", "inner"), "wg": ("embed", "inner"),
+        "wo": ("inner", "embed"), "ln_x": ("inner",),
+    }
+
+
+def _token_shift_mix(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Data-dependent token-shift (ddlerp). x, x_prev: (b, s, d).
+    Returns dict name -> mixed input (b, s, d)."""
+    sx = x_prev - x
+    xx = x + sx * p["mu_x"]
+    # lora: (b,s,d) @ (d,5,R) -> (b,s,5,R); tanh; @ (R,5,d) -> (b,s,5,d)
+    t = jnp.tanh(jnp.einsum("bsd,dmr->bsmr", xx, p["lora_a"]))
+    dd = jnp.einsum("bsmr,rmd->bsmd", t, p["lora_b"])
+    mixed = x[:, :, None, :] + sx[:, :, None, :] * (p["mu"][None, None] + dd)
+    return {n: mixed[:, :, i, :] for i, n in enumerate(MIX_NAMES)}
+
+
+def _decay(p: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    """log w_t (negative), per channel. xw: (b, s, d) -> (b, s, d) f32."""
+    lora = jnp.einsum("bsd,dr->bsr", xw, p["wa"])
+    ww = p["w0"] + jnp.einsum("bsr,rd->bsd", jnp.tanh(lora),
+                              p["wb"]).astype(jnp.float32)
+    return -jnp.exp(ww)   # log-decay  (w = exp(-exp(ww)) in (0,1))
+
+
+def _groupnorm_heads(x: jnp.ndarray, scale: jnp.ndarray, H: int,
+                     eps: float) -> jnp.ndarray:
+    """Per-head groupnorm. x: (b, s, d)."""
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32).reshape(b, s, H, d // H)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(b, s, d) * scale).astype(x.dtype)
+
+
+# Per-step log-decay clamp for the "factored" path: with chunk Q the
+# factored exponent -cum_j is bounded by Q*CLAMP which must stay < 88
+# (f32 exp overflow). Only the scale/lowering path uses "factored"; the
+# exact "direct" path (tests, small shapes) and the Pallas wkv6 kernel
+# (real TPU) have no clamp.
+FACTORED_CLAMP = 80.0
+
+
+def timemix_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  mode: str = "direct", return_state: bool = False):
+    """Full-sequence WKV6, chunked scan. x: (b, s, d).
+
+    mode="direct":   exact intra-chunk pairwise decay (memory O(b·Q²·d)
+                     inside the chunk scan) — tests/smoke scale.
+    mode="factored": A = (r·exp(cum_{t-1})) @ (k·exp(-cum_j))^T with the
+                     per-step log-decay clamped — memory O(b·Q²·H), the
+                     shape used for large-scale lowering and mirrored by
+                     the Pallas wkv6 kernel on real TPU.
+    """
+    b, s, d = x.shape
+    H, K = _heads(cfg), cfg.rwkv.head_dim
+    Q = min(CHUNK, s)
+    while s % Q != 0:   # adaptive chunk for awkward lengths
+        Q -= 1
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    m = _token_shift_mix(p, x, x_prev)
+
+    lw = _decay(p, m["w"])                                   # (b,s,d) log-decay
+    lw = constrain(lw, ("batch", None, "act_mlp"))
+    if mode == "factored":
+        lw = jnp.maximum(lw, -FACTORED_CLAMP / Q)
+    r = jnp.einsum("bsd,de->bse", m["r"], p["wr"])
+    k = jnp.einsum("bsd,de->bse", m["k"], p["wk"])
+    v = jnp.einsum("bsd,de->bse", m["v"], p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", m["g"], p["wg"])
+                    .astype(jnp.float32)).astype(x.dtype)
+
+    def hsplit(t):  # (b,s,d) -> (nc, b, Q, H, K) f32, chunk-major for scan
+        return (t.astype(jnp.float32).reshape(b, s // Q, Q, H, K)
+                .transpose(1, 0, 2, 3, 4))
+
+    rh, kh, vh, lwh = hsplit(r), hsplit(k), hsplit(v), hsplit(lw)
+    cum = jnp.cumsum(lwh, axis=2)                            # (nc,b,Q,H,K)
+    chunk_axes = (None, "batch", None, "act_heads", None)
+    rh, kh, vh, lwh, cum = (constrain(t, chunk_axes)
+                            for t in (rh, kh, vh, lwh, cum))
+    tri_strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+
+    def body(S_prev, inp):
+        r_c, k_c, v_c, cum_c, lw_c = inp                     # (b,Q,H,K)
+        body_axes = ("batch", None, "act_heads", None)
+        r_c, k_c, v_c, cum_c, lw_c = (constrain(t, body_axes)
+                                      for t in (r_c, k_c, v_c, cum_c, lw_c))
+        S_prev = constrain(S_prev, ("batch", "act_heads", None, None))
+        cum_tm1 = cum_c - lw_c
+        if mode == "factored":
+            r_fac = r_c * jnp.exp(cum_tm1)
+            k_fac = k_c * jnp.exp(-cum_c)
+            A = jnp.einsum("bqhk,bjhk->bqjh", r_fac, k_fac)
+            A = jnp.where(tri_strict[None, :, :, None], A, 0.0)
+        else:
+            seg = cum_tm1[:, :, None] - cum_c[:, None, :]    # (b,Q,Q,H,K)
+            dec = jnp.where(tri_strict[None, :, :, None, None],
+                            jnp.exp(seg), 0.0)
+            A = jnp.einsum("bqhk,bqjhk,bjhk->bqjh", r_c, dec, k_c)
+        diag = jnp.einsum("bqhk,hk,bqhk->bqh", r_c, p["u"], k_c)
+        y_c = jnp.einsum("bqjh,bjhk->bqhk", A, v_c) + diag[..., None] * v_c
+        # inter-chunk from carried state
+        r_dec = r_c * jnp.exp(cum_tm1)
+        y_c = y_c + jnp.einsum("bqhk,bhkv->bqhv", r_dec, S_prev)
+        # state update
+        dec_end = jnp.exp(cum_c[:, -1:, :] - cum_c)
+        S_inj = jnp.einsum("bqhk,bqhv->bhkv", k_c * dec_end, v_c)
+        a_end = jnp.exp(cum_c[:, -1])
+        S_new = a_end[..., None] * S_prev + S_inj
+        return S_new, y_c
+
+    S0 = jnp.zeros((b, H, K, K), jnp.float32)
+    # remat: recompute the (b, Q, Q, H) A-tiles in backward
+    S_fin, ys = jax.lax.scan(jax.checkpoint(body), S0,
+                             (rh, kh, vh, cum, lwh))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, d).astype(x.dtype)
+    y = _groupnorm_heads(y, p["ln_x"], H, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y * g, p["wo"])
+    if return_state:
+        return out, {"wkv": S_fin, "shift_t": x[:, -1]}
+    return out
+
+
+def channelmix_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    f = cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(k1, d, (f,), dtype),
+        "wv": dense_init(k2, f, (d,), dtype),
+        "wr": dense_init(k3, d, (d,), dtype),
+    }
+
+
+def channelmix_axes(cfg: ModelConfig) -> Params:
+    return {"mu_k": ("embed",), "mu_r": ("embed",),
+            "wk": ("embed", "mlp"), "wv": ("mlp", "embed"),
+            "wr": ("embed", "inner")}
+
+
+def channelmix_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                     x_prev: jnp.ndarray = None) -> jnp.ndarray:
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    sx = x_prev - x
+    xk = x + sx * p["mu_k"]
+    xr = x + sx * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                  p["wr"]).astype(jnp.float32)).astype(x.dtype)
+    return r * jnp.einsum("bsf,fd->bsd", k, p["wv"])
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent single-token)
+# ---------------------------------------------------------------------------
+
+def rwkv_state_spec(cfg: ModelConfig, batch: int, dtype
+                    ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, tuple]]:
+    d = cfg.d_model
+    H, K = _heads(cfg), cfg.rwkv.head_dim
+    spec = {
+        "wkv": jax.ShapeDtypeStruct((batch, H, K, K), jnp.float32),
+        "shift_t": jax.ShapeDtypeStruct((batch, d), dtype),   # time-mix shift
+        "shift_c": jax.ShapeDtypeStruct((batch, d), dtype),   # channel-mix
+    }
+    axes = {"wkv": ("batch", None, None, None),
+            "shift_t": ("batch", "embed"), "shift_c": ("batch", "embed")}
+    return spec, axes
+
+
+def timemix_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                   state: Dict[str, jnp.ndarray]
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (b, 1, d); updates 'wkv' and 'shift_t' in state."""
+    b, _, d = x.shape
+    H, K = _heads(cfg), cfg.rwkv.head_dim
+    m = _token_shift_mix(p, x, state["shift_t"][:, None, :])
+    lw = _decay(p, m["w"])[:, 0]                              # (b, d)
+    r = jnp.einsum("bsd,de->bse", m["r"], p["wr"])[:, 0]
+    k = jnp.einsum("bsd,de->bse", m["k"], p["wk"])[:, 0]
+    v = jnp.einsum("bsd,de->bse", m["v"], p["wv"])[:, 0]
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", m["g"], p["wg"])
+                    .astype(jnp.float32)).astype(x.dtype)[:, 0]
+
+    rh = r.astype(jnp.float32).reshape(b, H, K)
+    kh = k.astype(jnp.float32).reshape(b, H, K)
+    vh = v.astype(jnp.float32).reshape(b, H, K)
+    w = jnp.exp(lw).reshape(b, H, K)
+
+    S = state["wkv"]
+    o = (jnp.einsum("bhk,bhkv->bhv", rh, S)
+         + jnp.einsum("bhk,hk,bhk->bh", rh, p["u"], kh)[..., None] * vh)
+    S_new = w[..., None] * S + kh[..., None] * vh[:, :, None, :]
+
+    y = o.reshape(b, 1, d).astype(x.dtype)
+    y = _groupnorm_heads(y, p["ln_x"], H, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y * g[:, None], p["wo"])
+    new_state = dict(state)
+    new_state["wkv"] = S_new
+    new_state["shift_t"] = x[:, 0]
+    return out, new_state
+
+
+def channelmix_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                      state: Dict[str, jnp.ndarray]
+                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    out = channelmix_apply(p, x, cfg, x_prev=state["shift_c"][:, None, :])
+    new_state = dict(state)
+    new_state["shift_c"] = x[:, 0]
+    return out, new_state

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) block: chunked scan for train/prefill, recurrent decode.
+
+Implements the state-space-duality form: intra-chunk quadratic
+(attention-like) term + inter-chunk recurrence over chunk states — the
+TPU-friendly shape of the selective-scan (no sequential per-token loop in
+the parallel path; a single lax.scan over chunks carries the state).
+
+State layout (per layer):
+  ssm : (b, heads, head_dim, state)   — the SSD hidden state
+  conv: (b, conv_width-1, d_conv)     — rolling buffer for the causal conv
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.common import Params, constrain, dense_init
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nheads = d_inner // cfg.ssm.head_dim
+    d_conv = d_inner + 2 * cfg.ssm.state_dim   # conv over [x, B, C]
+    return d_inner, nheads, d_conv
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    n = cfg.ssm.state_dim
+    d_inner, nheads, d_conv = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z (gate), x, B, C, dt]
+    out_dim = 2 * d_inner + 2 * n + nheads
+    return {
+        "in_proj": dense_init(k1, d, (out_dim,), dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm.conv_width, d_conv))
+                   * 0.1).astype(dtype),
+        "a_log": jnp.zeros((nheads,), jnp.float32),       # A = -exp(a_log)
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_proj": dense_init(k4, d_inner, (d,), dtype),
+        "norm_z": jnp.ones((d_inner,), dtype),            # gated RMS pre-out
+    }
+
+
+def mamba_axes(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": ("conv", None),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "dt_bias": (None,),
+        "out_proj": ("inner", "embed"),
+        "norm_z": ("inner",),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_inner, nheads, _ = _dims(cfg)
+    n = cfg.ssm.state_dim
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    B = proj[..., 2 * d_inner:2 * d_inner + n]
+    C = proj[..., 2 * d_inner + n:2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n:]
+    return z, x, B, C, dt
+
+
+def _gated_norm(z: jnp.ndarray, y: jnp.ndarray, scale: jnp.ndarray,
+                eps: float) -> jnp.ndarray:
+    """RMSNorm(y * silu(z)) — the Mamba2 output gate."""
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps) *
+            scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_apply(params: Params, x_in: jnp.ndarray, cfg: ModelConfig,
+                return_state: bool = False):
+    """Full-sequence SSD. x_in: (b, s, d) -> (b, s, d) [, final state]."""
+    b, s, d = x_in.shape
+    n = cfg.ssm.state_dim
+    P = cfg.ssm.head_dim
+    d_inner, H, d_conv = _dims(cfg)
+    Q = min(cfg.ssm.chunk, s)
+    while s % Q != 0:   # adaptive chunk for awkward lengths
+        Q -= 1
+
+    proj = jnp.einsum("bsd,de->bse", x_in, params["in_proj"])
+    z, xs, B, C, dt = _split_in_proj(cfg, proj)
+
+    # causal depthwise conv over [x, B, C]
+    xbc = jnp.concatenate([xs, B, C], axis=-1)              # (b, s, d_conv)
+    conv_state = xbc[:, s - (params["conv_w"].shape[0] - 1):, :]
+    w = params["conv_w"]                                     # (W, d_conv)
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s, :] * w[i][None, None, :] for i in range(W))
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x_in.dtype)
+    xs = conv[..., :d_inner]
+    B = conv[..., d_inner:d_inner + n].astype(jnp.float32)
+    C = conv[..., d_inner + n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,s,H)
+    A = -jnp.exp(params["a_log"])                                     # (H,)
+    xh = xs.reshape(b, s, H, P).astype(jnp.float32)
+
+    # chunked SSD: scan over chunks (carry = state). All intra-chunk work
+    # happens inside the scan body so peak memory is O(b·Q·Q·H), not
+    # O(b·nc·Q·Q·H).
+    nc = s // Q
+    xh = xh.reshape(b, nc, Q, H, P)
+    dt = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, n)
+    Cc = C.reshape(b, nc, Q, n)
+    la = dt * A[None, None, None, :]                 # log decay per step
+    cum = jnp.cumsum(la, axis=2)                     # (b, nc, Q, H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def scan_body(S_prev, inputs):
+        x_c, dt_c, B_c, C_c, cum_c = inputs          # (b,Q,...)
+        x_c = constrain(x_c, ("batch", None, "act_heads", None))
+        dt_c = constrain(dt_c, ("batch", None, "act_heads"))
+        cum_c = constrain(cum_c, ("batch", None, "act_heads"))
+        S_prev = constrain(S_prev, ("batch", "act_heads", None, None))
+        # intra-chunk: M[t,j] = (C_t·B_j) dt_j exp(cum_t - cum_j), j<=t
+        cb = jnp.einsum("bqn,bjn->bqj", C_c, B_c)    # (b, Q, Q)
+        seg = cum_c[:, :, None, :] - cum_c[:, None, :, :]  # (b,Q,Q,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        M = cb[..., None] * decay * dt_c[:, None, :, :]
+        y_c = jnp.einsum("bqjh,bjhp->bqhp", M, x_c)
+        # inter-chunk: y_t += exp(cum_t) * C_t · S_prev
+        y_int = jnp.einsum("bqn,bhpn->bqhp", C_c, S_prev)
+        y_c = y_c + y_int * jnp.exp(cum_c)[..., None]
+        # state update: S = exp(cum_Q) S_prev + sum_j exp(cum_Q-cum_j) dt_j B_j x_j
+        dec_end = jnp.exp(cum_c[:, -1:, :] - cum_c)  # (b, Q, H)
+        dB = (dt_c * dec_end)[..., None] * B_c[:, :, None, :]  # (b,Q,H,n)
+        S_inj = jnp.einsum("bqhn,bqhp->bhpn", dB, x_c)
+        a_c = jnp.exp(cum_c[:, -1, :])               # (b, H)
+        S_new = a_c[:, :, None, None] * S_prev + S_inj
+        return S_new, y_c
+
+    S0 = jnp.zeros((b, H, P, n), jnp.float32)
+    scan_in = (xh.transpose(1, 0, 2, 3, 4), dt.transpose(1, 0, 2, 3),
+               Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3),
+               cum.transpose(1, 0, 2, 3))
+    # remat the chunk body: the (b, Q, Q, H) decay/M tiles are recomputed
+    # in backward instead of being saved once per chunk iteration.
+    S_fin, ys = jax.lax.scan(jax.checkpoint(scan_body), S0, scan_in)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, H, P)
+    y = y + params["d_skip"][None, None, :, None] * xh.reshape(b, s, H, P)
+    y = y.reshape(b, s, d_inner).astype(x_in.dtype)
+    y = _gated_norm(z, y, params["norm_z"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state:
+        return out, {"ssm": S_fin, "conv": conv_state.astype(x_in.dtype)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def mamba_state_spec(cfg: ModelConfig, batch: int, dtype
+                     ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, tuple]]:
+    d_inner, H, d_conv = _dims(cfg)
+    P, n, W = cfg.ssm.head_dim, cfg.ssm.state_dim, cfg.ssm.conv_width
+    spec = {
+        "ssm": jax.ShapeDtypeStruct((batch, H, P, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, W - 1, d_conv), dtype),
+    }
+    axes = {"ssm": ("batch", None, None, None),
+            "conv": ("batch", None, None)}
+    return spec, axes
+
+
+def mamba_decode(params: Params, x_in: jnp.ndarray, cfg: ModelConfig, *,
+                 state: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token step. x_in: (b, 1, d)."""
+    b = x_in.shape[0]
+    n, P = cfg.ssm.state_dim, cfg.ssm.head_dim
+    d_inner, H, d_conv = _dims(cfg)
+
+    proj = jnp.einsum("bsd,de->bse", x_in, params["in_proj"])[:, 0]
+    z, xs, B, C, dt = _split_in_proj(cfg, proj)
+
+    xbc = jnp.concatenate([xs, B, C], axis=-1)               # (b, d_conv)
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (b,W,dc)
+    w = params["conv_w"]
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                      w.astype(jnp.float32))
+    conv = jax.nn.silu(conv).astype(x_in.dtype)
+    new_conv = hist[:, 1:, :]
+    xs = conv[..., :d_inner]
+    B = conv[..., d_inner:d_inner + n].astype(jnp.float32)
+    C = conv[..., d_inner + n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,H)
+    A = -jnp.exp(params["a_log"])
+    a = jnp.exp(dt * A[None, :])                               # (b,H)
+    xh = xs.reshape(b, H, P).astype(jnp.float32)
+
+    S = state["ssm"]
+    S_new = (a[:, :, None, None] * S
+             + (dt[:, :, None, None]
+                * xh[..., None] * B[:, None, None, :]))
+    y = jnp.einsum("bn,bhpn->bhp", C, S_new)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x_in.dtype)
+    y = _gated_norm(z[:, None, :], y, params["norm_z"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"ssm": S_new, "conv": new_conv}

@@ -1,0 +1,419 @@
+"""Decoder-only LM assembler: composes attention / local-attention / MoE /
+Mamba2 / RWKV6 / shared-attention blocks according to cfg.block_pattern,
+scanning over repeated pattern groups for compile-time compactness.
+
+Params layout:
+  embed.table           (V, d)
+  blocks.p<i>.*         per pattern position i, leaves stacked over groups
+  shared.*              Zamba2-style shared-weight attention block (optional)
+  final_norm.scale
+(lm head tied to embed.table unless cfg.tie_embeddings=False)
+
+Caches (decode) mirror the block layout: cache["p<i>"] leaves stacked over
+groups. Attention positions hold {k, v}; mamba2 {ssm, conv}; rwkv6
+{wkv, shift_t, shift_c}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (BLOCK_ATTN, BLOCK_LOCAL_ATTN, BLOCK_MAMBA2,
+                               BLOCK_RWKV6, BLOCK_SHARED_ATTN, ModelConfig)
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (Params, cross_entropy, dtype_of, embed_init,
+                                 rmsnorm_apply, rmsnorm_axes, rmsnorm_init)
+
+ATTN_KINDS = (BLOCK_ATTN, BLOCK_LOCAL_ATTN, BLOCK_SHARED_ATTN)
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int]:
+    pat = cfg.block_pattern
+    assert cfg.num_layers % len(pat) == 0, (
+        f"{cfg.name}: num_layers {cfg.num_layers} % pattern {len(pat)} != 0")
+    return pat, cfg.num_layers // len(pat)
+
+
+# ---------------------------------------------------------------------------
+# per-position block init / axes
+# ---------------------------------------------------------------------------
+
+def _block_init(key, kind: str, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind in (BLOCK_ATTN, BLOCK_LOCAL_ATTN):
+        p: Params = {"norm1": rmsnorm_init(cfg.d_model, dtype),
+                     "attn": attn.attn_init(k1, cfg, dtype),
+                     "norm2": rmsnorm_init(cfg.d_model, dtype)}
+        if cfg.moe.enabled:
+            p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = mlp_mod.mlp_init(k2, cfg, dtype)
+        return p
+    if kind == BLOCK_MAMBA2:
+        return {"norm1": rmsnorm_init(cfg.d_model, dtype),
+                "mamba": ssm_mod.mamba_init(k1, cfg, dtype)}
+    if kind == BLOCK_RWKV6:
+        return {"norm1": rmsnorm_init(cfg.d_model, dtype),
+                "time": rwkv_mod.timemix_init(k1, cfg, dtype),
+                "norm2": rmsnorm_init(cfg.d_model, dtype),
+                "channel": rwkv_mod.channelmix_init(k2, cfg, dtype)}
+    if kind == BLOCK_SHARED_ATTN:
+        return {}  # weights live in params["shared"]
+    raise ValueError(kind)
+
+
+def _block_axes(kind: str, cfg: ModelConfig) -> Params:
+    if kind in (BLOCK_ATTN, BLOCK_LOCAL_ATTN):
+        p: Params = {"norm1": rmsnorm_axes(), "attn": attn.attn_axes(cfg),
+                     "norm2": rmsnorm_axes()}
+        if cfg.moe.enabled:
+            p["moe"] = moe_mod.moe_axes(cfg)
+        else:
+            p["mlp"] = mlp_mod.mlp_axes(cfg)
+        return p
+    if kind == BLOCK_MAMBA2:
+        return {"norm1": rmsnorm_axes(), "mamba": ssm_mod.mamba_axes(cfg)}
+    if kind == BLOCK_RWKV6:
+        return {"norm1": rmsnorm_axes(), "time": rwkv_mod.timemix_axes(cfg),
+                "norm2": rmsnorm_axes(),
+                "channel": rwkv_mod.channelmix_axes(cfg)}
+    if kind == BLOCK_SHARED_ATTN:
+        return {}
+    raise ValueError(kind)
+
+
+def _stack_leading(trees):
+    if not trees or not trees[0]:
+        return {}
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def prepend_axis(tree, name=None):
+    """Prepend a logical axis (default replicated) to every axes-tuple leaf."""
+    return jax.tree.map(
+        lambda t: (name,) + t,
+        tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class TransformerLM:
+    """Decoder-only LM over an arbitrary block pattern."""
+
+    def __init__(self, cfg: ModelConfig, *, attn_impl: str = "blocked",
+                 rwkv_mode: str = "direct", causal_skip: bool = False,
+                 moe_dispatch: str = "onehot"):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.rwkv_mode = rwkv_mode
+        self.causal_skip = causal_skip
+        self.moe_dispatch = moe_dispatch
+        self.pattern, self.num_groups = _pattern(cfg)
+        self.has_shared = BLOCK_SHARED_ATTN in self.pattern
+        self.takes_embeds = cfg.frontend != "none"
+        # set by launch/steps.py: re-asserts activation sharding at every
+        # pattern-group boundary (GSPMD's while-loop propagation gives up
+        # on deep scans otherwise and silently replicates the carry)
+        self.act_constraint = None
+        # serving opt: compute prefill logits only at the final position
+        # (skips the (b, s, V) projection -- decode only needs the last)
+        self.prefill_last_only = False
+
+    # -- params -------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg.dtype)
+        nkeys = self.num_groups * len(self.pattern) + 3
+        keys = jax.random.split(key, nkeys)
+        params: Params = {
+            "embed": {"table": embed_init(keys[-1], cfg.padded_vocab_size,
+                                          cfg.d_model, dtype)},
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+            "blocks": {},
+        }
+        ki = 0
+        for i, kind in enumerate(self.pattern):
+            groups = []
+            for _ in range(self.num_groups):
+                groups.append(_block_init(keys[ki], kind, cfg, dtype))
+                ki += 1
+            params["blocks"][f"p{i}"] = _stack_leading(groups)
+        if self.has_shared:
+            params["shared"] = _shared_init(keys[-2], cfg, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {"w": embed_init(
+                keys[-3], cfg.padded_vocab_size, cfg.d_model, dtype)}
+        return params
+
+    def param_axes(self) -> Params:
+        cfg = self.cfg
+        axes: Params = {
+            "embed": {"table": ("vocab", "fsdp_embed")},
+            "final_norm": rmsnorm_axes(),
+            "blocks": {},
+        }
+        for i, kind in enumerate(self.pattern):
+            ax = _block_axes(kind, cfg)
+            axes["blocks"][f"p{i}"] = prepend_axis(ax) if ax else {}
+        if self.has_shared:
+            axes["shared"] = _shared_axes(cfg)
+        if not cfg.tie_embeddings:
+            axes["lm_head"] = {"w": ("vocab", "fsdp_embed")}
+        return axes
+
+    # -- embedding / logits ---------------------------------------------------
+    def embed_inputs(self, params: Params, inputs: jnp.ndarray) -> jnp.ndarray:
+        # int inputs = token ids; float inputs = precomputed frontend embeds
+        # (VLM patch embeddings / audio frames). VLM decode still uses ids.
+        if jnp.issubdtype(inputs.dtype, jnp.integer):
+            return jnp.take(params["embed"]["table"], inputs, axis=0)
+        return inputs.astype(dtype_of(self.cfg.dtype))
+
+    def logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["lm_head"]["w"])
+        out = jnp.einsum("bsd,vd->bsv", x, table).astype(jnp.float32)
+        if cfg.padded_vocab_size != cfg.vocab_size:
+            ids = jnp.arange(cfg.padded_vocab_size)
+            out = jnp.where(ids[None, None, :] < cfg.vocab_size, out, -1e30)
+        return out
+
+    # -- one pattern-group, full sequence -------------------------------------
+    def _group_fullseq(self, x: jnp.ndarray, group_params: Params,
+                       shared: Optional[Params], *, positions,
+                       collect_cache: bool, cache_len: int = 0):
+        cfg = self.cfg
+        caches: Dict[str, Any] = {}
+        aux_total = jnp.zeros((), jnp.float32)
+        remat = (jax.checkpoint if (cfg.remat == "full"
+                                    and not collect_cache)
+                 else (lambda f: f))
+        for i, kind in enumerate(self.pattern):
+            bp = group_params.get(f"p{i}", {})
+            key = f"p{i}"
+            if kind in ATTN_KINDS:
+                p = shared if kind == BLOCK_SHARED_ATTN else bp
+                window = cfg.sliding_window if kind == BLOCK_LOCAL_ATTN else 0
+
+                def attn_block(x, p):
+                    h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+                    y, kv = attn.attn_apply(
+                        p["attn"], h, cfg, positions=positions, causal=True,
+                        window=window, impl=self.attn_impl,
+                        kv_out=collect_cache, causal_skip=self.causal_skip)
+                    x = x + y
+                    h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+                    if "moe" in p:
+                        y, aux = moe_mod.moe_apply(p["moe"], h, cfg,
+                                                   self.moe_dispatch)
+                    else:
+                        y = mlp_mod.mlp_apply(p["mlp"], h, cfg)
+                        aux = jnp.zeros((), jnp.float32)
+                    return x + y, kv, aux
+
+                x, kv, aux = remat(attn_block)(x, p)
+                aux_total = aux_total + aux
+                if collect_cache:
+                    empty = attn.init_kv_cache(
+                        cfg, x.shape[0], cache_len or x.shape[1],
+                        window, x.dtype)
+                    caches[key] = attn.fill_kv_cache(empty, kv, window)
+            elif kind == BLOCK_MAMBA2:
+                if collect_cache:
+                    h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+                    y, st = ssm_mod.mamba_apply(bp["mamba"], h, cfg,
+                                                return_state=True)
+                    caches[key] = st
+                    x = x + y
+                else:
+                    def mamba_block(x, bp):
+                        h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+                        return x + ssm_mod.mamba_apply(bp["mamba"], h, cfg)
+                    x = remat(mamba_block)(x, bp)
+            elif kind == BLOCK_RWKV6:
+                if collect_cache:
+                    h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+                    y, st = rwkv_mod.timemix_apply(
+                        bp["time"], h, cfg, mode=self.rwkv_mode,
+                        return_state=True)
+                    x = x + y
+                    h = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+                    x = x + rwkv_mod.channelmix_apply(bp["channel"], h, cfg)
+                    st["shift_c"] = h[:, -1]
+                    caches[key] = st
+                else:
+                    def rwkv_block(x, bp):
+                        h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+                        x = x + rwkv_mod.timemix_apply(
+                            bp["time"], h, cfg, mode=self.rwkv_mode)
+                        h = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+                        return x + rwkv_mod.channelmix_apply(
+                            bp["channel"], h, cfg)
+                    x = remat(rwkv_block)(x, bp)
+            else:
+                raise ValueError(kind)
+        return x, caches, aux_total
+
+    # -- full-sequence entry points -------------------------------------------
+    def forward(self, params: Params, inputs: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Teacher-forced forward. Returns (logits, moe_aux)."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, inputs)
+        positions = jnp.arange(x.shape[1])
+        shared = params.get("shared")
+
+        def body(x, gp):
+            if self.act_constraint is not None:
+                x = self.act_constraint(x)
+            x, _, aux = self._group_fullseq(x, gp, shared,
+                                            positions=positions,
+                                            collect_cache=False)
+            return x, aux
+
+        x, auxes = jax.lax.scan(body, x, params["blocks"])
+        return self.logits(params, x), jnp.sum(auxes)
+
+    def prefill(self, params: Params, inputs: jnp.ndarray,
+                cache_len: int = 0) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Process a prompt; return (logits, cache stacked over groups).
+
+        ``cache_len``: KV-cache capacity (>= prompt length) so decode can
+        continue past the prompt. 0 = exactly the prompt length.
+        """
+        x = self.embed_inputs(params, inputs)
+        positions = jnp.arange(x.shape[1])
+        shared = params.get("shared")
+
+        def body(x, gp):
+            if self.act_constraint is not None:
+                x = self.act_constraint(x)
+            x, caches, _ = self._group_fullseq(x, gp, shared,
+                                               positions=positions,
+                                               collect_cache=True,
+                                               cache_len=cache_len)
+            return x, caches
+
+        x, cache = jax.lax.scan(body, x, params["blocks"])
+        if self.prefill_last_only:
+            return self.logits(params, x[:, -1:]), cache
+        return self.logits(params, x), cache
+
+    def loss_fn(self, params: Params, batch: Dict[str, jnp.ndarray]
+                ) -> jnp.ndarray:
+        inputs = batch["embeds"] if self.takes_embeds else batch["tokens"]
+        logits, aux = self.forward(params, inputs)
+        loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return loss + self.cfg.moe.router_aux_weight * aux
+
+    # -- decode ----------------------------------------------------------------
+    def cache_spec(self, batch: int, seq_len: int
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(ShapeDtypeStruct tree, logical-axes tree), stacked over groups."""
+        cfg = self.cfg
+        dtype = dtype_of(cfg.dtype)
+        spec: Dict[str, Any] = {}
+        axes: Dict[str, Any] = {}
+        for i, kind in enumerate(self.pattern):
+            key = f"p{i}"
+            if kind in ATTN_KINDS:
+                window = cfg.sliding_window if kind == BLOCK_LOCAL_ATTN else 0
+                s, a = attn.kv_cache_spec(cfg, batch, seq_len, window, dtype)
+            elif kind == BLOCK_MAMBA2:
+                s, a = ssm_mod.mamba_state_spec(cfg, batch, dtype)
+            elif kind == BLOCK_RWKV6:
+                s, a = rwkv_mod.rwkv_state_spec(cfg, batch, dtype)
+            else:
+                raise ValueError(kind)
+            spec[key] = jax.tree.map(
+                lambda t: jax.ShapeDtypeStruct((self.num_groups,) + t.shape,
+                                               t.dtype), s)
+            axes[key] = prepend_axis(a)
+        return spec, axes
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict[str, Any]:
+        spec, _ = self.cache_spec(batch, seq_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def decode_step(self, params: Params, inputs: jnp.ndarray,
+                    pos: jnp.ndarray, cache: Dict[str, Any]
+                    ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """inputs: tokens (b, 1) int32 (or embeds (b, 1, d)); pos: () int32.
+
+        Returns (logits (b, 1, V), new cache).
+        """
+        cfg = self.cfg
+        x = self.embed_inputs(params, inputs)
+        shared = params.get("shared")
+
+        def body(x, scan_in):
+            if self.act_constraint is not None:
+                x = self.act_constraint(x)
+            gp, gcache = scan_in
+            new_caches: Dict[str, Any] = {}
+            for i, kind in enumerate(self.pattern):
+                key = f"p{i}"
+                bp = gp.get(key, {})
+                c = gcache[key]
+                if kind in ATTN_KINDS:
+                    p = shared if kind == BLOCK_SHARED_ATTN else bp
+                    window = (cfg.sliding_window
+                              if kind == BLOCK_LOCAL_ATTN else 0)
+                    h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+                    y, nc = attn.attn_decode(p["attn"], h, cfg, pos=pos,
+                                             cache=c, window=window)
+                    x = x + y
+                    h = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+                    if "moe" in p:
+                        y, _ = moe_mod.moe_apply(p["moe"], h, cfg,
+                                                 self.moe_dispatch)
+                    else:
+                        y = mlp_mod.mlp_apply(p["mlp"], h, cfg)
+                    x = x + y
+                    new_caches[key] = nc
+                elif kind == BLOCK_MAMBA2:
+                    h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+                    y, nc = ssm_mod.mamba_decode(bp["mamba"], h, cfg, state=c)
+                    x = x + y
+                    new_caches[key] = nc
+                elif kind == BLOCK_RWKV6:
+                    h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+                    y, nc = rwkv_mod.timemix_decode(bp["time"], h, cfg,
+                                                    state=c)
+                    x = x + y
+                    h = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+                    y, nc = rwkv_mod.channelmix_decode(bp["channel"], h, cfg,
+                                                       state=nc)
+                    x = x + y
+                    new_caches[key] = nc
+                else:
+                    raise ValueError(kind)
+            return x, new_caches
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return self.logits(params, x), new_cache
+
+
+def _shared_init(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.attn_init(k1, cfg, dtype),
+            "norm2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_mod.mlp_init(k2, cfg, dtype)}
+
+
+def _shared_axes(cfg: ModelConfig) -> Params:
+    return {"norm1": rmsnorm_axes(), "attn": attn.attn_axes(cfg),
+            "norm2": rmsnorm_axes(), "mlp": mlp_mod.mlp_axes(cfg)}

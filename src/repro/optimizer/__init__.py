@@ -1,0 +1,9 @@
+from repro.optimizer import adamw  # noqa: F401
+from repro.optimizer.adamw import (  # noqa: F401
+    AdamWState,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    schedule,
+)

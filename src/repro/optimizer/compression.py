@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback (DP all-reduce shrink).
+
+At pod scale the data-parallel gradient all-reduce is the dominant
+inter-pod collective. Quantizing gradients to int8 with per-tensor scales
+cuts those bytes 4x (bf16) / 2x (f32); the residual (quantization error)
+is fed back into the next step's gradient so the scheme stays unbiased in
+the long run (error-feedback SGD, 1-bit Adam lineage).
+
+Usage inside a train step:
+    grads_q, new_residual = compress_decompress(grads, residual)
+    ... apply optimizer on grads_q ...
+
+Under pjit the quantize/dequantize ops shard like the gradients; XLA
+places the all-reduce on the int8 tensors when compression is enabled in
+the step function (see runtime/train_loop.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Error-feedback int8 round trip. Returns (grads_hat, new_residual)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = _quantize(corrected)
+        ghat = _dequantize(q, scale)
+        return ghat, corrected - ghat
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tree.unflatten([o[0] for o in outs]),
+            tree.unflatten([o[1] for o in outs]))
+
+
+def compression_ratio(params: Any, from_dtype=jnp.float32) -> float:
+    """Bytes saved on the wire for one gradient all-reduce."""
+    return jnp.dtype(from_dtype).itemsize / jnp.dtype(jnp.int8).itemsize

@@ -1,0 +1,29 @@
+"""Minimal metrics sink: in-memory ring + optional JSONL file."""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from pathlib import Path
+from typing import Dict, Optional
+
+
+class Metrics:
+    def __init__(self, path: Optional[str] = None, keep: int = 10_000):
+        self.path = Path(path) if path else None
+        self.ring: deque = deque(maxlen=keep)
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = self.path.open("a")
+        else:
+            self._fh = None
+
+    def log(self, step: int, **values) -> None:
+        rec = {"step": step, "time": time.time(), **values}
+        self.ring.append(rec)
+        if self._fh:
+            self._fh.write(json.dumps(rec, default=float) + "\n")
+            self._fh.flush()
+
+    def last(self) -> Optional[Dict]:
+        return self.ring[-1] if self.ring else None

@@ -1,0 +1,170 @@
+"""Distributed training driver: pjit step + checkpoint/restart fault
+tolerance + straggler mitigation + optional int8 gradient compression.
+
+The same driver runs the quickstart 100M-model example on one CPU device
+and the production mesh on a pod — the step function and shardings come
+from launch/steps.py either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.config.base import (InputShape, ModelConfig, OptimizerConfig,
+                               TrainConfig)
+from repro.data.loader import BatchSpec, SyntheticLMLoader, device_batch
+from repro.launch.steps import (make_train_plan, rules_for,
+                                shardings_for_tree)
+from repro.models import build_model, input_axes
+from repro.optimizer import adamw, compression
+from repro.runtime.fault import (FailureDetector, StragglerMonitor,
+                                 WorkerFailure)
+from repro.runtime.metrics import Metrics
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int
+    final_loss: float
+    restarts: int
+    straggler_events: int
+    losses: list
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, train_cfg: TrainConfig, mesh,
+                 shape: Optional[InputShape] = None,
+                 metrics_path: Optional[str] = None,
+                 attn_impl: str = "flash",
+                 fail_injector: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.train_cfg = train_cfg
+        self.mesh = mesh
+        self.shape = shape or train_cfg.shape
+        self.model = build_model(cfg, attn_impl=attn_impl)
+        self.metrics = Metrics(metrics_path)
+        self.detector = FailureDetector()
+        self.stragglers = StragglerMonitor()
+        self.fail_injector = fail_injector
+        self.compress = train_cfg.optimizer.compress_grads
+
+        rs = rules_for(cfg, self.shape, mesh)
+        self.ruleset = rs
+        params_sds = jax.eval_shape(self.model.init, jax.random.key(0))
+        self.param_shardings = shardings_for_tree(
+            rs, self.model.param_axes(), params_sds)
+        self.batch_shardings = shardings_for_tree(
+            rs, input_axes(cfg, self.shape),
+            {"tokens": jax.ShapeDtypeStruct(
+                (self.shape.global_batch, self.shape.seq_len), jnp.int32),
+             "labels": jax.ShapeDtypeStruct(
+                (self.shape.global_batch, self.shape.seq_len), jnp.int32)})
+
+        opt_cfg = train_cfg.optimizer
+        model = self.model
+        use_compress = self.compress
+
+        def train_step(state, batch):
+            params, opt_state, residual = state
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            if use_compress:
+                grads, residual = compression.compress_decompress(
+                    grads, residual)
+            params, opt_state, metrics = adamw.apply_updates(
+                opt_cfg, params, grads, opt_state)
+            metrics["loss"] = loss
+            return (params, opt_state, residual), metrics
+
+        self._step = jax.jit(train_step, donate_argnums=(0,))
+        self.loader = SyntheticLMLoader(
+            BatchSpec(self.shape.global_batch, self.shape.seq_len + 1,
+                      cfg.vocab_size), seed=train_cfg.seed)
+        self.checkpointer = ckpt.AsyncCheckpointer(
+            train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints)
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self):
+        with self.mesh:
+            params = jax.jit(
+                self.model.init,
+                out_shardings=self.param_shardings)(jax.random.key(
+                    self.train_cfg.seed))
+        opt_state = adamw.init(self.train_cfg.optimizer, params)
+        residual = (compression.init_residual(params) if self.compress
+                    else jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                                      {}))
+        return (params, opt_state, residual)
+
+    def restore_latest(self):
+        step = ckpt.latest_step(self.train_cfg.checkpoint_dir)
+        if step is None:
+            return None, 0
+        state = self.init_state()
+        restored, manifest = ckpt.restore(
+            self.train_cfg.checkpoint_dir, step, state)
+        return restored, step
+
+    def mesh_signature(self) -> str:
+        return "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, num_steps: int, resume: bool = True) -> TrainerReport:
+        state, start_step = (self.restore_latest() if resume
+                             else (None, 0))
+        if state is None:
+            state = self.init_state()
+            start_step = 0
+        restarts = 0
+        losses = []
+        step = start_step
+        while step < num_steps:
+            try:
+                t0 = time.time()
+                if self.fail_injector is not None:
+                    self.fail_injector(step)
+                batch = device_batch(self.loader.batch(step),
+                                     self.batch_shardings)
+                with self.mesh:
+                    state, metrics = self._step(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                ev = self.stragglers.observe(step, dt)
+                self.metrics.log(step, loss=loss, step_time_s=dt,
+                                 straggler=bool(ev),
+                                 grad_norm=float(metrics["grad_norm"]))
+                losses.append(loss)
+                step += 1
+                if step % self.train_cfg.checkpoint_every == 0:
+                    if self.train_cfg.async_checkpoint:
+                        self.checkpointer.save(
+                            step, state,
+                            metadata={"loss": loss},
+                            mesh_signature=self.mesh_signature())
+                    else:
+                        ckpt.save(self.train_cfg.checkpoint_dir, step,
+                                  state, {"loss": loss},
+                                  self.mesh_signature())
+            except Exception as exc:  # noqa: BLE001 — fault boundary
+                self.checkpointer.wait()
+                latest = ckpt.latest_step(self.train_cfg.checkpoint_dir)
+                decision = self.detector.on_failure(exc, latest)
+                if decision.action == "raise":
+                    raise
+                restarts += 1
+                self.metrics.log(step, restart=True,
+                                 reason=decision.reason)
+                state, step = self.restore_latest()
+                if state is None:
+                    state, step = self.init_state(), 0
+        self.checkpointer.wait()
+        return TrainerReport(steps_run=num_steps - start_step,
+                             final_loss=losses[-1] if losses else float("nan"),
+                             restarts=restarts,
+                             straggler_events=len(self.stragglers.events),
+                             losses=losses)

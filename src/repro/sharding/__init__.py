@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    FSDP_RULES,
+    FallbackEvent,
+    RuleSet,
+    tree_shardings,
+)

@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (maxtext-style) with divisibility fallback.
+
+Every tensor dimension in the framework is annotated with a *logical* name
+("batch", "heads", "mlp", ...). A rule table maps logical names to mesh
+axes. `logical_to_spec` resolves a tuple of logical names into a
+PartitionSpec against a concrete mesh, **dropping** any mesh axis that does
+not evenly divide the dimension (replicating instead) and recording the
+fallback so the roofline/perf loop can see what was left on the table.
+
+This is what lets awkward head counts (smollm 15H/5KV on a 16-way model
+axis) compile instead of erroring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssignment = Union[str, Tuple[str, ...], None]
+
+# Default logical->mesh rules. "fsdp" behaviour: weights' embed/mlp dims are
+# additionally sharded over the data axis when enabled (ZeRO-3 style).
+DEFAULT_RULES: Dict[str, AxisAssignment] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "act_mlp": "model",
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_vocab": "model",
+    "kv_seq": None,
+    # weights (tensor parallel)
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv_out": "model",      # fused head*dim output dim
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "head_dim": None,
+    "state": None,           # SSM state dim
+    "conv": None,
+    "inner": "model",        # mamba/rwkv inner channels
+    # fsdp shard dim for weights (opt-in per arch)
+    "fsdp_embed": None,
+}
+
+FSDP_RULES: Dict[str, AxisAssignment] = dict(DEFAULT_RULES)
+FSDP_RULES.update({"fsdp_embed": "data"})
+
+
+@dataclasses.dataclass
+class FallbackEvent:
+    logical: str
+    dim: int
+    axis: str
+    axis_size: int
+
+
+class RuleSet:
+    """Resolves logical dimension names into PartitionSpecs for a mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, AxisAssignment]] = None,
+                 overrides: Optional[Dict[str, AxisAssignment]] = None):
+        self.mesh = mesh
+        self.rules: Dict[str, AxisAssignment] = dict(rules or DEFAULT_RULES)
+        if overrides:
+            self.rules.update(overrides)
+        self.fallbacks: List[FallbackEvent] = []
+
+    def _axis_size(self, axis: str) -> int:
+        return self.mesh.shape.get(axis, 1)
+
+    def _resolve_dim(self, logical: Optional[str], dim: Optional[int],
+                     used: set) -> Optional[Union[str, Tuple[str, ...]]]:
+        if logical is None:
+            return None
+        assignment = self.rules.get(logical)
+        if assignment is None:
+            return None
+        axes = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+        kept: List[str] = []
+        size_so_far = 1
+        for ax in axes:
+            if ax not in self.mesh.shape or ax in used:
+                continue
+            axsz = self._axis_size(ax)
+            if dim is not None and dim % (size_so_far * axsz) != 0:
+                self.fallbacks.append(FallbackEvent(logical, dim, ax, axsz))
+                continue
+            kept.append(ax)
+            size_so_far *= axsz
+        for ax in kept:
+            used.add(ax)
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else tuple(kept)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical axis names (+ optional concrete shape) to a spec."""
+        used: set = set()
+        parts = []
+        for i, name in enumerate(logical_axes):
+            dim = None if shape is None else shape[i]
+            parts.append(self._resolve_dim(name, dim, used))
+        # trim trailing Nones for a tidy spec
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def fallback_report(self) -> List[str]:
+        seen = set()
+        out = []
+        for ev in self.fallbacks:
+            key = (ev.logical, ev.dim, ev.axis)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(
+                f"replicated {ev.logical}(dim={ev.dim}) over mesh axis "
+                f"{ev.axis!r}(size={ev.axis_size}): not divisible")
+        return out
+
+
+def tree_shardings(ruleset: RuleSet, logical_tree, shape_tree):
+    """Map a pytree of logical-axis tuples (+ matching ShapeDtypeStructs)
+    to a pytree of NamedShardings."""
+    def _one(axes, sds):
+        return ruleset.sharding(axes, None if sds is None else sds.shape)
+    return jax.tree.map(
+        _one, logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

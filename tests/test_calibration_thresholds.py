@@ -1,0 +1,155 @@
+"""Algorithm 1 (calibration) + Algorithm 2 (threshold selection) tests,
+including the frontier-vs-brute-force equivalence and hypothesis
+properties of the staircase walk."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.base import CascadeConfig
+from repro.core import calibration as C
+from repro.core import thresholds as T
+
+
+def _make_scores(seed=0, n=4000, sep=2.0, pos_frac=0.3):
+    rng = np.random.default_rng(seed)
+    npos = int(n * pos_frac)
+    pos = 1 / (1 + np.exp(-(rng.normal(sep / 2, 1.0, npos))))
+    neg = 1 / (1 + np.exp(-(rng.normal(-sep / 2, 1.0, n - npos))))
+    scores = np.concatenate([pos, neg])
+    labels = np.concatenate([np.ones(npos, bool), np.zeros(n - npos, bool)])
+    perm = rng.permutation(n)
+    return scores[perm], labels[perm]
+
+
+def _calibrate(scores, labels, cfg=None):
+    cfg = cfg or CascadeConfig()
+    rng = np.random.default_rng(0)
+    return C.calibrate(scores, lambda idx: labels[idx], cfg, rng)
+
+
+def test_stratified_sample_proportional():
+    scores, labels = _make_scores()
+    edges = C.discretize(64)
+    rng = np.random.default_rng(0)
+    idx = C.stratified_sample(scores, 0.1, edges, rng)
+    # every populated bin is represented
+    bins_all = np.unique(np.clip(np.searchsorted(edges, scores) - 1, 0, 63))
+    bins_sample = np.unique(np.clip(np.searchsorted(edges, scores[idx]) - 1,
+                                    0, 63))
+    assert set(bins_all) <= set(bins_sample)
+    # no duplicate indices
+    assert len(np.unique(idx)) == len(idx)
+
+
+def test_jitter_fills_empty_bins():
+    rng = np.random.default_rng(0)
+    mass = np.array([5.0, 0.0, 3.0, 0.0, 2.0])
+    out = C._jitter(mass, 0.05, rng)
+    assert (out > 0).all()
+    assert out[0] == 5.0 and out[2] == 3.0
+
+
+def test_moving_average_preserves_mass_approx():
+    rng = np.random.default_rng(0)
+    x = rng.random(64)
+    y = C._moving_average(x, 5)
+    np.testing.assert_allclose(x.sum(), y.sum(), rtol=0.05)
+
+
+def test_density_cdf_monotone_and_normalized():
+    scores, labels = _make_scores()
+    calib = _calibrate(scores, labels)
+    for d in (calib.pdf_pos, calib.pdf_neg):
+        assert (np.diff(d.cdf_edges) >= -1e-12).all()
+        assert abs(d.cdf_edges[-1] - 1.0) < 1e-9
+        assert d.cdf(0.0) <= 1e-9
+
+
+def test_frontier_matches_brute_force():
+    """Algorithm 2's staircase equals the O(B^2) optimum."""
+    for seed in range(5):
+        scores, labels = _make_scores(seed=seed, sep=2.5)
+        calib = _calibrate(scores, labels)
+        for alpha in (0.85, 0.9, 0.95):
+            fast = T.select_thresholds(calib, alpha)
+            brute = T.brute_force_thresholds(calib, alpha)
+            assert fast.feasible == brute.feasible
+            if fast.feasible:
+                assert fast.unfiltered <= brute.unfiltered + 1e-9, (
+                    seed, alpha, fast, brute)
+
+
+def test_selected_thresholds_meet_estimated_target():
+    scores, labels = _make_scores(sep=3.0)
+    calib = _calibrate(scores, labels)
+    sel = T.select_thresholds(calib, 0.9)
+    assert sel.feasible
+    assert sel.est_accuracy >= 0.9 - 1e-9
+    assert 0.0 <= sel.l <= sel.r <= 1.0
+
+
+def test_better_separation_more_filtering():
+    cfg = CascadeConfig()
+    u = {}
+    for sep in (1.0, 3.0, 5.0):
+        scores, labels = _make_scores(sep=sep)
+        calib = _calibrate(scores, labels, cfg)
+        sel = T.select_thresholds(calib, 0.9)
+        u[sep] = sel.unfiltered if sel.feasible else 1.0
+    assert u[5.0] <= u[3.0] <= u[1.0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), sep=st.floats(0.5, 5.0),
+       alpha=st.floats(0.8, 0.97), pos_frac=st.floats(0.1, 0.6))
+def test_frontier_optimality_property(seed, sep, alpha, pos_frac):
+    scores, labels = _make_scores(seed=seed, n=1500, sep=sep,
+                                  pos_frac=pos_frac)
+    cfg = CascadeConfig(num_bins=32)
+    calib = _calibrate(scores, labels, cfg)
+    fast = T.select_thresholds(calib, alpha)
+    brute = T.brute_force_thresholds(calib, alpha)
+    assert fast.feasible == brute.feasible
+    if fast.feasible:
+        assert fast.unfiltered <= brute.unfiltered + 1e-9
+
+
+def test_linear_complexity_of_frontier():
+    """Path length is O(bins), not O(bins^2)."""
+    scores, labels = _make_scores(sep=3.0)
+    cfg = CascadeConfig(num_bins=128)
+    calib = _calibrate(scores, labels, cfg)
+    sel = T.select_thresholds(calib, 0.9)
+    assert sel.path_len <= 2 * 128 + 2
+
+
+def test_de_jsd_better_than_beta():
+    """Linear-interp DE beats a Beta fit on the bimodal score
+    distributions bipolar proxies actually produce (paper Table 4)."""
+    rng0 = np.random.default_rng(0)
+    n = 4000
+    main = np.clip(rng0.normal(0.88, 0.05, int(n * 0.8)), 0, 1)
+    tail = np.clip(rng0.normal(0.35, 0.08, n - len(main)), 0, 1)
+    scores = np.concatenate([main, tail])
+    labels = np.ones(n, bool)
+    edges = C.discretize(64)
+    cfg = CascadeConfig()
+    rng = np.random.default_rng(1)
+    idx = C.stratified_sample(scores, 0.05, edges, rng)
+    s_pos = scores[idx][labels[idx]]
+    truth = C.naive_density(scores[labels], edges)
+
+    def jsd(d1, d2):
+        p = d1.pdf / max(d1.pdf.sum(), 1e-12)
+        q = d2.pdf / max(d2.pdf.sum(), 1e-12)
+        m = 0.5 * (p + q)
+
+        def kl(a, b):
+            mask = a > 0
+            return float(np.sum(a[mask] * np.log(a[mask] / np.maximum(
+                b[mask], 1e-12))))
+        return 0.5 * kl(p, m) + 0.5 * kl(q, m)
+
+    ours = C.reconstruct_density(s_pos, edges, cfg, rng)
+    beta = C.beta_fit_density(s_pos, edges)
+    assert jsd(ours, truth) < jsd(beta, truth)

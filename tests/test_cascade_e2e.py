@@ -1,0 +1,137 @@
+"""End-to-end cascade + pipeline behaviour tests (system-level)."""
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import (ScaleDocPipeline, SimulatedOracle, f1_score,
+                        run_cascade)
+from repro.core.cascade import naive_cascade, probe_cascade, supg_cascade
+from repro.core.guarantees import bernstein_epsilon, check_guarantee
+from repro.core.scoring import direct_embedding_scores
+from repro.data import make_corpus, make_query
+
+
+def _scores_and_truth(seed=0, n=4000, sep=3.0, pos_frac=0.3):
+    rng = np.random.default_rng(seed)
+    npos = int(n * pos_frac)
+    pos = 1 / (1 + np.exp(-(rng.normal(sep / 2, 1.0, npos))))
+    neg = 1 / (1 + np.exp(-(rng.normal(-sep / 2, 1.0, n - npos))))
+    scores = np.concatenate([pos, neg])
+    truth = np.concatenate([np.ones(npos, bool), np.zeros(n - npos, bool)])
+    perm = rng.permutation(n)
+    return scores[perm], truth[perm]
+
+
+def test_cascade_meets_target_and_reduces():
+    scores, truth = _scores_and_truth()
+    oracle = SimulatedOracle(truth)
+    cfg = CascadeConfig(accuracy_target=0.9)
+    res = run_cascade(scores, oracle, cfg, ground_truth=truth)
+    assert res.achieved_f1 >= 0.9, res
+    assert res.data_reduction > 0.5, res
+    assert 0.0 <= res.l <= res.r <= 1.0
+
+
+def test_cascade_oracle_region_is_perfect():
+    """Docs inside [l, r] must carry the oracle's labels."""
+    scores, truth = _scores_and_truth()
+    oracle = SimulatedOracle(truth)
+    res = run_cascade(scores, oracle, CascadeConfig(), ground_truth=truth)
+    amb = (scores >= res.l) & (scores <= res.r)
+    assert (res.labels[amb] == truth[amb]).all()
+
+
+def test_cascade_counts_oracle_calls():
+    scores, truth = _scores_and_truth()
+    oracle = SimulatedOracle(truth)
+    res = run_cascade(scores, oracle, CascadeConfig(), ground_truth=truth)
+    assert oracle.calls == res.oracle_calls_online + res.oracle_calls_calib
+    # never label the same doc twice
+    assert oracle.calls == len(oracle.queried)
+
+
+def test_higher_target_costs_more():
+    scores, truth = _scores_and_truth(sep=2.5)
+    calls = {}
+    for alpha in (0.85, 0.95):
+        oracle = SimulatedOracle(truth)
+        run_cascade(scores, oracle,
+                    CascadeConfig(accuracy_target=alpha),
+                    ground_truth=truth)
+        calls[alpha] = oracle.calls
+    assert calls[0.95] >= calls[0.85]
+
+
+def test_exact_match_metric_variant():
+    scores, truth = _scores_and_truth()
+    oracle = SimulatedOracle(truth)
+    res = run_cascade(scores, oracle,
+                      CascadeConfig(metric="exact", accuracy_target=0.93),
+                      ground_truth=truth)
+    assert res.achieved_exact >= 0.93
+
+
+def test_accuracy_maintenance_trials():
+    """Paper Fig 12a (scaled down): ScaleDoc's calibrated cascade meets
+    the target in >=90% of trials; the Naive baseline misses more."""
+    ours_miss, naive_miss = 0, 0
+    trials = 12
+    for t in range(trials):
+        scores, truth = _scores_and_truth(seed=t, sep=2.0)
+        cfg = CascadeConfig(accuracy_target=0.9, seed=t)
+        r1 = run_cascade(scores, SimulatedOracle(truth), cfg,
+                         ground_truth=truth)
+        r2 = naive_cascade(scores, SimulatedOracle(truth), cfg,
+                           ground_truth=truth)
+        ours_miss += r1.achieved_f1 < 0.9
+        naive_miss += r2.achieved_f1 < 0.9
+    # Fig 12a tolerance: rare hairline misses at 5% samples are expected;
+    # the contrast with Naive is the claim
+    assert ours_miss <= max(2, trials // 6), f"ours missed {ours_miss}"
+    assert ours_miss < naive_miss
+
+
+def test_bernstein_epsilon_shrinks_with_n():
+    e1 = bernstein_epsilon(0.05, 0.2, 0.9, 0.05, 100)
+    e2 = bernstein_epsilon(0.05, 0.2, 0.9, 0.05, 10_000)
+    assert e2 < e1
+
+
+def test_guarantee_report_consistency():
+    scores, truth = _scores_and_truth(sep=4.0)
+    # Bernstein needs a decent sample: at n=4000 and a well-separated
+    # proxy the Prop.1 condition certifies; at n=200 it must not
+    rep = check_guarantee(scores, truth, 0.3, 0.7, 0.9, 0.05)
+    assert rep.epsilon > 0
+    assert rep.certified
+    small = check_guarantee(scores[:200], truth[:200], 0.3, 0.7, 0.9, 0.05)
+    assert small.epsilon > rep.epsilon
+
+
+def test_pipeline_end_to_end_beats_direct_embeddings():
+    """Paper Table 3: trained proxy reduces cost below direct matching."""
+    corpus = make_corpus(0, n_docs=2500, dim=128)
+    q = make_query(corpus, 7, selectivity=0.3)
+    pcfg = ProxyConfig(embed_dim=128, hidden_dim=256, latent_dim=128,
+                       proj_dim=64, phase1_steps=120, phase2_steps=120)
+    ccfg = CascadeConfig(accuracy_target=0.9)
+    pipe = ScaleDocPipeline(corpus.embeds, pcfg, ccfg)
+    oracle = SimulatedOracle(q.truth)
+    stats = pipe.query(q.embed, oracle, ground_truth=q.truth, seed=0)
+    assert stats.cascade.achieved_f1 >= 0.88
+    # direct-embedding baseline
+    o2 = SimulatedOracle(q.truth)
+    res2 = run_cascade(direct_embedding_scores(q.embed, corpus.embeds),
+                       o2, ccfg, ground_truth=q.truth)
+    assert stats.cascade.unfiltered_rate <= res2.unfiltered_rate + 0.05
+    # cost accounting sane
+    assert stats.total_flops < 2500 * 5e13  # cheaper than oracle-only
+
+
+def test_probe_and_supg_baselines_run():
+    scores, truth = _scores_and_truth()
+    for fn in (probe_cascade, supg_cascade):
+        res = fn(scores, SimulatedOracle(truth), CascadeConfig(),
+                 ground_truth=truth)
+        assert res.achieved_f1 is not None
+        assert 0 <= res.data_reduction <= 1

@@ -1,0 +1,96 @@
+"""Unit + property tests for ScaleDoc's contrastive objectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses
+from repro.core.encoder import l2_normalize
+
+
+def _rand(n=32, p=16, pos_frac=0.4, seed=0):
+    kq, kd, ky = jax.random.split(jax.random.PRNGKey(seed), 3)
+    zq = jax.random.normal(kq, (p,))
+    zd = jax.random.normal(kd, (n, p))
+    y = (jax.random.uniform(ky, (n,)) < pos_frac).astype(jnp.float32)
+    return zq, zd, y
+
+
+def test_qsim_decreases_when_positives_align():
+    """Moving positives toward the query must lower L_qsim."""
+    zq, zd, y = _rand()
+    aligned = jnp.where(y[:, None] > 0, zq[None, :], zd)
+    base = losses.qsim_loss(zq, zd, y, 0.1)
+    better = losses.qsim_loss(zq, aligned, y, 0.1)
+    assert float(better) < float(base)
+
+
+def test_qsim_perpos_harder_than_sum():
+    """The literal eq.(1) 'sum' variant is satisfied by one good positive;
+    per-positive is strictly >= it (Jensen)."""
+    zq, zd, y = _rand()
+    s = losses.qsim_loss(zq, zd, y, 0.07, variant="sum")
+    pp = losses.qsim_loss(zq, zd, y, 0.07, variant="perpos")
+    assert float(pp) >= float(s) - 1e-6
+
+
+def test_supcon_prefers_clustered():
+    zq, zd, y = _rand(n=24)
+    mu_pos = jax.random.normal(jax.random.PRNGKey(5), (16,))
+    mu_neg = -mu_pos
+    clustered = jnp.where(y[:, None] > 0, mu_pos[None], mu_neg[None])
+    clustered = clustered + 0.05 * zd
+    assert (float(losses.supcon_loss(clustered, y, 0.1))
+            < float(losses.supcon_loss(zd, y, 0.1)))
+
+
+def test_polar_prefers_separated():
+    zq, zd, y = _rand(n=24)
+    mu = l2_normalize(jax.random.normal(jax.random.PRNGKey(5), (16,)))
+    sep = jnp.where(y[:, None] > 0, mu[None], -mu[None]) + 0.05 * zd
+    assert (float(losses.polar_loss(zq, sep, y, 0.1))
+            < float(losses.polar_loss(zq, zd, y, 0.1)))
+
+
+@pytest.mark.parametrize("y", [jnp.zeros(16), jnp.ones(16)])
+def test_degenerate_batches_finite(y):
+    zq = jax.random.normal(jax.random.PRNGKey(0), (8,))
+    zd = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    for fn in (lambda: losses.qsim_loss(zq, zd, y, 0.07),
+               lambda: losses.supcon_loss(zd, y, 0.07),
+               lambda: losses.polar_loss(zq, zd, y, 0.07),
+               lambda: losses.phase2_loss(zq, zd, y, 0.07, 0.2)):
+        v = fn()
+        assert bool(jnp.isfinite(v)), fn
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(4, 48),
+       p=st.integers(4, 32),
+       pos_frac=st.floats(0.05, 0.95))
+def test_losses_finite_and_grads_finite(seed, n, p, pos_frac):
+    """Property: all losses and their grads are finite for any batch."""
+    zq, zd, y = _rand(n=n, p=p, pos_frac=pos_frac, seed=seed)
+
+    def total(zq, zd):
+        return (losses.qsim_loss(zq, zd, y, 0.07)
+                + losses.phase2_loss(zq, zd, y, 0.07, 0.2))
+
+    val, grads = jax.value_and_grad(total, argnums=(0, 1))(zq, zd)
+    assert bool(jnp.isfinite(val))
+    for g in grads:
+        assert bool(jnp.isfinite(g).all())
+
+
+def test_losses_invariant_to_latent_scale():
+    """Cosine-based: scaling all latents must not change any loss."""
+    zq, zd, y = _rand()
+    for fn in (losses.qsim_loss, None):
+        pass
+    a = losses.qsim_loss(zq, zd, y, 0.07)
+    b = losses.qsim_loss(zq * 7.3, zd * 7.3, y, 0.07)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+    a2 = losses.supcon_loss(zd, y, 0.07)
+    b2 = losses.supcon_loss(zd * 3.1, y, 0.07)
+    np.testing.assert_allclose(float(a2), float(b2), rtol=1e-5)

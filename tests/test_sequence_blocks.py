@@ -1,0 +1,152 @@
+"""Unit tests for sequence-mixing blocks against naive recurrent oracles:
+  * blocked online-softmax attention vs einsum attention
+  * Mamba2 chunked SSD vs per-token recurrence
+  * RWKV6 chunked WKV (direct & factored) vs per-token recurrence
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import ModelConfig, SSMConfig, RWKVConfig
+from repro.models import attention as attn_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# blocked attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 7)])
+@pytest.mark.parametrize("sq,skv", [(24, 24), (8, 24)])
+def test_blocked_attention_matches_einsum(causal, window, sq, skv):
+    key = jax.random.PRNGKey(0)
+    b, h, hd = 2, 3, 8
+    q = jax.random.normal(key, (b, sq, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, h, hd))
+    q_offset = skv - sq
+    scale = hd ** -0.5
+
+    iq = jnp.arange(sq) + q_offset
+    ik = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= ik[None, :] <= iq[:, None]
+    if window:
+        mask &= ik[None, :] > iq[:, None] - window
+    ref = attn_mod.attention_einsum(q, k, v, mask, scale)  # (b, sq, h, hd)
+
+    out = attn_mod.attention_blocked(q, k, v, scale, causal=causal,
+                                     window=window, q_offset=q_offset,
+                                     q_block=8, kv_block=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_attention_causal_skip():
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 2, 32, 2, 8
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd))
+    scale = hd ** -0.5
+    base = attn_mod.attention_blocked(q, k, v, scale, causal=True,
+                                      q_block=8, kv_block=8)
+    skip = attn_mod.attention_blocked(q, k, v, scale, causal=True,
+                                      q_block=8, kv_block=8,
+                                      causal_skip=True)
+    np.testing.assert_allclose(np.asarray(skip), np.asarray(base),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD vs naive recurrence
+# ---------------------------------------------------------------------------
+
+def _mamba_cfg(chunk):
+    return ModelConfig(name="t", d_model=32, num_layers=1,
+                       num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                       ssm=SSMConfig(state_dim=8, conv_width=4, head_dim=8,
+                                     expand=2, chunk=chunk),
+                       dtype="float32")
+
+
+def _mamba_naive(params, x_in, cfg):
+    """Per-token recurrence via mamba_decode."""
+    b, s, d = x_in.shape
+    spec, _ = ssm_mod.mamba_state_spec(cfg, b, x_in.dtype)
+    state = jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), spec)
+    outs = []
+    for t in range(s):
+        y, state = ssm_mod.mamba_decode(params, x_in[:, t:t + 1], cfg,
+                                        state=state)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_recurrence(chunk):
+    cfg = _mamba_cfg(chunk)
+    params = ssm_mod.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y_par, st_par = ssm_mod.mamba_apply(params, x, cfg, return_state=True)
+    y_seq, st_seq = _mamba_naive(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_par["ssm"]),
+                               np.asarray(st_seq["ssm"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_par["conv"]),
+                               np.asarray(st_seq["conv"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV vs naive recurrence
+# ---------------------------------------------------------------------------
+
+def _rwkv_cfg():
+    return ModelConfig(name="t", d_model=32, num_layers=1,
+                       num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                       rwkv=RWKVConfig(head_dim=8), dtype="float32")
+
+
+def _rwkv_naive(params, x, cfg):
+    b, s, d = x.shape
+    spec, _ = rwkv_mod.rwkv_state_spec(cfg, b, x.dtype)
+    state = jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), spec)
+    outs = []
+    for t in range(s):
+        y, state = rwkv_mod.timemix_decode(params, x[:, t:t + 1], cfg,
+                                           state=state)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), state
+
+
+@pytest.mark.parametrize("mode", ["direct", "factored"])
+def test_wkv6_chunked_matches_recurrence(mode):
+    cfg = _rwkv_cfg()
+    params = rwkv_mod.timemix_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model)) * 0.5
+    y_par, st = rwkv_mod.timemix_apply(params, x, cfg, mode=mode,
+                                       return_state=True)
+    y_seq, st_seq = _rwkv_naive(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st["wkv"]),
+                               np.asarray(st_seq["wkv"]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_long_context_state_carry():
+    """Chunked path with multiple chunks must equal recurrence (CHUNK=128
+    forces multi-chunk at s=256 ... use small s with monkeypatched chunk)."""
+    cfg = _rwkv_cfg()
+    params = rwkv_mod.timemix_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 160, cfg.d_model)) * 0.3
+    y_par = rwkv_mod.timemix_apply(params, x, cfg, mode="direct")  # 2 chunks
+    y_seq, _ = _rwkv_naive(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=5e-4, atol=5e-4)
