@@ -11,20 +11,21 @@ import numpy as np
 
 from benchmarks.common import (N_DOCS, Rows, default_cascade_cfg,
                                default_proxy_cfg, timed, workload)
-from repro.core import ScaleDocPipeline, SimulatedOracle, run_cascade
+from repro.core import SimulatedOracle, run_cascade
 from repro.core.oracle import ORACLE_FLOPS_PER_DOC, OUR_PROXY_FLOPS_PER_DOC
 from repro.core.scoring import direct_embedding_scores
+from repro.engine import InMemoryStore, ScaleDocEngine
 
 
 def run(rows: Rows) -> dict:
     corpus, queries = workload()
     pcfg, ccfg = default_proxy_cfg(), default_cascade_cfg()
-    pipe = ScaleDocPipeline(corpus.embeds, pcfg, ccfg)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
 
     agg = {"scaledoc": [], "direct": [], "oracle": []}
     for i, q in enumerate(queries):
         oracle = SimulatedOracle(q.truth)
-        stats, us = timed(pipe.query, q.embed, oracle,
+        stats, us = timed(engine.query, q.embed, oracle,
                           ground_truth=q.truth, seed=i)
         c = stats.cascade
         agg["scaledoc"].append({

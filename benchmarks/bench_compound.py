@@ -1,0 +1,78 @@
+"""Compound-predicate benchmark: oracle-call savings of composed
+predicates on a shared ScaleDocEngine vs executing each predicate as an
+independent per-query run (QUEST-style compound optimization).
+
+For pairs of predicates (q1, q2) we compare:
+
+  * independent — two ScaleDocPipeline.query runs (per-query proxy,
+    per-query labels, full collection each);
+  * engine      — one ``engine.filter(p1 & ~p2)`` / ``filter(p1 | p2)``:
+    the cost-ordered plan runs the most decisive leaf first and the
+    second leaf only trains/scores/cascades over still-undecided docs.
+
+Reported per compound form: mean oracle calls for both executions, the
+savings fraction, and the root F1 of the composed result.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (N_DOCS, Rows, default_cascade_cfg,
+                               default_proxy_cfg, workload)
+from repro.core import ScaleDocPipeline, SimulatedOracle
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+
+
+def run(rows: Rows) -> dict:
+    corpus, queries = workload()
+    pcfg, ccfg = default_proxy_cfg(), default_cascade_cfg()
+    pairs = [(queries[0], queries[2]), (queries[1], queries[3]),
+             (queries[4], queries[5])]
+
+    forms = {
+        "and_not": (lambda p1, p2: p1 & ~p2,
+                    lambda t1, t2: t1 & ~t2),
+        "and": (lambda p1, p2: p1 & p2,
+                lambda t1, t2: t1 & t2),
+        "or": (lambda p1, p2: p1 | p2,
+               lambda t1, t2: t1 | t2),
+    }
+    out = {}
+    for form, (build, truth_of) in forms.items():
+        indep_calls, engine_calls, f1s = [], [], []
+        for i, (q1, q2) in enumerate(pairs):
+            # independent per-query executions (legacy pipeline)
+            pipe = ScaleDocPipeline(corpus.embeds, pcfg, ccfg)
+            o1, o2 = SimulatedOracle(q1.truth), SimulatedOracle(q2.truth)
+            pipe.query(q1.embed, o1, ground_truth=q1.truth, seed=i)
+            pipe.query(q2.embed, o2, ground_truth=q2.truth, seed=i + 1)
+            indep_calls.append(o1.calls + o2.calls)
+
+            # composed execution on a shared engine
+            engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+            p1 = SemanticPredicate(q1.embed, SimulatedOracle(q1.truth),
+                                   name="q1")
+            p2 = SemanticPredicate(q2.embed, SimulatedOracle(q2.truth),
+                                   name="q2")
+            res = engine.filter(build(p1, p2),
+                                ground_truth=truth_of(q1.truth, q2.truth),
+                                seed=i)
+            engine_calls.append(res.oracle_calls_total)
+            f1s.append(res.achieved_f1)
+
+        indep = float(np.mean(indep_calls))
+        eng = float(np.mean(engine_calls))
+        savings = 1.0 - eng / indep
+        f1 = float(np.mean(f1s))
+        rows.add(f"compound/{form}", 0.0,
+                 f"indep_calls={indep:.0f};engine_calls={eng:.0f};"
+                 f"savings={savings:.3f};f1={f1:.3f}")
+        out[form] = {"indep_calls": indep, "engine_calls": eng,
+                     "savings": savings, "f1": f1}
+    return out
+
+
+if __name__ == "__main__":
+    rows = Rows()
+    print(run(rows))
+    rows.emit()

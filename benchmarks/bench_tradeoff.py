@@ -9,9 +9,10 @@ import numpy as np
 from benchmarks.common import (N_DOCS, Rows, default_cascade_cfg,
                                default_proxy_cfg, workload)
 from repro.config.base import replace
-from repro.core import ScaleDocPipeline, SimulatedOracle, run_cascade
+from repro.core import SimulatedOracle, run_cascade
 from repro.core.scoring import direct_embedding_scores
 from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine
 
 
 def run(rows: Rows) -> dict:
@@ -20,13 +21,14 @@ def run(rows: Rows) -> dict:
     out = {"alpha": {}, "selectivity": {}}
 
     # accuracy-cost tradeoff (2 queries x alpha sweep)
-    pipe = ScaleDocPipeline(corpus.embeds, pcfg, default_cascade_cfg())
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg,
+                            default_cascade_cfg())
     for alpha in (0.8, 0.85, 0.9, 0.96):
         f1s, calls = [], []
         for i, q in enumerate(queries[:2]):
             oracle = SimulatedOracle(q.truth)
-            stats = pipe.query(q.embed, oracle, accuracy_target=alpha,
-                               ground_truth=q.truth, seed=i)
+            stats = engine.query(q.embed, oracle, accuracy_target=alpha,
+                                 ground_truth=q.truth, seed=i)
             f1s.append(stats.cascade.achieved_f1)
             calls.append(stats.oracle_calls_total)
         rows.add(f"tradeoff/alpha{alpha}", 0.0,
@@ -39,7 +41,7 @@ def run(rows: Rows) -> dict:
     for sel in (0.05, 0.15, 0.3, 0.5):
         q = make_query(corpus, 999, selectivity=sel)
         oracle = SimulatedOracle(q.truth)
-        stats = pipe.query(q.embed, oracle, ground_truth=q.truth, seed=0)
+        stats = engine.query(q.embed, oracle, ground_truth=q.truth, seed=0)
         rows.add(f"tradeoff/selectivity{sel}", 0.0,
                  f"f1={stats.cascade.achieved_f1:.3f};"
                  f"oracle_frac={stats.oracle_calls_total / N_DOCS:.3f}")

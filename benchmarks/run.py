@@ -5,11 +5,13 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
-                            bench_kernels, bench_thresholds, bench_tradeoff)
+                            bench_compound, bench_kernels, bench_thresholds,
+                            bench_tradeoff)
     from benchmarks.common import Rows
 
     suites = [
         ("cascade (Fig4+Table2)", bench_cascade.run),
+        ("compound (composed predicates)", bench_compound.run),
         ("ablation (Fig9+Fig11)", bench_ablation.run),
         ("calibration (Fig12+Table4)", bench_calibration.run),
         ("thresholds (Alg2)", bench_thresholds.run),

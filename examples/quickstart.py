@@ -1,17 +1,19 @@
-"""Quickstart: one semantic predicate over a synthetic corpus in ~30s.
+"""Quickstart: semantic predicates over a synthetic corpus in ~30s.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a 3k-document corpus with planted semantics, runs the full
-ScaleDoc online phase (train proxy -> score -> calibrate -> cascade) for
-one ad-hoc query at accuracy_target=0.9, and prints the cost accounting
-against the oracle-only baseline.
+Builds a 3k-document corpus with planted semantics and drives the
+persistent ScaleDocEngine: one ad-hoc predicate at accuracy_target=0.9
+(train proxy -> score -> calibrate -> cascade), then a *composed*
+predicate (q1 AND NOT q2) showing the cost-ordered compound plan
+short-circuiting decided documents out of the second leaf.
 """
 import numpy as np
 
 from repro.config.base import CascadeConfig, ProxyConfig
-from repro.core import ScaleDocPipeline, SimulatedOracle
+from repro.core import SimulatedOracle
 from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
 
 
 def main():
@@ -21,13 +23,14 @@ def main():
     print(f"corpus: {len(corpus.embeds)} docs; query selectivity "
           f"{query.selectivity:.2f}")
 
-    oracle = SimulatedOracle(query.truth)
-    pipeline = ScaleDocPipeline(
-        corpus.embeds,
+    engine = ScaleDocEngine(
+        InMemoryStore(corpus.embeds),
         ProxyConfig(embed_dim=128, hidden_dim=256, latent_dim=128,
                     proj_dim=64, phase1_steps=120, phase2_steps=120),
         CascadeConfig(accuracy_target=0.9))
-    stats = pipeline.query(query.embed, oracle, ground_truth=query.truth)
+
+    oracle = SimulatedOracle(query.truth)
+    stats = engine.query(query.embed, oracle, ground_truth=query.truth)
 
     c = stats.cascade
     n = len(corpus.embeds)
@@ -43,6 +46,21 @@ def main():
           f"oracle-only {n * 5e13:.2e} "
           f"-> {n * 5e13 / stats.total_flops:.2f}x cheaper")
     print(f"wall time              : {stats.wall_seconds:.1f}s")
+
+    # -- composed predicate: q1 AND NOT q2 over the same engine ----------
+    query2 = make_query(corpus, seed=11, selectivity=0.4)
+    p1 = SemanticPredicate(query.embed, SimulatedOracle(query.truth),
+                           name="q1")
+    p2 = SemanticPredicate(query2.embed, SimulatedOracle(query2.truth),
+                           name="q2")
+    truth = query.truth & ~query2.truth
+    res = engine.filter(p1 & ~p2, accuracy_target=0.9, ground_truth=truth)
+    print(f"\ncompound q1 & ~q2      : plan [{res.plan}], "
+          f"F1 {res.achieved_f1:.3f}")
+    print(f"oracle calls           : {res.oracle_calls_total} / {n}")
+    if len(res.leaf_reports) > 1:
+        print(f"short-circuit          : second leaf saw only "
+              f"{res.leaf_reports[-1].n_pending} pending docs")
 
 
 if __name__ == "__main__":

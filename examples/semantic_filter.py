@@ -1,6 +1,7 @@
 """Semantic filtering workload: a batch of ad-hoc predicates over one
 corpus, comparing ScaleDoc against direct embedding matching and the
-oracle-only baseline (the paper's Fig. 4 scenario).
+oracle-only baseline (the paper's Fig. 4 scenario), on the persistent
+ScaleDocEngine.
 
     PYTHONPATH=src python examples/semantic_filter.py [--docs 6000]
 """
@@ -9,9 +10,10 @@ import argparse
 import numpy as np
 
 from repro.config.base import CascadeConfig, ProxyConfig
-from repro.core import ScaleDocPipeline, SimulatedOracle, run_cascade
+from repro.core import SimulatedOracle, run_cascade
 from repro.core.scoring import direct_embedding_scores
 from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine
 
 
 def main():
@@ -22,8 +24,8 @@ def main():
     args = ap.parse_args()
 
     corpus = make_corpus(seed=0, n_docs=args.docs, dim=128)
-    pipe = ScaleDocPipeline(
-        corpus.embeds,
+    engine = ScaleDocEngine(
+        InMemoryStore(corpus.embeds),
         ProxyConfig(embed_dim=128, hidden_dim=256, latent_dim=128,
                     proj_dim=64, phase1_steps=120, phase2_steps=120),
         CascadeConfig(accuracy_target=args.alpha))
@@ -35,7 +37,7 @@ def main():
         q = make_query(corpus, 100 + i,
                        selectivity=0.15 + 0.1 * (i % 4))
         o1 = SimulatedOracle(q.truth)
-        stats = pipe.query(q.embed, o1, ground_truth=q.truth, seed=i)
+        stats = engine.query(q.embed, o1, ground_truth=q.truth, seed=i)
         o2 = SimulatedOracle(q.truth)
         res2 = run_cascade(direct_embedding_scores(q.embed, corpus.embeds),
                            o2, CascadeConfig(accuracy_target=args.alpha),

@@ -6,6 +6,7 @@ static args) and safely shareable across the launcher / dry-run / tests.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Mapping, Optional, Sequence, Tuple
 
@@ -312,8 +313,22 @@ class CascadeConfig:
     margin_mode: str = "bootstrap"
     boot_samples: int = 64
     boot_conf: float = 0.95
-    use_margin: bool = False     # legacy alias for margin_mode="bernstein"
+    # deprecated: legacy alias for margin_mode="bernstein". Accepted at
+    # construction, folded into margin_mode, and normalized back to None
+    # so configs differing only in how they spelled the knob compare and
+    # hash equal. Strategies must read margin_mode only.
+    use_margin: Optional[bool] = None
     seed: int = 0
+
+    def __post_init__(self):
+        if self.use_margin is not None:
+            warnings.warn(
+                "CascadeConfig.use_margin is deprecated; use "
+                "margin_mode='bernstein' instead", DeprecationWarning,
+                stacklevel=3)
+            if self.use_margin:
+                object.__setattr__(self, "margin_mode", "bernstein")
+            object.__setattr__(self, "use_margin", None)
 
 
 @dataclass(frozen=True)

@@ -43,6 +43,32 @@ def f1_score(pred: np.ndarray, truth: np.ndarray) -> float:
     return 2 * tp / denom if denom else 1.0
 
 
+def resolve_ambiguous_band(scores: np.ndarray, l: float, r: float, oracle,
+                           sample_idx, sample_labels
+                           ) -> tuple:
+    """Final labeling shared by every threshold-based strategy: auto-label
+    outside (l, r), oracle the ambiguous band, reusing labels already
+    purchased for the calibration/training sample.
+
+    Returns (labels, ambiguous_mask, online_calls).
+    """
+    n = len(scores)
+    auto_pos = scores > r
+    ambiguous = ~(auto_pos | (scores < l))
+    labels = np.zeros(n, bool)
+    labels[auto_pos] = True
+    known = {int(i): bool(lbl) for i, lbl in zip(sample_idx, sample_labels)}
+    amb_idx = np.nonzero(ambiguous)[0]
+    need = np.array([i for i in amb_idx if int(i) not in known],
+                    dtype=np.int64)
+    if len(need):
+        labels[need] = oracle.label(need)
+    for i in amb_idx:
+        if int(i) in known:
+            labels[i] = known[int(i)]
+    return labels, ambiguous, len(need)
+
+
 def run_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
                 ground_truth: Optional[np.ndarray] = None,
                 rng: Optional[np.random.Generator] = None) -> CascadeResult:
@@ -55,7 +81,7 @@ def run_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
     calib = calib_mod.calibrate(scores, oracle.label, cfg, rng)
     calib_calls = oracle.calls - calls_before
 
-    mode = "bernstein" if cfg.use_margin else cfg.margin_mode
+    mode = cfg.margin_mode
     if mode == "bootstrap":
         sel = thr_mod.select_thresholds_certified(
             calib, cfg.accuracy_target, metric=cfg.metric,
@@ -69,24 +95,8 @@ def run_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
         sel = thr_mod.select_thresholds(calib, cfg.accuracy_target,
                                         metric=cfg.metric, margin=margin)
 
-    auto_pos = scores > sel.r
-    auto_neg = scores < sel.l
-    ambiguous = ~(auto_pos | auto_neg)
-
-    labels = np.zeros(n, bool)
-    labels[auto_pos] = True
-    # reuse calibration labels for sampled docs inside the ambiguous band
-    known = {int(i): bool(lbl) for i, lbl
-             in zip(calib.sample_idx, calib.sample_labels)}
-    amb_idx = np.nonzero(ambiguous)[0]
-    need = np.array([i for i in amb_idx if int(i) not in known],
-                    dtype=np.int64)
-    if len(need):
-        labels[need] = oracle.label(need)
-    for i in amb_idx:
-        if int(i) in known:
-            labels[i] = known[int(i)]
-    online_calls = len(need)
+    labels, ambiguous, online_calls = resolve_ambiguous_band(
+        scores, sel.l, sel.r, oracle, calib.sample_idx, calib.sample_labels)
 
     guarantee = check_guarantee(scores[calib.sample_idx],
                                 calib.sample_labels, sel.l, sel.r,
@@ -153,13 +163,11 @@ def probe_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
         labels[batch] = oracle.label(batch)
         probed[batch] = True
         spent = k
-        # estimate residual accuracy from probed agreement near the frontier
-        frontier = order[spent:spent + step]
-        if not len(frontier):
+        if spent >= n:
             break
-        agree = np.mean((scores[frontier] > 0.5)
-                        == (scores[frontier] > 0.5))  # proxies agree w/ self
-        # estimate from the last probed batch how often proxy was right
+        # the just-probed batch sits at the decision frontier, so the
+        # proxy's agreement with the oracle there lower-bounds its
+        # accuracy on the (easier) unprobed remainder
         proxy_right = np.mean((scores[batch] > 0.5) == labels[batch])
         est = proxy_right
         if proxy_right >= cfg.accuracy_target:
@@ -208,26 +216,14 @@ def supg_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
 def _finish(scores, oracle, sel, calib_calls, sample_idx, sample_labels,
             ground_truth) -> CascadeResult:
     n = len(scores)
-    auto_pos = scores > sel.r
-    auto_neg = scores < sel.l
-    ambiguous = ~(auto_pos | auto_neg)
-    labels = np.zeros(n, bool)
-    labels[auto_pos] = True
-    known = {int(i): bool(l) for i, l in zip(sample_idx, sample_labels)}
-    amb_idx = np.nonzero(ambiguous)[0]
-    need = np.array([i for i in amb_idx if int(i) not in known],
-                    dtype=np.int64)
-    if len(need):
-        labels[need] = oracle.label(need)
-    for i in amb_idx:
-        if int(i) in known:
-            labels[i] = known[int(i)]
+    labels, ambiguous, online_calls = resolve_ambiguous_band(
+        scores, sel.l, sel.r, oracle, sample_idx, sample_labels)
     result = CascadeResult(
         labels=labels, l=sel.l, r=sel.r,
         unfiltered_rate=float(ambiguous.mean()),
-        oracle_calls_online=len(need), oracle_calls_calib=calib_calls,
+        oracle_calls_online=online_calls, oracle_calls_calib=calib_calls,
         est_accuracy=sel.est_accuracy,
-        data_reduction=1.0 - (len(need) + calib_calls) / max(n, 1))
+        data_reduction=1.0 - (online_calls + calib_calls) / max(n, 1))
     if ground_truth is not None:
         truth = np.asarray(ground_truth).astype(bool)
         result.achieved_f1 = f1_score(labels, truth)

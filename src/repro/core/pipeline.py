@@ -1,29 +1,27 @@
-"""ScaleDocPipeline — the public API (deliverable a).
+"""ScaleDocPipeline — per-query compatibility shim over ScaleDocEngine.
 
   pipeline = ScaleDocPipeline(embeddings, proxy_cfg, cascade_cfg)
   result = pipeline.query(e_q, oracle, accuracy_target=0.9)
 
-Orchestrates the full online phase for one ad-hoc semantic predicate:
-  1. sample + oracle-label a training subset (train_fraction)
-  2. two-phase contrastive proxy training (repro.core.trainer)
-  3. full-collection scoring (repro.core.scoring / Pallas kernels)
-  4. adaptive cascade (repro.core.cascade)
-and reports end-to-end cost accounting (oracle calls, FLOPs).
+The original pipeline re-ran the full online phase from scratch per
+query. It is now a thin wrapper over the persistent engine
+(repro.engine.ScaleDocEngine), which adds a DocumentStore, a composable
+Predicate algebra, cross-query oracle/proxy caches and pluggable cascade
+strategies — new code should target the engine directly:
+
+  engine = ScaleDocEngine(InMemoryStore(embeddings), proxy_cfg, cascade_cfg)
+  res = engine.filter(SemanticPredicate(e_q1, o1) & ~SemanticPredicate(e_q2, o2),
+                      accuracy_target=0.9)
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, Optional
+from typing import Optional
 
-import jax
 import numpy as np
 
-from repro.config.base import CascadeConfig, ProxyConfig, replace
-from repro.core import oracle as oracle_mod
-from repro.core.cascade import CascadeResult, run_cascade
-from repro.core.scoring import score_collection
-from repro.core.trainer import train_proxy
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core.cascade import CascadeResult
 
 
 @dataclasses.dataclass
@@ -41,8 +39,11 @@ class QueryStats:
 class ScaleDocPipeline:
     def __init__(self, embeds: np.ndarray, proxy_cfg: ProxyConfig,
                  cascade_cfg: CascadeConfig, use_kernel: bool = False):
+        from repro.engine import ScaleDocEngine
         self.embeds = np.asarray(embeds, np.float32)
-        self.proxy_cfg = replace(proxy_cfg, embed_dim=self.embeds.shape[1])
+        self._engine = ScaleDocEngine(self.embeds, proxy_cfg, cascade_cfg,
+                                      use_kernel=use_kernel)
+        self.proxy_cfg = self._engine.proxy_cfg
         self.cascade_cfg = cascade_cfg
         self.use_kernel = use_kernel
 
@@ -50,46 +51,6 @@ class ScaleDocPipeline:
               accuracy_target: Optional[float] = None,
               ground_truth: Optional[np.ndarray] = None,
               seed: int = 0) -> QueryStats:
-        t0 = time.time()
-        ccfg = self.cascade_cfg
-        if accuracy_target is not None:
-            ccfg = replace(ccfg, accuracy_target=accuracy_target)
-        n = len(self.embeds)
-        rng = np.random.default_rng(seed)
-        from repro.core.oracle import CachedOracle
-        oracle = CachedOracle(oracle)   # never pay twice for one label
-
-        # 1. training sample + oracle labels
-        calls0 = oracle.calls
-        n_train = max(int(self.proxy_cfg.train_fraction * n), 16)
-        train_idx = rng.choice(n, size=n_train, replace=False)
-        train_labels = oracle.label(train_idx)
-        train_calls = oracle.calls - calls0
-
-        # 2. proxy training (two-phase contrastive)
-        res = train_proxy(jax.random.PRNGKey(seed), e_q,
-                          self.embeds[train_idx], train_labels,
-                          self.proxy_cfg)
-
-        # 3. full-collection scoring
-        scores = score_collection(res.params, e_q, self.embeds,
-                                  use_kernel=self.use_kernel)
-
-        # 4. adaptive cascade
-        cascade = run_cascade(scores, oracle, ccfg,
-                              ground_truth=ground_truth, rng=rng)
-
-        total_calls = oracle.calls - calls0
-        proxy_flops = n * oracle_mod.OUR_PROXY_FLOPS_PER_DOC
-        oracle_flops = total_calls * getattr(
-            oracle, "flops_per_doc", oracle_mod.ORACLE_FLOPS_PER_DOC)
-        return QueryStats(
-            cascade=cascade,
-            oracle_calls_total=total_calls,
-            oracle_calls_train=train_calls,
-            proxy_flops=proxy_flops,
-            oracle_flops=oracle_flops,
-            total_flops=proxy_flops + oracle_flops,
-            wall_seconds=time.time() - t0,
-            scores=scores,
-        )
+        return self._engine.query(e_q, oracle,
+                                  accuracy_target=accuracy_target,
+                                  ground_truth=ground_truth, seed=seed)

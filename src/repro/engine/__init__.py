@@ -1,0 +1,28 @@
+# Persistent multi-predicate engine (public API):
+#   * DocumentStore — chunked / memory-mapped collection access
+#   * Predicate algebra — SemanticPredicate composed with & | ~
+#   * ScaleDocEngine — cross-query caches + cost-ordered compound plans
+#   * cascade-strategy registry — scaledoc | naive | probe | supg
+from repro.engine.engine import (  # noqa: F401
+    FilterResult,
+    LeafReport,
+    ScaleDocEngine,
+)
+from repro.engine.predicate import (  # noqa: F401
+    And,
+    Not,
+    Or,
+    Predicate,
+    SemanticPredicate,
+)
+from repro.engine.registry import (  # noqa: F401
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
+from repro.engine.store import (  # noqa: F401
+    DocumentStore,
+    InMemoryStore,
+    MemmapStore,
+    as_store,
+)

@@ -1,0 +1,424 @@
+"""ScaleDocEngine — the persistent multi-predicate engine.
+
+The seed's ``ScaleDocPipeline`` was per-query: train a proxy, score the
+collection, cascade, throw everything away. Production workloads run
+many ad-hoc predicates over the same collection, so the engine keeps
+state across queries:
+
+  * one ``DocumentStore`` (chunked / memory-mapped) instead of a raw
+    ndarray, so scoring streams past RAM;
+  * a cross-query oracle label cache (``CachedOracle`` per oracle): a
+    label purchased for any query's training, calibration or ambiguous
+    band is never paid for again;
+  * a per-predicate trained-proxy cache keyed by (e_q, oracle), so
+    repeating a predicate skips training entirely;
+  * composed predicates (``p1 & ~p2``) compile into a cost-ordered plan:
+    the most decisive leaf runs first and documents it decides
+    short-circuit out of every later leaf's training sample, scoring
+    pass and cascade (QUEST-style compound-predicate optimization);
+  * the planning pass scores *all* leaves' query vectors in one
+    streaming pass over the store (stacked z_q matmul,
+    ``score_collection_multi``).
+
+Cascade execution is pluggable via the strategy registry
+(``scaledoc`` | ``naive`` | ``probe`` | ``supg``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.config.base import CascadeConfig, ProxyConfig, replace
+from repro.core import oracle as oracle_mod
+from repro.core.cascade import CascadeResult, f1_score
+from repro.core.oracle import CachedOracle
+from repro.core.scoring import score_collection, score_collection_multi
+from repro.core.trainer import train_proxy
+from repro.engine.predicate import (UNKNOWN, Not, Predicate,
+                                    SemanticPredicate)
+from repro.engine.registry import get_strategy
+from repro.engine.store import DocumentStore, InMemoryStore, as_store
+
+# below this many pending documents the cascade machinery (calibration
+# sample, threshold selection) costs more than it saves — label directly
+DIRECT_LABEL_CUTOFF = 64
+
+
+class _PendingView:
+    """Streaming view of a pending subset of a store: scoring iterates it
+    chunk-by-chunk, so only one chunk of embeddings is resident at a time
+    even when the pending set spans an out-of-core collection."""
+
+    def __init__(self, store: "DocumentStore", pending: np.ndarray,
+                 chunk: int):
+        self._store = store
+        self._pending = pending
+        self._chunk = chunk
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def dim(self) -> int:
+        return self._store.dim
+
+    def iter_chunks(self, chunk: int = 0):
+        chunk = chunk or self._chunk
+        for start in range(0, len(self._pending), chunk):
+            yield start, self._store.get(self._pending[start:start + chunk])
+
+
+class _SubsetOracle:
+    """Adapter: exposes a pending subset under local indices while
+    labels (and call accounting) flow through the shared global cache."""
+
+    def __init__(self, inner, global_idx: np.ndarray):
+        self.inner = inner
+        self.global_idx = np.asarray(global_idx, np.int64)
+
+    @property
+    def calls(self) -> int:
+        return self.inner.calls
+
+    @property
+    def flops_per_doc(self) -> float:
+        return getattr(self.inner, "flops_per_doc",
+                       oracle_mod.ORACLE_FLOPS_PER_DOC)
+
+    def label(self, indices) -> np.ndarray:
+        return self.inner.label(self.global_idx[np.asarray(indices,
+                                                           np.int64)])
+
+
+@dataclasses.dataclass
+class LeafReport:
+    """What one leaf cost inside a filter() call."""
+    name: str
+    key: str
+    n_pending: int
+    oracle_calls_train: int
+    oracle_calls_calib: int
+    oracle_calls_online: int
+    proxy_reused: bool
+    cascade: Optional[CascadeResult]    # None on the direct-label path
+    pending: np.ndarray                 # global doc indices this leaf saw
+    scores: Optional[np.ndarray]        # proxy scores over `pending`
+    labels: Optional[np.ndarray] = None  # leaf decisions over `pending`
+
+    @property
+    def oracle_calls(self) -> int:
+        return (self.oracle_calls_train + self.oracle_calls_calib
+                + self.oracle_calls_online)
+
+
+@dataclasses.dataclass
+class FilterResult:
+    mask: np.ndarray                    # (N,) bool — docs matching the root
+    oracle_calls_total: int
+    oracle_calls_train: int
+    leaf_reports: List[LeafReport]
+    plan: str
+    wall_seconds: float
+    n_docs: int
+    achieved_f1: Optional[float] = None
+    achieved_exact: Optional[float] = None
+
+    @property
+    def data_reduction(self) -> float:
+        return 1.0 - self.oracle_calls_total / max(self.n_docs, 1)
+
+
+class ScaleDocEngine:
+    """Persistent engine over one document collection."""
+
+    def __init__(self, store, proxy_cfg: Optional[ProxyConfig] = None,
+                 cascade_cfg: Optional[CascadeConfig] = None, *,
+                 strategy: str = "scaledoc", use_kernel: bool = False,
+                 chunk: int = 8192):
+        self.store: DocumentStore = as_store(store)
+        proxy_cfg = proxy_cfg or ProxyConfig()
+        self.proxy_cfg = replace(proxy_cfg, embed_dim=self.store.dim)
+        self.cascade_cfg = cascade_cfg or CascadeConfig()
+        self.strategy = strategy
+        self.use_kernel = use_kernel
+        self.chunk = chunk
+        self._oracles: Dict[int, CachedOracle] = {}
+        self._proxies: Dict[str, Dict] = {}      # leaf.key -> params
+        self._sel_est: Dict[str, float] = {}     # measured selectivity
+        # full-collection leaf decisions, keyed by
+        # (leaf.key, strategy, cascade cfg, seed): repeating a predicate
+        # under identical settings re-buys nothing
+        self._decisions: Dict[tuple, tuple] = {}
+
+    # -- caches ---------------------------------------------------------
+
+    def _cached_oracle(self, oracle) -> CachedOracle:
+        # every oracle the engine has seen stays pinned in _oracles:
+        # leaf keys embed id(oracle), so letting one be collected would
+        # free its id for a different oracle and serve it stale cached
+        # proxies/decisions
+        if isinstance(oracle, CachedOracle):
+            self._oracles.setdefault(id(oracle), oracle)
+            return oracle
+        got = self._oracles.get(id(oracle))
+        if got is None or got.inner is not oracle:
+            got = CachedOracle(oracle)
+            self._oracles[id(oracle)] = got
+        return got
+
+    def clear_caches(self) -> None:
+        """Drop all cross-query state (labels, proxies, decisions).
+
+        The caches grow with the number of distinct (predicate, config)
+        pairs served — each pins its oracle and, for full-collection
+        runs, an (N,) decision/score pair. Long-lived engines serving
+        unbounded ad-hoc workloads should call this periodically."""
+        self._oracles.clear()
+        self._proxies.clear()
+        self._sel_est.clear()
+        self._decisions.clear()
+
+    # -- planning -------------------------------------------------------
+
+    def _estimate_selectivities(self, leaves: List[SemanticPredicate]
+                                ) -> Dict[str, float]:
+        """Per-leaf positive-rate estimates for plan ordering only.
+
+        Leaves executed before (this or any past query) use their
+        measured selectivity. The rest are estimated oracle-free in one
+        streaming pass over the store: trained cached proxies give
+        calibrated bipolar scores (count > 0.5); untrained leaves fall
+        back to min-max-normalized raw cosine mass — a skew heuristic,
+        not a calibrated rate, but ordering is all it feeds.
+        """
+        est: Dict[str, float] = {}
+        jobs, job_leaves = [], []
+        for leaf in leaves:
+            if leaf.key in self._sel_est:
+                est[leaf.key] = self._sel_est[leaf.key]
+            else:
+                jobs.append((self._proxies.get(leaf.key), leaf.e_q))
+                job_leaves.append(leaf)
+        if jobs:
+            cols = score_collection_multi(jobs, self.store, chunk=self.chunk)
+            for j, leaf in enumerate(job_leaves):
+                s = cols[:, j]
+                if jobs[j][0] is not None:
+                    est[leaf.key] = float(np.mean(s > 0.5))
+                else:
+                    span = float(s.max() - s.min())
+                    est[leaf.key] = (float(np.mean((s - s.min()) / span))
+                                     if span > 0 else 0.5)
+        return est
+
+    # -- leaf execution --------------------------------------------------
+
+    def _execute_leaf(self, leaf: SemanticPredicate, pending: np.ndarray,
+                      ccfg: CascadeConfig, rng: np.random.Generator,
+                      train_key, truth_local: Optional[np.ndarray],
+                      seed: int) -> LeafReport:
+        oracle = self._cached_oracle(leaf.oracle)
+        calls0 = oracle.calls
+        n = len(self.store)
+
+        dkey = (leaf.key, self.strategy, ccfg, seed)
+        hit = self._decisions.get(dkey)
+        if hit is not None:
+            labels_full, scores_full, cres = hit
+            cascade = cres if len(pending) == n else None
+            if cascade is not None and truth_local is not None:
+                truth = np.asarray(truth_local).astype(bool)
+                cascade = dataclasses.replace(
+                    cascade, achieved_f1=f1_score(labels_full, truth),
+                    achieved_exact=float(np.mean(labels_full == truth)))
+            return LeafReport(
+                name=leaf.name, key=leaf.key, n_pending=len(pending),
+                oracle_calls_train=0, oracle_calls_calib=0,
+                oracle_calls_online=0, proxy_reused=True, cascade=cascade,
+                pending=pending, scores=scores_full[pending],
+                labels=labels_full[pending])
+
+        if len(pending) <= DIRECT_LABEL_CUTOFF:
+            labels = oracle.label(pending)
+            return LeafReport(
+                name=leaf.name, key=leaf.key, n_pending=len(pending),
+                oracle_calls_train=0, oracle_calls_calib=0,
+                oracle_calls_online=oracle.calls - calls0,
+                proxy_reused=leaf.key in self._proxies, cascade=None,
+                pending=pending, scores=None, labels=labels)
+
+        # in-memory stores materialize the pending rows (cheap, enables
+        # the fused kernel); out-of-core stores get a streaming view so
+        # only one chunk of embeddings is ever resident
+        if isinstance(self.store, InMemoryStore):
+            embeds_view = self.store.get(pending)
+        else:
+            embeds_view = _PendingView(self.store, pending, self.chunk)
+        params = self._proxies.get(leaf.key)
+        reused = params is not None
+        if params is None:
+            n_train = min(max(int(self.proxy_cfg.train_fraction
+                                  * len(pending)), 16), len(pending))
+            train_local = rng.choice(len(pending), size=n_train,
+                                     replace=False)
+            train_labels = oracle.label(pending[train_local])
+            params = train_proxy(train_key, leaf.e_q,
+                                 self.store.get(pending[train_local]),
+                                 train_labels, self.proxy_cfg).params
+            if len(pending) == n:
+                # subset-trained proxies are conditioned on the earlier
+                # leaves' decisions — only unconditioned ones are safe
+                # to reuse across queries
+                self._proxies[leaf.key] = params
+        train_calls = oracle.calls - calls0
+
+        scores = score_collection(params, leaf.e_q, embeds_view,
+                                  chunk=self.chunk,
+                                  use_kernel=self.use_kernel)
+        cres = get_strategy(self.strategy)(
+            scores, _SubsetOracle(oracle, pending), ccfg,
+            ground_truth=truth_local, rng=rng)
+        if len(pending) == n:
+            self._sel_est[leaf.key] = float(cres.labels.mean())
+            self._decisions[dkey] = (cres.labels, scores, cres)
+
+        return LeafReport(
+            name=leaf.name, key=leaf.key, n_pending=len(pending),
+            oracle_calls_train=train_calls,
+            oracle_calls_calib=cres.oracle_calls_calib,
+            oracle_calls_online=cres.oracle_calls_online,
+            proxy_reused=reused, cascade=cres, pending=pending,
+            scores=scores, labels=cres.labels)
+
+    # -- public API -------------------------------------------------------
+
+    def filter(self, predicate: Predicate, *,
+               accuracy_target: Optional[float] = None,
+               ground_truth: Optional[np.ndarray] = None,
+               seed: int = 0) -> FilterResult:
+        """Evaluate a (possibly composed) predicate over the collection.
+
+        Returns a boolean mask over all documents plus full per-leaf
+        cost accounting. ``ground_truth``, if given, is the root-level
+        truth used only for reporting achieved F1 / exact accuracy.
+        """
+        if not isinstance(predicate, Predicate):
+            raise TypeError("predicate must be a repro.engine Predicate; "
+                            "wrap raw (e_q, oracle) in SemanticPredicate")
+        t0 = time.time()
+        ccfg = self.cascade_cfg
+        if accuracy_target is not None:
+            ccfg = replace(ccfg, accuracy_target=accuracy_target)
+        n = len(self.store)
+        rng = np.random.default_rng(seed)
+
+        leaves = predicate.leaves()
+        # single-leaf predicates have nothing to reorder — skip the
+        # estimation pass over the collection
+        sel = (self._estimate_selectivities(leaves) if len(leaves) > 1
+               else {})
+        order, _ = predicate.plan(sel)
+        leaf_truth = _derivable_leaf_truth(predicate, ground_truth)
+
+        calls_before = {}
+        for leaf in leaves:
+            o = self._cached_oracle(leaf.oracle)
+            calls_before.setdefault(id(o), (o, o.calls))
+
+        leaf_values: Dict[str, np.ndarray] = {}
+        root = predicate.evaluate({lf.key: np.full(n, UNKNOWN, np.int8)
+                                   for lf in leaves})
+        reports: List[LeafReport] = []
+        for ordinal, leaf in enumerate(order):
+            pending = np.nonzero(root == UNKNOWN)[0]
+            if not len(pending):
+                break
+            truth_local = leaf_truth.get(leaf.key)
+            if truth_local is not None:
+                truth_local = truth_local[pending]
+            train_key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                           ordinal) if ordinal else \
+                jax.random.PRNGKey(seed)
+            report = self._execute_leaf(leaf, pending, ccfg, rng,
+                                        train_key, truth_local, seed)
+            reports.append(report)
+            vals = np.full(n, UNKNOWN, np.int8)
+            vals[pending] = report.labels.astype(np.int8)
+            leaf_values[leaf.key] = vals
+            full = {lf.key: leaf_values.get(
+                lf.key, np.full(n, UNKNOWN, np.int8)) for lf in leaves}
+            root = predicate.evaluate(full)
+
+        assert not (root == UNKNOWN).any(), \
+            "plan executed every leaf yet left documents undecided"
+
+        total = sum(o.calls - before
+                    for o, before in calls_before.values())
+        result = FilterResult(
+            mask=root.astype(bool),
+            oracle_calls_total=total,
+            oracle_calls_train=sum(r.oracle_calls_train for r in reports),
+            leaf_reports=reports,
+            plan=" -> ".join(r.name for r in reports) or "(decided)",
+            wall_seconds=time.time() - t0,
+            n_docs=n)
+        if ground_truth is not None:
+            truth = np.asarray(ground_truth).astype(bool)
+            result.achieved_f1 = f1_score(result.mask, truth)
+            result.achieved_exact = float(np.mean(result.mask == truth))
+        return result
+
+    def query(self, e_q: np.ndarray, oracle, *,
+              accuracy_target: Optional[float] = None,
+              ground_truth: Optional[np.ndarray] = None,
+              seed: int = 0, name: Optional[str] = None):
+        """Single-predicate convenience; returns the pipeline-shaped
+        QueryStats (kept for the ScaleDocPipeline shim and benchmarks)."""
+        from repro.core.pipeline import QueryStats
+        t0 = time.time()
+        pred = SemanticPredicate(e_q, oracle, name=name)
+        res = self.filter(pred, accuracy_target=accuracy_target,
+                          ground_truth=ground_truth, seed=seed)
+        leaf = res.leaf_reports[0]
+        n = res.n_docs
+        proxy_flops = n * oracle_mod.OUR_PROXY_FLOPS_PER_DOC
+        oracle_flops = res.oracle_calls_total * getattr(
+            oracle, "flops_per_doc", oracle_mod.ORACLE_FLOPS_PER_DOC)
+        cascade = leaf.cascade
+        if cascade is None:     # tiny collection: direct-label fallback
+            cascade = CascadeResult(
+                labels=res.mask, l=0.0, r=1.0, unfiltered_rate=1.0,
+                oracle_calls_online=leaf.oracle_calls_online,
+                oracle_calls_calib=0, est_accuracy=1.0,
+                achieved_f1=res.achieved_f1,
+                achieved_exact=res.achieved_exact)
+        return QueryStats(
+            cascade=cascade,
+            oracle_calls_total=res.oracle_calls_total,
+            oracle_calls_train=leaf.oracle_calls_train,
+            proxy_flops=proxy_flops,
+            oracle_flops=oracle_flops,
+            total_flops=proxy_flops + oracle_flops,
+            wall_seconds=time.time() - t0,
+            scores=leaf.scores,
+        )
+
+
+def _derivable_leaf_truth(predicate: Predicate,
+                          ground_truth: Optional[np.ndarray]
+                          ) -> Dict[str, np.ndarray]:
+    """Root truth maps onto a leaf only for trivial shapes (leaf, ~leaf);
+    composed predicates report F1 at the root instead."""
+    if ground_truth is None:
+        return {}
+    truth = np.asarray(ground_truth).astype(bool)
+    if isinstance(predicate, SemanticPredicate):
+        return {predicate.key: truth}
+    if isinstance(predicate, Not) and isinstance(predicate.child,
+                                                 SemanticPredicate):
+        return {predicate.child.key: ~truth}
+    return {}

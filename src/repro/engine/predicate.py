@@ -1,0 +1,201 @@
+"""Declarative predicate algebra over a document collection.
+
+A ``SemanticPredicate`` is one LLM predicate — a query embedding plus
+the oracle that can label documents against it. Predicates compose with
+``&``, ``|`` and ``~`` into an expression tree the engine compiles into
+a cost-ordered plan (QUEST-style: most decisive leaf first, decided
+documents short-circuit out of later leaves).
+
+Evaluation is three-valued (Kleene logic): a document's value under a
+node is TRUE/FALSE once enough leaves have been resolved to decide it,
+UNKNOWN until then. UNKNOWN documents are exactly the ones the engine
+still has to spend proxy/oracle budget on.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+TRUE = np.int8(1)
+FALSE = np.int8(0)
+UNKNOWN = np.int8(-1)
+
+
+def kleene_not(v: np.ndarray) -> np.ndarray:
+    out = np.where(v == UNKNOWN, UNKNOWN, 1 - v)
+    return out.astype(np.int8)
+
+
+def kleene_and(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    out = np.full(a.shape, UNKNOWN, np.int8)
+    out[(a == FALSE) | (b == FALSE)] = FALSE
+    out[(a == TRUE) & (b == TRUE)] = TRUE
+    return out
+
+
+def kleene_or(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    out = np.full(a.shape, UNKNOWN, np.int8)
+    out[(a == TRUE) | (b == TRUE)] = TRUE
+    out[(a == FALSE) & (b == FALSE)] = FALSE
+    return out
+
+
+class Predicate:
+    """Expression-tree node. Subclasses: SemanticPredicate, And, Or, Not."""
+
+    def __and__(self, other: "Predicate") -> "Predicate":
+        return And(self, other)
+
+    def __or__(self, other: "Predicate") -> "Predicate":
+        return Or(self, other)
+
+    def __invert__(self) -> "Predicate":
+        return Not(self)
+
+    def leaves(self) -> List["SemanticPredicate"]:
+        """Unique leaves in first-appearance order (dedup by key)."""
+        seen: Dict[str, SemanticPredicate] = {}
+        self._collect(seen)
+        return list(seen.values())
+
+    def _collect(self, seen: Dict[str, "SemanticPredicate"]) -> None:
+        raise NotImplementedError
+
+    def evaluate(self, leaf_values: Mapping[str, np.ndarray]) -> np.ndarray:
+        """Kleene-evaluate given per-leaf int8 value arrays keyed by
+        leaf key; leaves absent from the mapping count as UNKNOWN."""
+        raise NotImplementedError
+
+    def plan(self, selectivity: Mapping[str, float]
+             ) -> Tuple[List["SemanticPredicate"], float]:
+        """Compile a cost-ordered execution plan.
+
+        ``selectivity`` estimates each leaf's positive rate. Returns the
+        leaves in execution order plus this node's estimated positive
+        rate. AND nodes run their most selective child first (it rules
+        out the most documents, so later children see the smallest
+        pending set); OR nodes run their least selective child first
+        (it rules documents *in*). Estimates assume independence — they
+        only order the plan, never affect correctness.
+        """
+        raise NotImplementedError
+
+
+class SemanticPredicate(Predicate):
+    """One LLM predicate: query embedding + oracle labeler.
+
+    The ``key`` fingerprints (e_q, oracle) so the engine can cache the
+    trained proxy and reuse it across queries touching the same
+    predicate; two structurally identical leaves inside one expression
+    collapse into a single evaluation.
+    """
+
+    def __init__(self, e_q: np.ndarray, oracle, name: Optional[str] = None):
+        self.e_q = np.asarray(e_q, np.float32)
+        if self.e_q.ndim != 1:
+            raise ValueError(f"e_q must be (D,), got {self.e_q.shape}")
+        self.oracle = oracle
+        digest = hashlib.sha1(self.e_q.tobytes()).hexdigest()[:12]
+        self.key = f"{digest}:{id(oracle)}"
+        self.name = name or f"pred-{digest[:6]}"
+
+    def _collect(self, seen):
+        seen.setdefault(self.key, self)
+
+    def evaluate(self, leaf_values):
+        v = leaf_values.get(self.key)
+        if v is None:
+            raise KeyError(f"no values recorded for leaf {self.name}")
+        return np.asarray(v, np.int8)
+
+    def plan(self, selectivity):
+        return [self], float(selectivity.get(self.key, 0.5))
+
+    def __repr__(self):
+        return self.name
+
+
+class Not(Predicate):
+    def __init__(self, child: Predicate):
+        self.child = child
+
+    def _collect(self, seen):
+        self.child._collect(seen)
+
+    def evaluate(self, leaf_values):
+        return kleene_not(self.child.evaluate(leaf_values))
+
+    def plan(self, selectivity):
+        order, sel = self.child.plan(selectivity)
+        return order, 1.0 - sel
+
+    def __repr__(self):
+        return f"~{self.child!r}"
+
+
+class _NaryOp(Predicate):
+    combine = None       # kleene_and / kleene_or
+    ascending = True     # AND: most selective (lowest sel) first
+    symbol = "?"
+
+    def __init__(self, *children: Predicate):
+        if len(children) < 2:
+            raise ValueError("need at least two operands")
+        self.children = tuple(children)
+
+    def _collect(self, seen):
+        for c in self.children:
+            c._collect(seen)
+
+    def evaluate(self, leaf_values):
+        vals = [c.evaluate(leaf_values) for c in self.children]
+        out = vals[0]
+        for v in vals[1:]:
+            out = type(self).combine(out, v)
+        return out
+
+    def plan(self, selectivity):
+        plans = [c.plan(selectivity) for c in self.children]
+        plans.sort(key=lambda p: p[1], reverse=not self.ascending)
+        order: List[SemanticPredicate] = []
+        seen = set()
+        for leaves, _ in plans:
+            for leaf in leaves:
+                if leaf.key not in seen:
+                    seen.add(leaf.key)
+                    order.append(leaf)
+        sels = [p[1] for p in plans]
+        return order, self._combine_sel(sels)
+
+    def _combine_sel(self, sels):
+        raise NotImplementedError
+
+    def __repr__(self):
+        return "(" + f" {self.symbol} ".join(map(repr, self.children)) + ")"
+
+
+class And(_NaryOp):
+    combine = staticmethod(kleene_and)
+    ascending = True
+    symbol = "&"
+
+    def _combine_sel(self, sels):
+        out = 1.0
+        for s in sels:
+            out *= s
+        return out
+
+
+class Or(_NaryOp):
+    combine = staticmethod(kleene_or)
+    ascending = False     # least selective first: rules documents in
+
+    symbol = "|"
+
+    def _combine_sel(self, sels):
+        out = 1.0
+        for s in sels:
+            out *= (1.0 - s)
+        return 1.0 - out

@@ -1,0 +1,73 @@
+"""Cascade-strategy registry.
+
+The seed exposed its cascade variants as ad-hoc free functions with
+slightly different signatures (``run_cascade`` threads an rng; the §6.5
+baselines don't). The registry normalizes them behind one callable
+shape so the engine — and anything else — selects a strategy by name:
+
+    strategy = get_strategy("scaledoc")
+    result = strategy(scores, oracle, cfg, ground_truth=truth, rng=rng)
+
+Third parties register their own with the decorator:
+
+    @register_strategy("my-cascade")
+    def my_cascade(scores, oracle, cfg, ground_truth=None, rng=None): ...
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core import cascade as cascade_mod
+from repro.core.cascade import CascadeResult
+
+# strategy(scores, oracle, cfg, ground_truth=None, rng=None) -> CascadeResult
+Strategy = Callable[..., CascadeResult]
+
+_STRATEGIES: Dict[str, Strategy] = {}
+
+
+def register_strategy(name: str) -> Callable[[Strategy], Strategy]:
+    def deco(fn: Strategy) -> Strategy:
+        if name in _STRATEGIES:
+            raise ValueError(f"cascade strategy {name!r} already registered")
+        _STRATEGIES[name] = fn
+        return fn
+    return deco
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown cascade strategy {name!r}; "
+                       f"available: {sorted(_STRATEGIES)}") from None
+
+
+def available_strategies() -> list:
+    return sorted(_STRATEGIES)
+
+
+@register_strategy("scaledoc")
+def _scaledoc(scores, oracle, cfg, ground_truth=None, rng=None):
+    return cascade_mod.run_cascade(scores, oracle, cfg,
+                                   ground_truth=ground_truth, rng=rng)
+
+
+@register_strategy("naive")
+def _naive(scores, oracle, cfg, ground_truth=None, rng=None):
+    return cascade_mod.naive_cascade(scores, oracle, cfg,
+                                     ground_truth=ground_truth)
+
+
+@register_strategy("probe")
+def _probe(scores, oracle, cfg, ground_truth=None, rng=None):
+    return cascade_mod.probe_cascade(scores, oracle, cfg,
+                                     ground_truth=ground_truth)
+
+
+@register_strategy("supg")
+def _supg(scores, oracle, cfg, ground_truth=None, rng=None):
+    return cascade_mod.supg_cascade(scores, oracle, cfg,
+                                    ground_truth=ground_truth)

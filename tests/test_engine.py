@@ -1,0 +1,364 @@
+"""ScaleDocEngine: stores, predicate algebra, strategy registry, caches,
+compound-plan short-circuiting, and the oracle-call savings guarantee."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import ScaleDocPipeline, SimulatedOracle
+from repro.core.oracle import CachedOracle
+from repro.core.scoring import score_collection, score_collection_multi
+from repro.data import make_corpus, make_query
+from repro.engine import (And, InMemoryStore, MemmapStore, Not, Or,
+                          ScaleDocEngine, SemanticPredicate, as_store,
+                          available_strategies, get_strategy,
+                          register_strategy)
+from repro.engine.predicate import FALSE, TRUE, UNKNOWN
+
+
+# -- fixtures ----------------------------------------------------------------
+
+N_DOCS, DIM = 2000, 64
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(0, n_docs=N_DOCS, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def small_cfgs():
+    pcfg = ProxyConfig(embed_dim=DIM, hidden_dim=128, latent_dim=64,
+                       proj_dim=32, phase1_steps=60, phase2_steps=60)
+    return pcfg, CascadeConfig(accuracy_target=0.9)
+
+
+# -- DocumentStore -----------------------------------------------------------
+
+def test_store_get_and_chunks(corpus):
+    store = InMemoryStore(corpus.embeds)
+    assert len(store) == N_DOCS and store.dim == DIM
+    np.testing.assert_array_equal(store.get([5, 3, 5]),
+                                  corpus.embeds[[5, 3, 5]])
+    blocks = list(store.iter_chunks(700))
+    assert [s for s, _ in blocks] == [0, 700, 1400]
+    np.testing.assert_array_equal(np.concatenate([b for _, b in blocks]),
+                                  corpus.embeds)
+
+
+def test_memmap_store_matches_in_memory(corpus, tmp_path):
+    path = tmp_path / "embeds.npy"
+    np.save(path, corpus.embeds)
+    store = MemmapStore.from_npy(str(path))
+    assert len(store) == N_DOCS and store.dim == DIM
+    np.testing.assert_array_equal(store.get([0, 17, 1999]),
+                                  corpus.embeds[[0, 17, 1999]])
+    got = np.concatenate([b for _, b in store.iter_chunks(512)])
+    np.testing.assert_array_equal(got, corpus.embeds)
+    assert got.dtype == np.float32
+
+
+def test_as_store_coercions(corpus):
+    assert isinstance(as_store(corpus.embeds), InMemoryStore)
+    store = InMemoryStore(corpus.embeds)
+    assert as_store(store) is store
+
+
+# -- predicate algebra -------------------------------------------------------
+
+def _leaf(seed, name):
+    rng = np.random.default_rng(seed)
+    return SemanticPredicate(rng.normal(size=8).astype(np.float32),
+                             oracle=object(), name=name)
+
+
+def test_operators_build_expected_tree():
+    a, b, c = _leaf(0, "a"), _leaf(1, "b"), _leaf(2, "c")
+    expr = (a & ~b) | c
+    assert isinstance(expr, Or)
+    assert isinstance(expr.children[0], And)
+    assert isinstance(expr.children[0].children[1], Not)
+    assert [l.name for l in expr.leaves()] == ["a", "b", "c"]
+
+
+def test_duplicate_leaves_dedup():
+    rng = np.random.default_rng(3)
+    e_q = rng.normal(size=8).astype(np.float32)
+    oracle = object()
+    a1 = SemanticPredicate(e_q, oracle)
+    a2 = SemanticPredicate(e_q.copy(), oracle)
+    assert a1.key == a2.key
+    assert len((a1 & a2).leaves()) == 1
+
+
+def test_kleene_evaluation_and_shortcircuit_semantics():
+    a, b = _leaf(0, "a"), _leaf(1, "b")
+    vals = {a.key: np.array([TRUE, FALSE, UNKNOWN, UNKNOWN], np.int8),
+            b.key: np.array([UNKNOWN, UNKNOWN, FALSE, TRUE], np.int8)}
+    np.testing.assert_array_equal((a & b).evaluate(vals),
+                                  [UNKNOWN, FALSE, FALSE, UNKNOWN])
+    np.testing.assert_array_equal((a | b).evaluate(vals),
+                                  [TRUE, UNKNOWN, UNKNOWN, TRUE])
+    np.testing.assert_array_equal((~a).evaluate(vals),
+                                  [FALSE, TRUE, UNKNOWN, UNKNOWN])
+
+
+def test_plan_orders_and_by_selectivity():
+    a, b, c = _leaf(0, "a"), _leaf(1, "b"), _leaf(2, "c")
+    sel = {a.key: 0.6, b.key: 0.2, c.key: 0.9}
+    order, est = (a & b & c).plan(sel)
+    # Note: `a & b & c` nests as (a & b) & c; the inner AND's combined
+    # selectivity 0.12 sorts ahead of c, and b ahead of a inside it.
+    assert [l.name for l in order] == ["b", "a", "c"]
+    assert est == pytest.approx(0.6 * 0.2 * 0.9)
+    order_or, est_or = (a | b).plan(sel)
+    assert [l.name for l in order_or] == ["a", "b"]  # OR: least selective 1st
+    assert est_or == pytest.approx(1 - 0.4 * 0.8)
+    order_not, est_not = (~b).plan(sel)
+    assert est_not == pytest.approx(0.8)
+
+
+# -- strategy registry -------------------------------------------------------
+
+def test_registry_builtins_and_errors():
+    assert set(available_strategies()) >= {"scaledoc", "naive", "probe",
+                                           "supg"}
+    with pytest.raises(KeyError):
+        get_strategy("nope")
+    with pytest.raises(ValueError):
+        register_strategy("scaledoc")(lambda *a, **k: None)
+
+
+def test_registered_strategies_run(corpus):
+    q = make_query(corpus, 5, selectivity=0.3)
+    rng = np.random.default_rng(0)
+    scores = np.clip(q.truth * 0.8 + 0.1 + 0.05 * rng.normal(size=N_DOCS),
+                     0, 1)
+    cfg = CascadeConfig(accuracy_target=0.9)
+    for name in available_strategies():
+        res = get_strategy(name)(scores, SimulatedOracle(q.truth), cfg,
+                                 ground_truth=q.truth,
+                                 rng=np.random.default_rng(0))
+        assert res.achieved_f1 is not None
+        assert 0 <= res.data_reduction <= 1
+
+
+def test_custom_strategy_used_by_engine(corpus, small_cfgs):
+    pcfg, ccfg = small_cfgs
+    calls = []
+
+    if "label-all" not in available_strategies():
+        @register_strategy("label-all")
+        def label_all(scores, oracle, cfg, ground_truth=None, rng=None):
+            from repro.core.cascade import CascadeResult
+            labels = oracle.label(np.arange(len(scores)))
+            calls.append(len(scores))
+            return CascadeResult(labels=labels, l=0.5, r=0.5,
+                                 unfiltered_rate=1.0,
+                                 oracle_calls_online=len(scores),
+                                 oracle_calls_calib=0, est_accuracy=1.0)
+
+    q = make_query(corpus, 5, selectivity=0.3)
+    engine = ScaleDocEngine(corpus.embeds, pcfg, ccfg,
+                            strategy="label-all")
+    res = engine.filter(SemanticPredicate(q.embed, SimulatedOracle(q.truth)),
+                        ground_truth=q.truth)
+    assert calls == [N_DOCS]
+    assert res.achieved_f1 == 1.0
+
+
+# -- batched multi-predicate scoring -----------------------------------------
+
+def test_score_collection_multi_matches_single(corpus, small_cfgs):
+    import jax
+    from repro.core.trainer import train_proxy
+    pcfg, _ = small_cfgs
+    q1 = make_query(corpus, 5, selectivity=0.3)
+    q2 = make_query(corpus, 9, selectivity=0.4)
+    idx = np.arange(0, N_DOCS, 10)
+    params = train_proxy(jax.random.PRNGKey(0), q1.embed,
+                         corpus.embeds[idx], q1.truth[idx], pcfg).params
+    jobs = [(params, q1.embed), (None, q2.embed), (params, q2.embed)]
+    out = score_collection_multi(jobs, InMemoryStore(corpus.embeds),
+                                 chunk=700)
+    assert out.shape == (N_DOCS, 3)
+    np.testing.assert_allclose(
+        out[:, 0], score_collection(params, q1.embed, corpus.embeds),
+        atol=1e-5)
+    from repro.core.scoring import direct_embedding_scores
+    np.testing.assert_allclose(
+        out[:, 1], direct_embedding_scores(q2.embed, corpus.embeds),
+        atol=1e-5)
+    np.testing.assert_allclose(
+        out[:, 2], score_collection(params, q2.embed, corpus.embeds),
+        atol=1e-5)
+    assert (out >= 0).all() and (out <= 1).all()
+
+
+# -- CachedOracle label sharing ----------------------------------------------
+
+def test_cached_oracle_never_double_counts_overlaps():
+    truth = np.random.default_rng(0).random(500) < 0.4
+    inner = SimulatedOracle(truth)
+    oracle = CachedOracle(inner)
+    # overlapping train / calibration / ambiguous-band index sets
+    train = np.arange(0, 300)
+    calib = np.arange(200, 400)
+    band = np.arange(350, 500)
+    np.testing.assert_array_equal(oracle.label(train), truth[train])
+    np.testing.assert_array_equal(oracle.label(calib), truth[calib])
+    np.testing.assert_array_equal(oracle.label(band), truth[band])
+    assert oracle.calls == 500            # each doc paid exactly once
+    assert inner.calls == len(inner.queried) == 500
+
+
+def test_engine_shares_labels_across_leaves_same_oracle(corpus, small_cfgs):
+    """Two leaves with different query vectors but ONE oracle: labels
+    bought by the first leaf are free for the second."""
+    pcfg, ccfg = small_cfgs
+    q1 = make_query(corpus, 5, selectivity=0.3)
+    q2 = make_query(corpus, 9, selectivity=0.4)
+
+    # independent runs: two oracles over the same truth
+    oa, ob = SimulatedOracle(q1.truth), SimulatedOracle(q1.truth)
+    pipe = ScaleDocPipeline(corpus.embeds, pcfg, ccfg)
+    pipe.query(q1.embed, oa, seed=0)
+    pipe.query(q2.embed, ob, seed=1)
+    indep = oa.calls + ob.calls
+
+    # composed run sharing one oracle across both leaves
+    shared = SimulatedOracle(q1.truth)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    pred = (SemanticPredicate(q1.embed, shared, name="p1")
+            | SemanticPredicate(q2.embed, shared, name="p2"))
+    engine.filter(pred, seed=0)
+    assert shared.calls < indep
+    assert shared.calls == len(shared.queried)   # no doc paid twice
+
+
+# -- engine behaviour ---------------------------------------------------------
+
+def test_engine_single_predicate_meets_target(corpus, small_cfgs):
+    pcfg, ccfg = small_cfgs
+    q = make_query(corpus, 7, selectivity=0.3)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    res = engine.filter(SemanticPredicate(q.embed, SimulatedOracle(q.truth)),
+                        accuracy_target=0.9, ground_truth=q.truth)
+    assert res.achieved_f1 >= 0.85
+    assert res.oracle_calls_total < N_DOCS
+    assert res.mask.dtype == bool and res.mask.shape == (N_DOCS,)
+
+
+def test_engine_proxy_cache_reused_across_queries(corpus, small_cfgs):
+    pcfg, ccfg = small_cfgs
+    q = make_query(corpus, 7, selectivity=0.3)
+    oracle = SimulatedOracle(q.truth)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    pred = SemanticPredicate(q.embed, oracle)
+    r1 = engine.filter(pred, ground_truth=q.truth, seed=0)
+    calls_after_first = oracle.calls
+    r2 = engine.filter(SemanticPredicate(q.embed, oracle),
+                       ground_truth=q.truth, seed=0)
+    assert not r1.leaf_reports[0].proxy_reused
+    assert r2.leaf_reports[0].proxy_reused
+    assert r2.oracle_calls_train == 0
+    # repeat run re-buys nothing: every label is already cached
+    assert oracle.calls == calls_after_first
+    np.testing.assert_array_equal(r1.mask, r2.mask)
+
+
+def test_compound_fewer_calls_than_independent(corpus, small_cfgs):
+    """Acceptance: engine.filter(p1 & ~p2) on a shared DocumentStore
+    issues strictly fewer oracle calls than independent
+    ScaleDocPipeline.query runs of p1 and p2 on the same data."""
+    pcfg, ccfg = small_cfgs
+    q1 = make_query(corpus, 7, selectivity=0.3)
+    q2 = make_query(corpus, 13, selectivity=0.4)
+
+    pipe = ScaleDocPipeline(corpus.embeds, pcfg, ccfg)
+    o1, o2 = SimulatedOracle(q1.truth), SimulatedOracle(q2.truth)
+    pipe.query(q1.embed, o1, accuracy_target=0.9, seed=0)
+    pipe.query(q2.embed, o2, accuracy_target=0.9, seed=1)
+    indep = o1.calls + o2.calls
+
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    e1, e2 = SimulatedOracle(q1.truth), SimulatedOracle(q2.truth)
+    pred = (SemanticPredicate(q1.embed, e1, name="p1")
+            & ~SemanticPredicate(q2.embed, e2, name="p2"))
+    truth = q1.truth & ~q2.truth
+    res = engine.filter(pred, accuracy_target=0.9, ground_truth=truth,
+                        seed=0)
+    assert res.oracle_calls_total == e1.calls + e2.calls
+    assert res.oracle_calls_total < indep
+    # the later leaf only saw the still-undecided pending set
+    assert res.leaf_reports[-1].n_pending < N_DOCS
+    assert res.achieved_f1 >= 0.75
+
+
+def test_engine_over_memmap_store(corpus, small_cfgs, tmp_path):
+    pcfg, ccfg = small_cfgs
+    path = tmp_path / "embeds.npy"
+    np.save(path, corpus.embeds)
+    q = make_query(corpus, 7, selectivity=0.3)
+    engine = ScaleDocEngine(MemmapStore.from_npy(str(path)), pcfg, ccfg,
+                            chunk=512)
+    res = engine.filter(SemanticPredicate(q.embed, SimulatedOracle(q.truth)),
+                        ground_truth=q.truth)
+    assert res.achieved_f1 >= 0.85
+
+
+def test_engine_pins_user_wrapped_oracles(corpus, small_cfgs):
+    """Leaf cache keys embed id(oracle); a user-wrapped CachedOracle
+    dropped after the query must stay pinned, or a later oracle reusing
+    its id would be served the previous predicate's cached decisions."""
+    import gc
+    pcfg, ccfg = small_cfgs
+    q = make_query(corpus, 7, selectivity=0.3)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    masks = []
+    for i in range(3):
+        truth = make_query(corpus, 50 + i, selectivity=0.3).truth
+        oracle = CachedOracle(SimulatedOracle(truth))
+        res = engine.filter(SemanticPredicate(q.embed, oracle), seed=0)
+        masks.append(res.mask.copy())
+        del oracle
+        gc.collect()
+    assert not any(np.array_equal(masks[0], m) for m in masks[1:])
+
+
+def test_engine_clear_caches(corpus, small_cfgs):
+    pcfg, ccfg = small_cfgs
+    q = make_query(corpus, 7, selectivity=0.3)
+    oracle = SimulatedOracle(q.truth)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    engine.filter(SemanticPredicate(q.embed, oracle), seed=0)
+    assert engine._proxies and engine._decisions and engine._oracles
+    engine.clear_caches()
+    assert not (engine._proxies or engine._decisions or engine._oracles)
+    calls = oracle.calls
+    engine.filter(SemanticPredicate(q.embed, oracle), seed=0)
+    assert oracle.calls > calls        # labels really were re-bought
+
+
+def test_engine_rejects_non_predicate(corpus, small_cfgs):
+    pcfg, ccfg = small_cfgs
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with pytest.raises(TypeError):
+        engine.filter(np.ones(DIM))
+
+
+# -- config deprecation shim ---------------------------------------------------
+
+def test_use_margin_deprecation_shim():
+    with pytest.warns(DeprecationWarning):
+        cfg = CascadeConfig(use_margin=True)
+    assert cfg.margin_mode == "bernstein"
+    assert cfg.use_margin is None
+    with pytest.warns(DeprecationWarning):
+        cfg_off = CascadeConfig(use_margin=False)
+    assert cfg_off.margin_mode == "bootstrap"
+    # spelling the knob either way yields equal (and hashable) configs
+    assert cfg == CascadeConfig(margin_mode="bernstein")
+    assert hash(cfg_off) == hash(CascadeConfig())
+    assert CascadeConfig().use_margin is None  # default stays silent
