@@ -52,6 +52,54 @@ def run(rows: Rows) -> dict:
              f"min_hbm_bytes={hbm:.2e};ai={flops / hbm:.1f}")
     out["fused_scoring"] = {"us": us, "err": err}
 
+    # multi-query fused scoring: Q predicates in ONE pass (the PR-2
+    # fused_scores_multi kernel; timed via its jitted oracle on CPU,
+    # same convention as the rest of this file) vs the only way the
+    # fused kernel could serve Q predicates before the multi variant
+    # existed: Q independent single-query passes — the MLP (the
+    # dominant cost) re-runs per query. The stacked-matmul path (PR-1's
+    # score_collection_multi: unfused XLA MLP, then a separate z_q
+    # matmul) does the MLP once too, so on CPU its wall-time matches
+    # the fused pass; what the kernel removes is HBM traffic — every
+    # inter-stage activation round-trip — so that column is analytic
+    # (bytes that must move at minimum), as for kernels/fused_scoring
+    # above.
+    from repro.kernels.fused_scoring.scoring import fused_scores_multi
+    out["fused_scoring_multi"] = {}
+    zq_all = jax.random.normal(jax.random.PRNGKey(5), (16, L))
+    zq_all = zq_all / jnp.linalg.norm(zq_all, axis=-1, keepdims=True)
+    multi_fn = jax.jit(lambda d, z: sref.ref_scores_multi(
+        d, w1, b1, w2, b2, w3, b3, z))
+    single_fn = jax.jit(lambda d, z: sref.ref_scores(
+        d, w1, b1, w2, b2, w3, b3, z))
+    err_m = float(jnp.abs(
+        fused_scores_multi(small, w1, b1, w2, b2, w3, b3, zq_all,
+                           interpret=True)
+        - sref.ref_scores_multi(small, w1, b1, w2, b2, w3, b3, zq_all)
+    ).max())
+    # fused kernel HBM traffic: docs in + scores out. Stacked unfused
+    # path: docs in + h1, h2, z each written then re-read + scores out.
+    hbm_fused = N * (D + 16) * 4
+    hbm_stacked = N * (D + 2 * H + 2 * H + 2 * L + 16) * 4
+    for Q in (1, 4, 8, 16):
+        zqs = zq_all[:Q]
+        us_fused = _time(multi_fn, docs, zqs, reps=5)
+
+        def per_query(d, zs=zqs, q=Q):
+            for i in range(q):
+                o = single_fn(d, zs[i])
+            return o
+        us_per = _time(per_query, docs, reps=5)
+        rows.add(f"kernels/fused_scoring_multi/q{Q}", us_fused,
+                 f"docs={N};per_query_us={us_per:.0f};"
+                 f"speedup_vs_per_query={us_per / us_fused:.2f}x;"
+                 f"fused_hbm_bytes={hbm_fused + N * Q * 4:.2e};"
+                 f"stacked_hbm_bytes={hbm_stacked + N * Q * 4:.2e};"
+                 f"err={err_m:.1e}")
+        out["fused_scoring_multi"][Q] = {
+            "fused_us": us_fused, "per_query_us": us_per,
+            "speedup": us_per / us_fused, "err": err_m}
+
     # contrastive loss batch
     from repro.kernels.contrastive import ref as cref
     from repro.kernels.contrastive.contrastive import contrastive_losses

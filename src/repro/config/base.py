@@ -299,7 +299,15 @@ class ProxyConfig:
 
 @dataclass(frozen=True)
 class CascadeConfig:
-    """ScaleDoc's adaptive cascade (paper §4, §5)."""
+    """ScaleDoc's adaptive cascade (paper §4, §5).
+
+    The selection safety margin is controlled by ``margin_mode``
+    ("none" | "bernstein" | "bootstrap"). The boolean ``use_margin``
+    knob is DEPRECATED: it is accepted at construction for backward
+    compatibility, emits a DeprecationWarning, folds into
+    ``margin_mode`` ("bernstein" when true), and is normalized back to
+    None so equivalent configs compare and hash equal.
+    """
     accuracy_target: float = 0.90
     num_bins: int = 64           # discretization granularity (paper §5)
     calib_fraction: float = 0.05  # calibration sample (paper: 5%)

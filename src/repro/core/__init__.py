@@ -1,6 +1,8 @@
 # ScaleDoc's primary contribution: query-aware contrastive proxy training
-# (§3) + adaptive cascade with calibrated thresholds (§4), composed by
-# ScaleDocPipeline.
+# (§3) + adaptive cascade with calibrated thresholds (§4). These pieces
+# are composed by repro.engine.ScaleDocEngine (the primary API);
+# ScaleDocPipeline remains only as a per-query compatibility shim over
+# it.
 from repro.core.cascade import (  # noqa: F401
     CascadeResult,
     f1_score,

@@ -37,6 +37,14 @@ class QueryStats:
 
 
 class ScaleDocPipeline:
+    """Compatibility shim — NOT the primary API.
+
+    Constructs a private ScaleDocEngine per instance and forwards
+    ``query``; it keeps no predicate algebra, no pluggable strategies,
+    and shares no caches across instances. New code should construct
+    repro.engine.ScaleDocEngine directly (see docs/engine.md).
+    """
+
     def __init__(self, embeds: np.ndarray, proxy_cfg: ProxyConfig,
                  cascade_cfg: CascadeConfig, use_kernel: bool = False):
         from repro.engine import ScaleDocEngine

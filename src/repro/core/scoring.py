@@ -15,9 +15,14 @@ Two entry points:
   * ``score_collection_multi`` — many predicates in ONE pass over the
     collection: each chunk is read from the store once, encoded once per
     distinct proxy, and all pending query vectors sharing that proxy are
-    scored with a single stacked z_q matmul (the engine's multi-predicate
-    path; with the raw-embedding proxy the whole batch collapses to one
-    matmul per chunk).
+    scored with a single stacked z_q matmul (with the raw-embedding
+    proxy the whole batch collapses to one matmul per chunk).
+
+These are the *reference* scoring paths. The engine's hot path is
+repro.engine.executor.ScoringExecutor, which adds chunk prefetching
+(double buffering), mesh sharding, and the fused multi-query Pallas
+kernel — its default mode runs the exact per-chunk jitted programs
+defined here, so both paths produce bit-identical scores.
 
 ``embeds`` may be a raw (N, D) array or anything exposing
 ``iter_chunks(chunk)`` (see repro.engine.store.DocumentStore), so
@@ -56,29 +61,70 @@ def score_collection(params: Dict, e_q: jnp.ndarray, embeds,
         from repro.kernels.fused_scoring import ops as scoring_ops
         return np.asarray(scoring_ops.score_collection(params, e_q, embeds))
     z_q = l2_normalize(encoder_apply(params, e_q))
-
-    @jax.jit
-    def score_chunk(chunk_embeds):
-        z = encoder_apply(params, chunk_embeds)
-        cos = l2_normalize(z) @ z_q
-        return (1.0 + cos) * 0.5
-
     outs = []
     for _, block in _iter_chunks(embeds, chunk):
-        outs.append(np.asarray(score_chunk(block)))
+        outs.append(np.asarray(_single_chunk_scores(params, block, z_q)))
     return np.concatenate(outs).astype(np.float32)
 
 
-@jax.jit
-def _proxy_chunk_scores(params, block, zq_t):
+def _single_chunk_scores_impl(params, block, z_q):
+    """block: (B, D); z_q: (latent,) normalized query latent.
+
+    Module-level (rather than a closure) so the streaming executor
+    (repro.engine.executor) runs the *same* jitted program and stays
+    bit-identical to this reference path; the unjitted impl is what the
+    executor wraps in shard_map for the multi-device path.
+    """
+    z = encoder_apply(params, block)
+    cos = l2_normalize(z) @ z_q
+    return (1.0 + cos) * 0.5
+
+
+_single_chunk_scores = jax.jit(_single_chunk_scores_impl)
+
+
+def _proxy_chunk_scores_impl(params, block, zq_t):
     """block: (B, D); zq_t: (latent, Q) of normalized query latents."""
     z = l2_normalize(encoder_apply(params, block))
     return (1.0 + z @ zq_t) * 0.5
 
 
-@jax.jit
-def _raw_chunk_scores(block, zq_t):
+def _raw_chunk_scores_impl(block, zq_t):
     return (1.0 + l2_normalize(block) @ zq_t) * 0.5
+
+
+_proxy_chunk_scores = jax.jit(_proxy_chunk_scores_impl)
+_raw_chunk_scores = jax.jit(_raw_chunk_scores_impl)
+
+
+def group_jobs(jobs: Sequence[Tuple[Optional[Dict], np.ndarray]]
+               ) -> Tuple[List[Tuple[Optional[Dict], List[int]]],
+                          List[jnp.ndarray]]:
+    """Group (params, e_q) jobs by proxy identity for batched scoring.
+
+    Returns ``(groups, zq_stacks)``: per distinct params object (or
+    None = raw cosine) the job-column indices it covers, plus the
+    matching (Q_g, latent) stack of normalized query latents. Shared by
+    ``score_collection_multi`` and the streaming executor so grouping
+    key and column order cannot drift between the two paths.
+    """
+    groups: List[Tuple[Optional[Dict], List[int]]] = []
+    by_id: Dict[int, int] = {}
+    for j, (params, _) in enumerate(jobs):
+        key = -1 if params is None else id(params)
+        if key not in by_id:
+            by_id[key] = len(groups)
+            groups.append((params, []))
+        groups[by_id[key]][1].append(j)
+
+    zq_stacks = []
+    for params, cols in groups:
+        e_qs = jnp.stack([jnp.asarray(jobs[j][1]) for j in cols])
+        if params is None:
+            zq_stacks.append(l2_normalize(e_qs))
+        else:
+            zq_stacks.append(l2_normalize(encoder_apply(params, e_qs)))
+    return groups, zq_stacks
 
 
 def score_collection_multi(jobs: Sequence[Tuple[Optional[Dict], np.ndarray]],
@@ -93,25 +139,8 @@ def score_collection_multi(jobs: Sequence[Tuple[Optional[Dict], np.ndarray]],
     if not jobs:
         return np.zeros((_num_docs(embeds), 0), np.float32)
 
-    # group job columns by proxy identity
-    groups: List[Tuple[Optional[Dict], List[int]]] = []
-    by_id: Dict[int, int] = {}
-    for j, (params, _) in enumerate(jobs):
-        key = -1 if params is None else id(params)
-        if key not in by_id:
-            by_id[key] = len(groups)
-            groups.append((params, []))
-        groups[by_id[key]][1].append(j)
-
-    # normalized query latents per group, stacked (latent, Q)
-    zq_ts = []
-    for params, cols in groups:
-        e_qs = jnp.stack([jnp.asarray(jobs[j][1]) for j in cols])
-        if params is None:
-            zq = l2_normalize(e_qs)
-        else:
-            zq = l2_normalize(encoder_apply(params, e_qs))
-        zq_ts.append(zq.T)
+    groups, zq_stacks = group_jobs(jobs)
+    zq_ts = [zq.T for zq in zq_stacks]
 
     n = _num_docs(embeds)
     out = np.empty((n, len(jobs)), np.float32)

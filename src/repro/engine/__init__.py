@@ -2,11 +2,16 @@
 #   * DocumentStore — chunked / memory-mapped collection access
 #   * Predicate algebra — SemanticPredicate composed with & | ~
 #   * ScaleDocEngine — cross-query caches + cost-ordered compound plans
+#   * ScoringExecutor — sharded, double-buffered scoring hot path
 #   * cascade-strategy registry — scaledoc | naive | probe | supg
 from repro.engine.engine import (  # noqa: F401
     FilterResult,
     LeafReport,
     ScaleDocEngine,
+)
+from repro.engine.executor import (  # noqa: F401
+    ScoringExecutor,
+    ScoringStats,
 )
 from repro.engine.predicate import (  # noqa: F401
     And,

@@ -17,8 +17,17 @@ state across queries:
     short-circuit out of every later leaf's training sample, scoring
     pass and cascade (QUEST-style compound-predicate optimization);
   * the planning pass scores *all* leaves' query vectors in one
-    streaming pass over the store (stacked z_q matmul,
-    ``score_collection_multi``).
+    streaming pass over the store (one fused multi-query pass via the
+    executor).
+
+All full-collection scoring runs through the sharded, double-buffered
+``ScoringExecutor`` (repro.engine.executor): chunk *k+1* prefetches off
+the store while chunk *k* scores, document tiles shard across the
+device mesh when one is given, and per-pass ``ScoringStats`` surface
+through ``FilterResult.scoring_stats``. With default settings the
+executor replays the exact jitted chunk programs of
+repro.core.scoring, so decisions are bit-identical to the pre-executor
+engine.
 
 Cascade execution is pluggable via the strategy registry
 (``scaledoc`` | ``naive`` | ``probe`` | ``supg``).
@@ -36,8 +45,8 @@ from repro.config.base import CascadeConfig, ProxyConfig, replace
 from repro.core import oracle as oracle_mod
 from repro.core.cascade import CascadeResult, f1_score
 from repro.core.oracle import CachedOracle
-from repro.core.scoring import score_collection, score_collection_multi
 from repro.core.trainer import train_proxy
+from repro.engine.executor import ScoringExecutor, ScoringStats
 from repro.engine.predicate import (UNKNOWN, Not, Predicate,
                                     SemanticPredicate)
 from repro.engine.registry import get_strategy
@@ -126,6 +135,10 @@ class FilterResult:
     n_docs: int
     achieved_f1: Optional[float] = None
     achieved_exact: Optional[float] = None
+    # aggregated executor accounting over every scoring pass this filter()
+    # ran (planning + per-leaf); zeroed fields when no pass was needed
+    scoring_stats: ScoringStats = dataclasses.field(
+        default_factory=ScoringStats)
 
     @property
     def data_reduction(self) -> float:
@@ -138,7 +151,8 @@ class ScaleDocEngine:
     def __init__(self, store, proxy_cfg: Optional[ProxyConfig] = None,
                  cascade_cfg: Optional[CascadeConfig] = None, *,
                  strategy: str = "scaledoc", use_kernel: bool = False,
-                 chunk: int = 8192):
+                 chunk: int = 8192, mesh=None,
+                 executor: Optional[ScoringExecutor] = None):
         self.store: DocumentStore = as_store(store)
         proxy_cfg = proxy_cfg or ProxyConfig()
         self.proxy_cfg = replace(proxy_cfg, embed_dim=self.store.dim)
@@ -146,6 +160,11 @@ class ScaleDocEngine:
         self.strategy = strategy
         self.use_kernel = use_kernel
         self.chunk = chunk
+        # the scoring hot path: prefetching + (optional) mesh sharding +
+        # (optional) fused multi-query kernel. A caller-built executor
+        # wins over the convenience kwargs.
+        self.executor = executor or ScoringExecutor(
+            chunk=chunk, use_kernel=use_kernel, mesh=mesh)
         self._oracles: Dict[int, CachedOracle] = {}
         self._proxies: Dict[str, Dict] = {}      # leaf.key -> params
         self._sel_est: Dict[str, float] = {}     # measured selectivity
@@ -184,8 +203,8 @@ class ScaleDocEngine:
 
     # -- planning -------------------------------------------------------
 
-    def _estimate_selectivities(self, leaves: List[SemanticPredicate]
-                                ) -> Dict[str, float]:
+    def _estimate_selectivities(self, leaves: List[SemanticPredicate],
+                                stats: ScoringStats) -> Dict[str, float]:
         """Per-leaf positive-rate estimates for plan ordering only.
 
         Leaves executed before (this or any past query) use their
@@ -204,7 +223,8 @@ class ScaleDocEngine:
                 jobs.append((self._proxies.get(leaf.key), leaf.e_q))
                 job_leaves.append(leaf)
         if jobs:
-            cols = score_collection_multi(jobs, self.store, chunk=self.chunk)
+            cols, pass_stats = self.executor.score_multi(jobs, self.store)
+            stats.merge(pass_stats)
             for j, leaf in enumerate(job_leaves):
                 s = cols[:, j]
                 if jobs[j][0] is not None:
@@ -220,7 +240,7 @@ class ScaleDocEngine:
     def _execute_leaf(self, leaf: SemanticPredicate, pending: np.ndarray,
                       ccfg: CascadeConfig, rng: np.random.Generator,
                       train_key, truth_local: Optional[np.ndarray],
-                      seed: int) -> LeafReport:
+                      seed: int, stats: ScoringStats) -> LeafReport:
         oracle = self._cached_oracle(leaf.oracle)
         calls0 = oracle.calls
         n = len(self.store)
@@ -276,9 +296,9 @@ class ScaleDocEngine:
                 self._proxies[leaf.key] = params
         train_calls = oracle.calls - calls0
 
-        scores = score_collection(params, leaf.e_q, embeds_view,
-                                  chunk=self.chunk,
-                                  use_kernel=self.use_kernel)
+        scores, pass_stats = self.executor.score(params, leaf.e_q,
+                                                 embeds_view)
+        stats.merge(pass_stats)
         cres = get_strategy(self.strategy)(
             scores, _SubsetOracle(oracle, pending), ccfg,
             ground_truth=truth_local, rng=rng)
@@ -317,10 +337,11 @@ class ScaleDocEngine:
         rng = np.random.default_rng(seed)
 
         leaves = predicate.leaves()
+        scoring_stats = ScoringStats()
         # single-leaf predicates have nothing to reorder — skip the
         # estimation pass over the collection
-        sel = (self._estimate_selectivities(leaves) if len(leaves) > 1
-               else {})
+        sel = (self._estimate_selectivities(leaves, scoring_stats)
+               if len(leaves) > 1 else {})
         order, _ = predicate.plan(sel)
         leaf_truth = _derivable_leaf_truth(predicate, ground_truth)
 
@@ -344,7 +365,8 @@ class ScaleDocEngine:
                                            ordinal) if ordinal else \
                 jax.random.PRNGKey(seed)
             report = self._execute_leaf(leaf, pending, ccfg, rng,
-                                        train_key, truth_local, seed)
+                                        train_key, truth_local, seed,
+                                        scoring_stats)
             reports.append(report)
             vals = np.full(n, UNKNOWN, np.int8)
             vals[pending] = report.labels.astype(np.int8)
@@ -365,7 +387,8 @@ class ScaleDocEngine:
             leaf_reports=reports,
             plan=" -> ".join(r.name for r in reports) or "(decided)",
             wall_seconds=time.time() - t0,
-            n_docs=n)
+            n_docs=n,
+            scoring_stats=scoring_stats)
         if ground_truth is not None:
             truth = np.asarray(ground_truth).astype(bool)
             result.achieved_f1 = f1_score(result.mask, truth)

@@ -1,8 +1,14 @@
-"""jit'd dispatch wrapper for the fused scoring kernel.
+"""jit'd dispatch wrappers for the fused scoring kernels.
 
-On TPU runs the Pallas kernel; elsewhere (or when ``force_ref``) falls
-back to the pure-jnp oracle (numerically identical, used by tests). The
+On TPU runs the Pallas kernels; elsewhere (or when ``force_ref``) falls
+back to the pure-jnp oracles (numerically identical, used by tests). The
 proxy params come straight from repro.core.encoder's param tree.
+
+``score_collection`` is the single-query entry; ``score_collection_multi``
+scores a (Q, D) stack of query embeddings against one proxy in a single
+pass per chunk (the multi-query kernel variant). The engine's streaming
+hot path lives in repro.engine.executor and calls ``score_tile_multi``
+per prefetched tile.
 """
 from __future__ import annotations
 
@@ -12,7 +18,8 @@ import numpy as np
 
 from repro.core.encoder import encoder_apply, l2_normalize
 from repro.kernels.fused_scoring import ref
-from repro.kernels.fused_scoring.scoring import fused_scores
+from repro.kernels.fused_scoring.scoring import fused_scores, \
+    fused_scores_multi
 
 
 def _unpack(params):
@@ -40,4 +47,47 @@ def score_collection(params, e_q, embeds, *, chunk: int = 65536,
         else:
             outs.append(np.asarray(ref.ref_scores(
                 tile, w1, b1, w2, b2, w3, b3, zq)))
+    return np.concatenate(outs).astype(np.float32)
+
+
+def normalized_query_latents(params, e_qs) -> jnp.ndarray:
+    """(Q, D) query embeddings -> (Q, L) unit latents for the multi
+    kernel; ``params=None`` means raw-embedding cosine (no proxy)."""
+    e_qs = jnp.atleast_2d(jnp.asarray(e_qs))
+    if params is None:
+        return l2_normalize(e_qs)
+    return l2_normalize(encoder_apply(params, e_qs))
+
+
+def score_tile_multi(params, zq_stack, tile, *, force_ref: bool = False,
+                     interpret: bool = False) -> jnp.ndarray:
+    """One document tile (B, D) x (Q, L) normalized latents -> (B, Q).
+
+    Dispatches to the fused multi-query Pallas kernel on TPU (or under
+    ``interpret``); otherwise the jnp oracle. ``params=None`` (raw
+    cosine) has no MLP to fuse and is a plain stacked matmul.
+    """
+    tile = jnp.asarray(tile)
+    if params is None:
+        return 0.5 * (1.0 + l2_normalize(tile) @ zq_stack.T)
+    w1, b1, w2, b2, w3, b3 = _unpack(params)
+    on_tpu = jax.default_backend() == "tpu"
+    if (on_tpu or interpret) and not force_ref:
+        return fused_scores_multi(tile, w1, b1, w2, b2, w3, b3, zq_stack,
+                                  interpret=interpret)
+    return ref.ref_scores_multi(tile, w1, b1, w2, b2, w3, b3, zq_stack)
+
+
+def score_collection_multi(params, e_qs, embeds, *, chunk: int = 65536,
+                           force_ref: bool = False,
+                           interpret: bool = False) -> np.ndarray:
+    """(N, D) documents x (Q, D) query embeddings sharing one proxy ->
+    (N, Q) scores via the fused multi-query kernel."""
+    zq = normalized_query_latents(params, e_qs)
+    outs = []
+    n = embeds.shape[0]
+    for start in range(0, n, chunk):
+        outs.append(np.asarray(score_tile_multi(
+            params, zq, embeds[start:start + chunk], force_ref=force_ref,
+            interpret=interpret)))
     return np.concatenate(outs).astype(np.float32)

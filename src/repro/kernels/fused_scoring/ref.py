@@ -11,3 +11,12 @@ def ref_scores(docs, w1, b1, w2, b2, w3, b3, zq_normalized):
     z = h @ w3.astype(jnp.float32) + b3
     z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
     return 0.5 * (1.0 + z @ zq_normalized)
+
+
+def ref_scores_multi(docs, w1, b1, w2, b2, w3, b3, zq_stack):
+    """Multi-query oracle: zq_stack (Q, L) unit rows -> (N, Q) scores."""
+    h = jax.nn.gelu(docs.astype(jnp.float32) @ w1.astype(jnp.float32) + b1)
+    h = jax.nn.gelu(h @ w2.astype(jnp.float32) + b2)
+    z = h @ w3.astype(jnp.float32) + b3
+    z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
+    return 0.5 * (1.0 + z @ zq_stack.T)

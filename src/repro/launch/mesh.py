@@ -26,3 +26,14 @@ def make_mesh(cfg: MeshConfig):
 def make_test_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many devices the test process has."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_scoring_mesh(num_devices: Optional[int] = None):
+    """1-D ("data",) mesh for the streaming scoring executor
+    (repro.engine.executor): document tiles row-shard over it, so the
+    right shape is simply every device the process owns. ``None`` = all
+    local devices; a 1-device mesh degrades to the executor's
+    single-device path."""
+    devs = jax.devices()
+    n = num_devices or len(devs)
+    return jax.make_mesh((n,), ("data",), devices=devs[:n])

@@ -1,0 +1,59 @@
+"""Docs stay true: every fenced ```python block in README.md and
+docs/*.md executes, and every relative markdown link resolves.
+
+Blocks within one file run sequentially in a shared namespace (later
+snippets may use names defined by earlier ones), so docs read as one
+continuous session. Non-python fences (ascii diagrams, bash, tables)
+are ignored.
+"""
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([ROOT / "README.md"] + list((ROOT / "docs").glob("*.md")))
+
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+# [text](target) — skip images, absolute URLs and pure anchors
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def _blocks(path: pathlib.Path):
+    return [m.group(1) for m in _FENCE.finditer(path.read_text())]
+
+
+def test_doc_files_exist():
+    names = {p.name for p in DOC_FILES}
+    assert {"README.md", "architecture.md", "kernels.md",
+            "engine.md"} <= names
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_python_snippets_execute(path):
+    blocks = _blocks(path)
+    if not blocks:
+        pytest.skip(f"{path.name}: no python blocks")
+    namespace = {"__name__": f"docs_snippet_{path.stem}"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"{path.name}[block {i}]", "exec"),
+                 namespace)
+        except Exception as exc:  # pragma: no cover - failure reporting
+            pytest.fail(f"{path.name} python block {i} failed: "
+                        f"{type(exc).__name__}: {exc}\n{block}")
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_no_dead_relative_links(path):
+    text = path.read_text()
+    dead = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            dead.append(target)
+    assert not dead, f"{path.name}: dead relative links: {dead}"

@@ -1,0 +1,326 @@
+"""ScoringExecutor equivalence suite (PR 2).
+
+Pins the three claims the executor makes:
+  * the multi-query fused kernel == jnp oracle == pure numpy;
+  * sharded (multi-device) scoring == single-device scoring;
+  * engine decisions through the executor are bit-identical to the
+    PR-1 scoring path (core.scoring), including over MemmapStore.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import SimulatedOracle
+from repro.core.encoder import encoder_init
+from repro.core.scoring import score_collection, score_collection_multi
+from repro.data import make_corpus, make_query
+from repro.engine import (InMemoryStore, MemmapStore, ScaleDocEngine,
+                          ScoringExecutor, ScoringStats, SemanticPredicate)
+
+N_DOCS, DIM = 2000, 64
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(0, n_docs=N_DOCS, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def small_cfgs():
+    pcfg = ProxyConfig(embed_dim=DIM, hidden_dim=128, latent_dim=64,
+                       proj_dim=32, phase1_steps=60, phase2_steps=60)
+    return pcfg, CascadeConfig(accuracy_target=0.9)
+
+
+@pytest.fixture(scope="module")
+def proxy_params():
+    cfg = ProxyConfig(embed_dim=DIM, hidden_dim=32, latent_dim=16,
+                      proj_dim=8)
+    return encoder_init(jax.random.PRNGKey(0), cfg)
+
+
+# -- multi-query fused kernel vs oracles --------------------------------------
+
+def _np_gelu(x):
+    # numpy twin of jax.nn.gelu's default tanh approximation
+    return 0.5 * x * (1.0 + np.tanh(
+        np.sqrt(2.0 / np.pi) * (x + 0.044715 * x ** 3)))
+
+
+def _np_scores_multi(docs, w1, b1, w2, b2, w3, b3, zq_stack):
+    h = _np_gelu(docs @ w1 + b1)
+    h = _np_gelu(h @ w2 + b2)
+    z = h @ w3 + b3
+    z = z / np.maximum(np.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
+    return 0.5 * (1.0 + z @ zq_stack.T)
+
+
+@pytest.mark.parametrize("n,q", [(64, 1), (300, 5), (257, 16), (1, 3)])
+def test_fused_multi_kernel_vs_ref_vs_numpy(n, q):
+    from repro.kernels.fused_scoring import ref
+    from repro.kernels.fused_scoring.scoring import fused_scores_multi
+    d, h, l = 128, 64, 32
+    docs = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    ws = [jax.random.normal(jax.random.PRNGKey(i + 1), s) * 0.05
+          for i, s in enumerate([(d, h), (h, h), (h, l)])]
+    bs = [jnp.zeros((h,)), jnp.zeros((h,)), jnp.zeros((l,))]
+    zq = jax.random.normal(jax.random.PRNGKey(9), (q, l))
+    zq = zq / jnp.linalg.norm(zq, axis=-1, keepdims=True)
+
+    out_k = fused_scores_multi(docs, ws[0], bs[0], ws[1], bs[1], ws[2],
+                               bs[2], zq, block_n=64, interpret=True)
+    out_r = ref.ref_scores_multi(docs, ws[0], bs[0], ws[1], bs[1], ws[2],
+                                 bs[2], zq)
+    out_n = _np_scores_multi(
+        np.asarray(docs, np.float64), *[np.asarray(a, np.float64)
+                                        for a in (ws[0], bs[0], ws[1],
+                                                  bs[1], ws[2], bs[2])],
+        np.asarray(zq, np.float64))
+    assert out_k.shape == (n, q)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_k), out_n, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_fused_multi_columns_match_single_kernel():
+    """Each column of the multi kernel == the single-query kernel."""
+    from repro.kernels.fused_scoring.scoring import (fused_scores,
+                                                     fused_scores_multi)
+    d, h, l = 64, 32, 16
+    docs = jax.random.normal(jax.random.PRNGKey(0), (100, d))
+    ws = [jax.random.normal(jax.random.PRNGKey(i + 1), s) * 0.05
+          for i, s in enumerate([(d, h), (h, h), (h, l)])]
+    bs = [jnp.zeros((h,)), jnp.zeros((h,)), jnp.zeros((l,))]
+    zq = jax.random.normal(jax.random.PRNGKey(9), (3, l))
+    zq = zq / jnp.linalg.norm(zq, axis=-1, keepdims=True)
+    multi = fused_scores_multi(docs, ws[0], bs[0], ws[1], bs[1], ws[2],
+                               bs[2], zq, block_n=32, interpret=True)
+    for i in range(3):
+        single = fused_scores(docs, ws[0], bs[0], ws[1], bs[1], ws[2],
+                              bs[2], zq[i], block_n=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(multi[:, i]),
+                                   np.asarray(single), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_ops_score_collection_multi_roundtrip(corpus, proxy_params):
+    """ops kernel dispatch == core.scoring jnp path per column."""
+    from repro.kernels.fused_scoring import ops
+    rng = np.random.default_rng(1)
+    e_qs = rng.normal(size=(3, DIM)).astype(np.float32)
+    out = ops.score_collection_multi(proxy_params, e_qs,
+                                     corpus.embeds[:500], chunk=128,
+                                     interpret=True)
+    assert out.shape == (500, 3)
+    for i in range(3):
+        np.testing.assert_allclose(
+            out[:, i],
+            score_collection(proxy_params, e_qs[i], corpus.embeds[:500]),
+            rtol=1e-5, atol=1e-5)
+
+
+# -- executor vs reference scoring path ---------------------------------------
+
+def test_executor_single_bit_identical(corpus, proxy_params):
+    store = InMemoryStore(corpus.embeds)
+    e_q = np.random.default_rng(2).normal(size=DIM).astype(np.float32)
+    ex = ScoringExecutor(chunk=700)
+    got, stats = ex.score(proxy_params, e_q, store)
+    want = score_collection(proxy_params, e_q, store, chunk=700)
+    np.testing.assert_array_equal(got, want)
+    assert stats.docs_scored == N_DOCS
+    assert stats.tiles_scored == 3
+    assert stats.bytes_streamed == N_DOCS * DIM * 4
+    assert stats.paths == ("jnp",)
+
+
+def test_executor_multi_bit_identical(corpus, proxy_params):
+    store = InMemoryStore(corpus.embeds)
+    rng = np.random.default_rng(3)
+    e_q1 = rng.normal(size=DIM).astype(np.float32)
+    e_q2 = rng.normal(size=DIM).astype(np.float32)
+    jobs = [(proxy_params, e_q1), (None, e_q2), (proxy_params, e_q2)]
+    ex = ScoringExecutor(chunk=700)
+    got, stats = ex.score_multi(jobs, store)
+    want = score_collection_multi(jobs, store, chunk=700)
+    np.testing.assert_array_equal(got, want)
+    assert stats.queries_scored == 3 and stats.docs_scored == N_DOCS
+
+
+def test_executor_kernel_path_close(corpus, proxy_params):
+    """interpret-mode fused kernel path tracks the jnp path."""
+    store = InMemoryStore(corpus.embeds[:512])
+    rng = np.random.default_rng(4)
+    jobs = [(proxy_params, rng.normal(size=DIM).astype(np.float32))
+            for _ in range(3)]
+    ex = ScoringExecutor(chunk=256, use_kernel=True, interpret=True)
+    got, stats = ex.score_multi(jobs, store)
+    want = score_collection_multi(jobs, store, chunk=256)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert "fused" in stats.paths
+
+
+def test_executor_empty_jobs(corpus):
+    ex = ScoringExecutor(chunk=700)
+    out, stats = ex.score_multi([], InMemoryStore(corpus.embeds))
+    assert out.shape == (N_DOCS, 0)
+    assert stats.tiles_scored == 0
+
+
+def test_scoring_stats_merge():
+    a = ScoringStats(docs_scored=10, tiles_scored=1, bytes_streamed=40,
+                     host_io_seconds=0.1, compute_seconds=0.2,
+                     wall_seconds=0.3, paths=("jnp",))
+    b = ScoringStats(docs_scored=5, tiles_scored=2, bytes_streamed=20,
+                     host_io_seconds=0.0, compute_seconds=0.1,
+                     wall_seconds=0.1, devices=4, paths=("shard",))
+    a.merge(b)
+    assert a.docs_scored == 15 and a.tiles_scored == 3
+    assert a.bytes_streamed == 60 and a.devices == 4
+    assert set(a.paths) == {"jnp", "shard"}
+
+
+# -- sharded vs single-device parity ------------------------------------------
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.config.base import ProxyConfig
+    from repro.core.encoder import encoder_init
+    from repro.core.scoring import score_collection, score_collection_multi
+    from repro.engine import InMemoryStore, ScoringExecutor
+
+    rng = np.random.default_rng(0)
+    N, D = 1999, 64                      # deliberately not divisible by 4
+    emb = rng.normal(size=(N, D)).astype(np.float32)
+    cfg = ProxyConfig(embed_dim=D, hidden_dim=32, latent_dim=16, proj_dim=8)
+    params = encoder_init(jax.random.PRNGKey(0), cfg)
+    e_q = rng.normal(size=D).astype(np.float32)
+    e_q2 = rng.normal(size=D).astype(np.float32)
+    store = InMemoryStore(emb)
+    from repro.launch.mesh import make_scoring_mesh
+    mesh = make_scoring_mesh()
+    assert mesh.devices.size == 4
+    ex = ScoringExecutor(chunk=700, mesh=mesh)
+
+    s, st = ex.score(params, e_q, store)
+    assert st.devices == 4 and st.paths == ("shard",)
+    ref = score_collection(params, e_q, store, chunk=700)
+    np.testing.assert_allclose(s, ref, rtol=1e-6, atol=1e-6)
+
+    jobs = [(params, e_q), (None, e_q2), (params, e_q2)]
+    m, st2 = ex.score_multi(jobs, store)
+    refm = score_collection_multi(jobs, store, chunk=700)
+    np.testing.assert_allclose(m, refm, rtol=1e-6, atol=1e-6)
+    print("SHARDED-PARITY-OK")
+""")
+
+
+def test_sharded_matches_single_device(tmp_path):
+    """Runs in a subprocess: the device count is locked per process, so
+    forcing 4 host devices needs a fresh interpreter."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "SHARDED-PARITY-OK" in proc.stdout
+
+
+# -- engine decisions: executor vs PR-1 path, memmap vs in-memory -------------
+
+class _LegacyExecutor:
+    """The PR-1 scoring path wearing the executor interface: plain
+    chunked core.scoring calls, no prefetch, no sharding, no kernel."""
+
+    def score(self, params, e_q, store):
+        return (score_collection(params, e_q, store, chunk=700),
+                ScoringStats())
+
+    def score_multi(self, jobs, store):
+        return (score_collection_multi(jobs, store, chunk=700),
+                ScoringStats())
+
+
+def _filter_outputs(engine, corpus, with_compound=True):
+    q1 = make_query(corpus, 7, selectivity=0.3)
+    q2 = make_query(corpus, 13, selectivity=0.4)
+    outs = []
+    res = engine.filter(SemanticPredicate(q1.embed,
+                                          SimulatedOracle(q1.truth),
+                                          name="p1"), seed=0)
+    outs.append(res)
+    if with_compound:
+        pred = (SemanticPredicate(q1.embed, SimulatedOracle(q1.truth),
+                                  name="p1")
+                & ~SemanticPredicate(q2.embed, SimulatedOracle(q2.truth),
+                                     name="p2"))
+        outs.append(engine.filter(pred, accuracy_target=0.9, seed=0))
+    return outs
+
+
+def test_engine_decisions_bit_identical_to_pr1_path(corpus, small_cfgs):
+    """Acceptance: accept/reject/ambiguous decisions are bit-identical
+    between the executor and the PR-1 scoring path, for single and
+    compound predicates."""
+    pcfg, ccfg = small_cfgs
+    new = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg,
+                         chunk=700)
+    old = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg,
+                         chunk=700, executor=_LegacyExecutor())
+    for res_new, res_old in zip(_filter_outputs(new, corpus),
+                                _filter_outputs(old, corpus)):
+        np.testing.assert_array_equal(res_new.mask, res_old.mask)
+        assert res_new.oracle_calls_total == res_old.oracle_calls_total
+        assert res_new.plan == res_old.plan
+        for ln, lo in zip(res_new.leaf_reports, res_old.leaf_reports):
+            np.testing.assert_array_equal(ln.labels, lo.labels)
+            if ln.scores is not None:
+                np.testing.assert_array_equal(ln.scores, lo.scores)
+
+
+def test_memmap_streaming_decisions_match_in_memory(corpus, small_cfgs,
+                                                    tmp_path):
+    """Acceptance: streaming from disk changes nothing — decisions over
+    MemmapStore are identical to InMemoryStore."""
+    pcfg, ccfg = small_cfgs
+    path = tmp_path / "embeds.npy"
+    np.save(path, corpus.embeds)
+    mem = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg,
+                         chunk=512)
+    mm = ScaleDocEngine(MemmapStore.from_npy(str(path)), pcfg, ccfg,
+                        chunk=512)
+    for res_mem, res_mm in zip(_filter_outputs(mem, corpus),
+                               _filter_outputs(mm, corpus)):
+        np.testing.assert_array_equal(res_mem.mask, res_mm.mask)
+        assert res_mem.oracle_calls_total == res_mm.oracle_calls_total
+    assert res_mm.scoring_stats.bytes_streamed > 0
+
+
+def test_filter_result_scoring_stats_populated(corpus, small_cfgs):
+    pcfg, ccfg = small_cfgs
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg,
+                            chunk=512)
+    q = make_query(corpus, 7, selectivity=0.3)
+    res = engine.filter(SemanticPredicate(q.embed,
+                                          SimulatedOracle(q.truth)),
+                        seed=0)
+    st = res.scoring_stats
+    assert st.docs_scored == N_DOCS
+    assert st.tiles_scored == int(np.ceil(N_DOCS / 512))
+    assert st.bytes_streamed == N_DOCS * DIM * 4
+    assert st.wall_seconds > 0 and st.paths == ("jnp",)

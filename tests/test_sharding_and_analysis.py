@@ -65,8 +65,10 @@ def test_analyzer_counts_scan_trips():
     true_flops = 8 * 2 * 64 * 128 * 128
     assert abs(rep.flops - true_flops) / true_flops < 0.05
     # XLA's own analysis undercounts by the trip count
-    xla = comp.cost_analysis()["flops"]
-    assert xla < true_flops / 2
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):     # older jax returned [dict] per device
+        ca = ca[0]
+    assert ca["flops"] < true_flops / 2
 
 
 def test_analyzer_matmul_exact():
