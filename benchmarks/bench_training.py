@@ -1,0 +1,177 @@
+"""Proxy-training benchmark: the compiled scan trainer vs the per-step
+host loop, and vmapped multi-leaf training vs sequential.
+
+ScaleDoc's online latency for an ad-hoc predicate is dominated by
+training the proxy before the cascade can filter anything (paper
+§3.2/§5). The proxy is tiny (a 3-layer MLP over a small contrastive
+batch), so at default ``ProxyConfig`` step counts (60+60) the PR-2 host
+loop — one jitted dispatch plus one device->host ``float(loss)`` sync
+per step — is dispatch-bound, exactly the regime ``lax.scan`` fusion
+removes. The headline rows use a CPU-scaled small proxy (the same
+scaling convention as the rest of benchmarks/): per-step compute is
+~100us against ~1ms of per-step dispatch+sync. The ``*_big`` rows
+repeat the measurement at the heavier bench_ablation geometry
+(hidden=256, batch=128, 120+120 steps), the compute-bound endpoint
+where fusion necessarily buys less. Reported numbers:
+
+  training/steps_loop      us per full two-phase run, per-step dispatch
+  training/scan            us per run, one compiled program
+  training/scan_speedup    steps_loop / scan (acceptance: >= 5x on CPU)
+  training/multi_q4        us to train 4 leaves in ONE vmapped program
+  training/sequential_q4   us for 4 sequential scanned runs
+  training/multi_speedup   sequential_q4 / multi_q4 (acceptance: > 1x)
+  training/{steps_loop,scan,scan_speedup}_big   compute-bound endpoint
+
+``--smoke`` shrinks everything and routes phase-2 through the Pallas
+contrastive kernel in interpret mode, so CI exercises the compiled
+trainer + kernel path on every PR. ``--json PATH`` writes the rows plus
+derived metrics to PATH (default BENCH_training.json) for cross-PR
+perf tracking.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows, default_proxy_cfg, workload
+from repro.config.base import ProxyConfig
+from repro.core.trainer import train_proxy, train_proxy_multi
+
+Q_MULTI = 4
+
+
+def _smoke_cfg() -> ProxyConfig:
+    return ProxyConfig(embed_dim=32, hidden_dim=32, latent_dim=16,
+                       proj_dim=8, phase1_steps=6, phase2_steps=6,
+                       batch_size=32, contrastive_impl="interpret")
+
+
+def _timed_pair(fn_a, fn_b, reps: int):
+    """Median wall time of two contenders, measured back-to-back within
+    each trial: on shared/throttled CPUs the load drifts between trials,
+    so alternating keeps the comparison fair, and medians shrug off
+    spikes. Both fns return host arrays, so timing includes the sync."""
+    fn_a(), fn_b()                          # compile + warm caches
+    t_a, t_b = [], []
+    for _ in range(reps):
+        t0 = time.time()
+        fn_a()
+        t_a.append(time.time() - t0)
+        t0 = time.time()
+        fn_b()
+        t_b.append(time.time() - t0)
+    med = lambda ts: sorted(ts)[len(ts) // 2] * 1e6
+    return med(t_a), med(t_b)
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    if smoke:
+        cfg = _smoke_cfg()
+        big_cfg = None
+        rng = np.random.default_rng(0)
+        n_sample, dim = 96, cfg.embed_dim
+        embeds = rng.normal(size=(n_sample, dim)).astype(np.float32)
+        truth = rng.random(n_sample) < 0.35
+        e_qs = rng.normal(size=(Q_MULTI, dim)).astype(np.float32)
+        samples = [embeds] * Q_MULTI
+        truths = [truth] * Q_MULTI
+        reps = 1
+    else:
+        # dispatch-bound headline: CPU-scaled small proxy, default
+        # ProxyConfig step counts (60+60)
+        cfg = ProxyConfig(embed_dim=128, hidden_dim=64, latent_dim=32,
+                          proj_dim=16, batch_size=32)
+        big_cfg = default_proxy_cfg()
+        corpus, queries = workload()
+        rng = np.random.default_rng(0)
+        n = len(corpus.embeds)
+        idx = rng.choice(n, size=int(0.1 * n), replace=False)
+        e_qs = np.stack([q.embed for q in queries[:Q_MULTI]])
+        samples = [corpus.embeds[idx]] * Q_MULTI
+        truths = [q.truth[idx] for q in queries[:Q_MULTI]]
+        embeds, truth = samples[0], truths[0]
+        reps = 5
+
+    key = jax.random.PRNGKey(0)
+    labels = truth.astype(np.float32)
+
+    def bench_pair(cfg, tag=""):
+        us_steps, us_scan = _timed_pair(
+            lambda: train_proxy(key, e_qs[0], embeds, labels, cfg,
+                                method="steps"),
+            lambda: train_proxy(key, e_qs[0], embeds, labels, cfg), reps)
+        speedup = us_steps / max(us_scan, 1e-9)
+        total = cfg.phase1_steps + cfg.phase2_steps
+        rows.add(f"training/steps_loop{tag}", us_steps,
+                 f"steps={total};per_step_us={us_steps / total:.1f}")
+        rows.add(f"training/scan{tag}", us_scan,
+                 f"steps={total};per_step_us={us_scan / total:.1f}")
+        rows.add(f"training/scan_speedup{tag}", 0.0, f"x={speedup:.1f}")
+        return us_steps, us_scan, speedup
+
+    us_steps, us_scan, speedup = bench_pair(cfg)
+    total_steps = cfg.phase1_steps + cfg.phase2_steps
+
+    keys = [jax.random.fold_in(key, i) for i in range(Q_MULTI)]
+    label_list = [t.astype(np.float32) for t in truths]
+
+    def seq():
+        return [train_proxy(keys[i], e_qs[i], samples[i], label_list[i],
+                            cfg) for i in range(Q_MULTI)]
+
+    def multi():
+        return train_proxy_multi(keys, e_qs, samples, label_list, cfg)
+
+    us_seq, us_multi = _timed_pair(seq, multi, reps)
+    multi_speedup = us_seq / max(us_multi, 1e-9)
+    rows.add("training/sequential_q4", us_seq, f"q={Q_MULTI}")
+    rows.add("training/multi_q4", us_multi, f"q={Q_MULTI}")
+    rows.add("training/multi_speedup", 0.0, f"x={multi_speedup:.1f}")
+
+    big = {}
+    if big_cfg is not None:
+        b_steps, b_scan, b_speed = bench_pair(big_cfg, tag="_big")
+        big = {"us_steps_loop_big": b_steps, "us_scan_big": b_scan,
+               "scan_speedup_big": b_speed}
+
+    if smoke:
+        # parity gate: the smoke cfg routes phase-2 through the Pallas
+        # kernel (interpret mode); scan must still match the step loop
+        r_scan = train_proxy(key, e_qs[0], embeds, labels, cfg)
+        r_steps = train_proxy(key, e_qs[0], embeds, labels, cfg,
+                              method="steps")
+        for a, b in zip(jax.tree.leaves(r_scan.params),
+                        jax.tree.leaves(r_steps.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        rows.add("training/smoke_parity", 0.0, "scan==steps;pallas=interpret")
+
+    return {"us_steps_loop": us_steps, "us_scan": us_scan,
+            "scan_speedup": speedup, "us_sequential_q4": us_seq,
+            "us_multi_q4": us_multi, "multi_speedup": multi_speedup,
+            "total_steps": total_steps, "smoke": smoke, **big}
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny shapes + interpret-mode Pallas phase-2 "
+                             "(the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_training.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,15 +46,32 @@ def workload(seed: int = 0):
 
 
 class Rows:
+    """Benchmark result sink: CSV on stdout (the historical format) and
+    machine-readable records for the ``--json`` paths."""
+
     def __init__(self):
-        self.rows: List[str] = []
+        self.records: List[Dict] = []
 
     def add(self, name: str, us_per_call: float, derived: str = ""):
-        self.rows.append(f"{name},{us_per_call:.1f},{derived}")
+        self.records.append({"name": name,
+                             "us_per_call": round(us_per_call, 1),
+                             "derived": derived})
+
+    @property
+    def rows(self) -> List[str]:
+        return [f"{r['name']},{r['us_per_call']:.1f},{r['derived']}"
+                for r in self.records]
 
     def emit(self):
         for r in self.rows:
             print(r)
+
+    def to_json(self, path: str, extra: Dict = None):
+        import json
+        payload = {"rows": self.records, **(extra or {})}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 def timed(fn: Callable, *args, **kw):

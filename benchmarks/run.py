@@ -1,4 +1,9 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV;
+# ``--json [PATH]`` additionally writes the same rows machine-readably
+# (default BENCH.json) so the repo's perf trajectory is tracked across
+# PRs. bench_training.py also runs standalone and writes
+# BENCH_training.json via its own ``--json`` flag.
+import argparse
 import sys
 import time
 
@@ -6,8 +11,14 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
                             bench_compound, bench_kernels, bench_thresholds,
-                            bench_tradeoff)
+                            bench_tradeoff, bench_training)
     from benchmarks.common import Rows
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--json", nargs="?", const="BENCH.json",
+                        default=None, metavar="PATH",
+                        help="also write all rows as JSON")
+    args = parser.parse_args()
 
     suites = [
         ("cascade (Fig4+Table2)", bench_cascade.run),
@@ -17,8 +28,10 @@ def main() -> None:
         ("thresholds (Alg2)", bench_thresholds.run),
         ("tradeoff (Fig7/8/13)", bench_tradeoff.run),
         ("kernels", bench_kernels.run),
+        ("training (scan trainer)", bench_training.run),
     ]
     rows = Rows()
+    timings = {}
     print("name,us_per_call,derived")
     for name, fn in suites:
         t0 = time.time()
@@ -26,8 +39,12 @@ def main() -> None:
             fn(rows)
         except Exception as e:  # keep the suite running
             rows.add(f"{name}/ERROR", 0.0, repr(e)[:200])
-        print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+        timings[name] = round(time.time() - t0, 1)
+        print(f"# {name}: {timings[name]:.1f}s", file=sys.stderr)
     rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"suite_seconds": timings})
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -294,6 +294,11 @@ class ProxyConfig:
     aug_noise: float = 0.05        # Gaussian embedding augmentation per batch
     weight_decay: float = 0.01
     qsim_variant: str = "perpos"   # "perpos" (DPR form) | "sum" (literal eq.1)
+    # phase-2 loss forward: "auto" (Pallas kernel on TPU, jnp reference
+    # elsewhere) | "ref" | "kernel" | "interpret" (Pallas interpret mode,
+    # any backend — used by tests/CI). Gradients always come from the
+    # reference VJP, so this knob never changes training numerics.
+    contrastive_impl: str = "auto"
     seed: int = 0
 
 

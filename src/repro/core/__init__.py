@@ -19,4 +19,9 @@ from repro.core.encoder import (  # noqa: F401
 )
 from repro.core.oracle import LMOracle, SimulatedOracle  # noqa: F401
 from repro.core.pipeline import QueryStats, ScaleDocPipeline  # noqa: F401
-from repro.core.trainer import train_proxy, train_proxy_variant  # noqa: F401
+from repro.core.trainer import (  # noqa: F401
+    train_proxy,
+    train_proxy_multi,
+    train_proxy_variant,
+    unstack_params,
+)

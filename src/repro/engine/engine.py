@@ -14,8 +14,19 @@ state across queries:
     repeating a predicate skips training entirely;
   * composed predicates (``p1 & ~p2``) compile into a cost-ordered plan:
     the most decisive leaf runs first and documents it decides
-    short-circuit out of every later leaf's training sample, scoring
-    pass and cascade (QUEST-style compound-predicate optimization);
+    short-circuit out of every later leaf's scoring pass and cascade
+    (QUEST-style compound-predicate optimization);
+  * proxy training is collect-then-batch: every leaf that still needs a
+    proxy gets its labeled sample drawn from the full collection up
+    front, and all of them train in ONE compiled device program
+    (``train_proxy_multi``: the scanned trainer vmapped over leaves —
+    mirroring ``score_collection_multi`` on the scoring side). Training
+    on full-collection samples also makes every trained proxy
+    unconditioned, hence safe to reuse across queries (PR-2 could only
+    cache the first leaf's). ``batch_training=False`` falls back to
+    sequential per-leaf ``train_proxy`` calls over the same samples and
+    keys, which produces identical decisions — batching is purely a
+    performance transform;
   * the planning pass scores *all* leaves' query vectors in one
     streaming pass over the store (one fused multi-query pass via the
     executor).
@@ -45,7 +56,7 @@ from repro.config.base import CascadeConfig, ProxyConfig, replace
 from repro.core import oracle as oracle_mod
 from repro.core.cascade import CascadeResult, f1_score
 from repro.core.oracle import CachedOracle
-from repro.core.trainer import train_proxy
+from repro.core.trainer import train_proxy, train_proxy_multi, unstack_params
 from repro.engine.executor import ScoringExecutor, ScoringStats
 from repro.engine.predicate import (UNKNOWN, Not, Predicate,
                                     SemanticPredicate)
@@ -152,7 +163,8 @@ class ScaleDocEngine:
                  cascade_cfg: Optional[CascadeConfig] = None, *,
                  strategy: str = "scaledoc", use_kernel: bool = False,
                  chunk: int = 8192, mesh=None,
-                 executor: Optional[ScoringExecutor] = None):
+                 executor: Optional[ScoringExecutor] = None,
+                 batch_training: bool = True):
         self.store: DocumentStore = as_store(store)
         proxy_cfg = proxy_cfg or ProxyConfig()
         self.proxy_cfg = replace(proxy_cfg, embed_dim=self.store.dim)
@@ -160,6 +172,10 @@ class ScaleDocEngine:
         self.strategy = strategy
         self.use_kernel = use_kernel
         self.chunk = chunk
+        # one vmapped train program for all of a plan's untrained leaves;
+        # False = sequential per-leaf training of the same samples/keys
+        # (identical decisions, Q dispatches — kept for parity testing)
+        self.batch_training = batch_training
         # the scoring hot path: prefetching + (optional) mesh sharding +
         # (optional) fused multi-query kernel. A caller-built executor
         # wins over the convenience kwargs.
@@ -235,15 +251,74 @@ class ScaleDocEngine:
                                      if span > 0 else 0.5)
         return est
 
+    # -- proxy training (collect-then-batch) ----------------------------
+
+    @staticmethod
+    def _train_key(seed: int, ordinal: int):
+        key = jax.random.PRNGKey(seed)
+        return jax.random.fold_in(key, ordinal) if ordinal else key
+
+    def _train_pending_leaves(self, order: List[SemanticPredicate],
+                              ccfg: CascadeConfig,
+                              rng: np.random.Generator,
+                              seed: int) -> Dict[str, tuple]:
+        """Train every leaf of the plan that still needs a proxy — in ONE
+        compiled program when more than one does.
+
+        Labeled samples are drawn from the full collection (in plan
+        order, so the rng stream is identical whether training is batched
+        or sequential), then handed to ``train_proxy_multi``. Returns
+        ``leaf.key -> (oracle_calls_train, proxy_reused)`` for leaf
+        reports. Leaves with a cached proxy or cached decisions, and
+        tiny collections that direct-label, skip training entirely.
+        """
+        n = len(self.store)
+        info: Dict[str, tuple] = {}
+        jobs = []
+        for ordinal, leaf in enumerate(order):
+            reused = leaf.key in self._proxies
+            dkey = (leaf.key, self.strategy, ccfg, seed)
+            if (reused or dkey in self._decisions
+                    or n <= DIRECT_LABEL_CUTOFF):
+                info[leaf.key] = (0, reused)
+                continue
+            jobs.append((ordinal, leaf))
+        keys, samples, labels = [], [], []
+        for ordinal, leaf in jobs:
+            oracle = self._cached_oracle(leaf.oracle)
+            calls0 = oracle.calls
+            n_train = min(max(int(self.proxy_cfg.train_fraction * n), 16),
+                          n)
+            train_idx = rng.choice(n, size=n_train, replace=False)
+            keys.append(self._train_key(seed, ordinal))
+            samples.append(self.store.get(train_idx))
+            labels.append(oracle.label(train_idx))
+            info[leaf.key] = (oracle.calls - calls0, False)
+        if len(jobs) > 1 and self.batch_training:
+            res = train_proxy_multi(
+                keys, np.stack([leaf.e_q for _, leaf in jobs]), samples,
+                labels, self.proxy_cfg)
+            for (_, leaf), params in zip(jobs, unstack_params(res.params)):
+                self._proxies[leaf.key] = params
+        else:
+            for (_, leaf), key, sample, y in zip(jobs, keys, samples,
+                                                 labels):
+                self._proxies[leaf.key] = train_proxy(
+                    key, leaf.e_q, sample, y, self.proxy_cfg).params
+        return info
+
     # -- leaf execution --------------------------------------------------
 
     def _execute_leaf(self, leaf: SemanticPredicate, pending: np.ndarray,
                       ccfg: CascadeConfig, rng: np.random.Generator,
-                      train_key, truth_local: Optional[np.ndarray],
+                      train_info: Dict[str, tuple],
+                      truth_local: Optional[np.ndarray],
                       seed: int, stats: ScoringStats) -> LeafReport:
         oracle = self._cached_oracle(leaf.oracle)
         calls0 = oracle.calls
         n = len(self.store)
+        train_calls, reused = train_info.get(
+            leaf.key, (0, leaf.key in self._proxies))
 
         dkey = (leaf.key, self.strategy, ccfg, seed)
         hit = self._decisions.get(dkey)
@@ -266,9 +341,9 @@ class ScaleDocEngine:
             labels = oracle.label(pending)
             return LeafReport(
                 name=leaf.name, key=leaf.key, n_pending=len(pending),
-                oracle_calls_train=0, oracle_calls_calib=0,
+                oracle_calls_train=train_calls, oracle_calls_calib=0,
                 oracle_calls_online=oracle.calls - calls0,
-                proxy_reused=leaf.key in self._proxies, cascade=None,
+                proxy_reused=reused, cascade=None,
                 pending=pending, scores=None, labels=labels)
 
         # in-memory stores materialize the pending rows (cheap, enables
@@ -279,22 +354,10 @@ class ScaleDocEngine:
         else:
             embeds_view = _PendingView(self.store, pending, self.chunk)
         params = self._proxies.get(leaf.key)
-        reused = params is not None
         if params is None:
-            n_train = min(max(int(self.proxy_cfg.train_fraction
-                                  * len(pending)), 16), len(pending))
-            train_local = rng.choice(len(pending), size=n_train,
-                                     replace=False)
-            train_labels = oracle.label(pending[train_local])
-            params = train_proxy(train_key, leaf.e_q,
-                                 self.store.get(pending[train_local]),
-                                 train_labels, self.proxy_cfg).params
-            if len(pending) == n:
-                # subset-trained proxies are conditioned on the earlier
-                # leaves' decisions — only unconditioned ones are safe
-                # to reuse across queries
-                self._proxies[leaf.key] = params
-        train_calls = oracle.calls - calls0
+            raise RuntimeError(
+                f"no trained proxy for leaf {leaf.name!r}; "
+                "_train_pending_leaves must run before leaf execution")
 
         scores, pass_stats = self.executor.score(params, leaf.e_q,
                                                  embeds_view)
@@ -350,22 +413,23 @@ class ScaleDocEngine:
             o = self._cached_oracle(leaf.oracle)
             calls_before.setdefault(id(o), (o, o.calls))
 
+        # collect-then-batch: one compiled program trains every leaf
+        # proxy this plan still needs, before any cascade runs
+        train_info = self._train_pending_leaves(order, ccfg, rng, seed)
+
         leaf_values: Dict[str, np.ndarray] = {}
         root = predicate.evaluate({lf.key: np.full(n, UNKNOWN, np.int8)
                                    for lf in leaves})
         reports: List[LeafReport] = []
-        for ordinal, leaf in enumerate(order):
+        for leaf in order:
             pending = np.nonzero(root == UNKNOWN)[0]
             if not len(pending):
                 break
             truth_local = leaf_truth.get(leaf.key)
             if truth_local is not None:
                 truth_local = truth_local[pending]
-            train_key = jax.random.fold_in(jax.random.PRNGKey(seed),
-                                           ordinal) if ordinal else \
-                jax.random.PRNGKey(seed)
             report = self._execute_leaf(leaf, pending, ccfg, rng,
-                                        train_key, truth_local, seed,
+                                        train_info, truth_local, seed,
                                         scoring_stats)
             reports.append(report)
             vals = np.full(n, UNKNOWN, np.int8)
@@ -383,7 +447,7 @@ class ScaleDocEngine:
         result = FilterResult(
             mask=root.astype(bool),
             oracle_calls_total=total,
-            oracle_calls_train=sum(r.oracle_calls_train for r in reports),
+            oracle_calls_train=sum(c for c, _ in train_info.values()),
             leaf_reports=reports,
             plan=" -> ".join(r.name for r in reports) or "(decided)",
             wall_seconds=time.time() - t0,

@@ -10,8 +10,11 @@ p <= 256), so a single program handles the batch:
 
 Output: (4,) f32 = [qsim, supcon, polar, phase2 = lam*supcon+(1-lam)*polar].
 
-(Training still differentiates the pure-jnp losses; the kernel is the
-fast evaluation/monitoring path and the oracle-checked TPU artifact.)
+The kernel sits on the training hot path: ``ops.phase2_loss`` wraps it
+in a custom_vjp (kernel forward on TPU, reference VJP backward), and the
+scanned proxy trainer in repro.core.trainer differentiates through that
+wrapper every phase-2 step. It doubles as the fast evaluation/monitoring
+path via ``ops.losses``.
 """
 from __future__ import annotations
 

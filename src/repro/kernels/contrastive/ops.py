@@ -1,10 +1,31 @@
-"""Dispatch wrapper: Pallas on TPU, jnp oracle elsewhere."""
+"""Dispatch wrappers: Pallas on TPU, jnp oracle elsewhere.
+
+``losses`` is the evaluation/monitoring entry (all four loss values).
+``phase2_loss`` is the *trainable* entry the scanned proxy trainer puts
+on its hot path: on TPU (or anywhere under ``impl="interpret"``) the
+forward value comes from the fused Pallas kernel via a ``custom_vjp``
+whose backward replays the pure-jnp reference objective — numerically
+the exact gradient of the reference loss, checked against the kernel
+forward in interpret mode by tests/test_kernels.py. When the kernel is
+not in play (the CPU default) it is plain autodiff of the reference.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.contrastive import ref
 from repro.kernels.contrastive.contrastive import contrastive_losses
+
+
+def _use_kernel(impl: str) -> bool:
+    if impl == "ref":
+        return False
+    if impl in ("kernel", "interpret"):
+        return True
+    return jax.default_backend() == "tpu"
 
 
 def losses(z_q, z_d, y, tau: float, lam: float, *, force_ref: bool = False,
@@ -14,3 +35,50 @@ def losses(z_q, z_d, y, tau: float, lam: float, *, force_ref: bool = False,
         return contrastive_losses(z_q, z_d, y, tau, lam,
                                   interpret=interpret)
     return ref.ref_losses(z_q, z_d, y, tau, lam)
+
+
+def phase2_loss(z_q, z_d, y, tau: float, lam: float, impl: str = "auto"):
+    """lam * L_supcon + (1 - lam) * L_polar, differentiable w.r.t. the
+    latents.
+
+    ``impl``: "auto" (Pallas kernel on TPU, reference elsewhere),
+    "kernel" (force Pallas, compiled), "interpret" (force Pallas in
+    interpret mode — runs on any backend), or "ref" (pure jnp). The
+    backward pass is always the reference VJP; swapping ``impl`` never
+    changes gradients, only who computes the forward value.
+
+    When ``impl`` resolves to the reference (the CPU default), this is
+    plain autodiff of the reference objective — no custom_vjp wrapper,
+    so forward residuals are shared with the backward as usual. The
+    kernel path wraps the Pallas forward in a custom_vjp that saves only
+    the inputs and rematerializes the reference forward inside the
+    backward (the standard memory-lean pattern for opaque kernels: the
+    batch is small, so recompute is cheaper than plumbing residuals out
+    of the kernel).
+    """
+    if not _use_kernel(impl):
+        return ref.ref_phase2(z_q, z_d, y, tau, lam)
+    return _phase2_kernel(z_q, z_d, y, tau, lam, impl)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _phase2_kernel(z_q, z_d, y, tau, lam, impl):
+    out, _ = _phase2_fwd(z_q, z_d, y, tau, lam, impl)
+    return out
+
+
+def _phase2_fwd(z_q, z_d, y, tau, lam, impl):
+    val = contrastive_losses(z_q, z_d, y, tau, lam,
+                             interpret=(impl == "interpret"))[3]
+    return val, (z_q, z_d, y)
+
+
+def _phase2_bwd(tau, lam, impl, res, g):
+    z_q, z_d, y = res
+    _, vjp = jax.vjp(
+        lambda zq, zd: ref.ref_phase2(zq, zd, y, tau, lam), z_q, z_d)
+    gq, gd = vjp(g)
+    return gq, gd, jnp.zeros_like(y)
+
+
+_phase2_kernel.defvjp(_phase2_fwd, _phase2_bwd)

@@ -12,3 +12,9 @@ def ref_losses(z_q, z_d, y, tau, lam):
     polar = losses.polar_loss(z_q, z_d, y, tau)
     return jnp.stack([qsim, supcon, polar,
                       lam * supcon + (1 - lam) * polar])
+
+
+def ref_phase2(z_q, z_d, y, tau, lam):
+    """The phase-2 objective alone (what the trainer differentiates);
+    identical math to the training path in repro.core.losses."""
+    return losses.phase2_loss(z_q, z_d, y, tau, lam)

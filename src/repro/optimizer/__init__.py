@@ -6,4 +6,5 @@ from repro.optimizer.adamw import (  # noqa: F401
     global_norm,
     init,
     schedule,
+    update,
 )

@@ -2,6 +2,10 @@
 
 No optax dependency: state is a plain pytree {step, mu, nu}, update is a
 pure function — trivially pjit-able (state shards like params).
+
+``apply_updates`` returns a metrics dict alongside the new state (what
+the LM training loop logs); ``update`` is the donation-safe fast path
+used inside the scanned proxy trainer's step body.
 """
 from __future__ import annotations
 
@@ -54,8 +58,30 @@ def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
 
 
+def update(cfg: OptimizerConfig, params: Any, grads: Any,
+           state: AdamWState) -> Tuple[Any, AdamWState]:
+    """Donation-safe update path: ``apply_updates`` minus the metrics dict.
+
+    Every output leaf has the shape and dtype of the matching input leaf
+    (params keep their dtype, mu/nu stay float32, step stays int32), so a
+    surrounding ``jax.jit(..., donate_argnums=...)`` can alias the params
+    and optimizer-state buffers in place. This is the entry the scanned
+    proxy trainer (repro.core.trainer) calls per scan step, where the
+    metrics dict of ``apply_updates`` would be dead weight in the carry.
+    """
+    new_params, new_state, _, _ = _update(cfg, params, grads, state)
+    return new_params, new_state
+
+
 def apply_updates(cfg: OptimizerConfig, params: Any, grads: Any,
                   state: AdamWState) -> Tuple[Any, AdamWState, Dict[str, Any]]:
+    new_params, new_state, gnorm, lr = _update(cfg, params, grads, state)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def _update(cfg: OptimizerConfig, params: Any, grads: Any,
+            state: AdamWState) -> Tuple[Any, AdamWState, jnp.ndarray,
+                                        jnp.ndarray]:
     grads, gnorm = (clip_by_global_norm(grads, cfg.grad_clip)
                     if cfg.grad_clip > 0
                     else (jax.tree.map(lambda g: g.astype(jnp.float32), grads),
@@ -86,5 +112,4 @@ def apply_updates(cfg: OptimizerConfig, params: Any, grads: Any,
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])
-    metrics = {"grad_norm": gnorm, "lr": lr}
-    return new_p, AdamWState(step, new_m, new_v), metrics
+    return new_p, AdamWState(step, new_m, new_v), gnorm, lr

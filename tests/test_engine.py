@@ -341,6 +341,52 @@ def test_engine_clear_caches(corpus, small_cfgs):
     assert oracle.calls > calls        # labels really were re-bought
 
 
+def test_batched_leaf_training_matches_per_leaf(corpus, small_cfgs):
+    """Acceptance: the one-program vmapped leaf training
+    (batch_training=True, the default) yields decisions identical to
+    sequential per-leaf train_proxy calls over the same samples and keys
+    (batch_training=False) for a compound predicate under a fixed seed."""
+    pcfg, ccfg = small_cfgs
+    q1 = make_query(corpus, 21, selectivity=0.3)
+    q2 = make_query(corpus, 23, selectivity=0.4)
+    truth = q1.truth & ~q2.truth
+    results = []
+    for batched in (True, False):
+        o1, o2 = SimulatedOracle(q1.truth), SimulatedOracle(q2.truth)
+        engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg,
+                                batch_training=batched)
+        pred = (SemanticPredicate(q1.embed, o1, name="p1")
+                & ~SemanticPredicate(q2.embed, o2, name="p2"))
+        results.append(engine.filter(pred, ground_truth=truth, seed=0))
+    batched_res, seq_res = results
+    np.testing.assert_array_equal(batched_res.mask, seq_res.mask)
+    assert batched_res.oracle_calls_total == seq_res.oracle_calls_total
+    assert batched_res.oracle_calls_train == seq_res.oracle_calls_train
+    assert batched_res.plan == seq_res.plan
+    for rb, rs in zip(batched_res.leaf_reports, seq_res.leaf_reports):
+        np.testing.assert_array_equal(rb.pending, rs.pending)
+        np.testing.assert_allclose(rb.scores, rs.scores, atol=1e-6)
+
+
+def test_trained_leaf_proxies_all_cached(corpus, small_cfgs):
+    """Collect-then-batch trains every leaf on a full-collection sample,
+    so every leaf's proxy (not just the first's) is unconditioned and
+    cached for reuse across queries."""
+    pcfg, ccfg = small_cfgs
+    q1 = make_query(corpus, 21, selectivity=0.3)
+    q2 = make_query(corpus, 23, selectivity=0.4)
+    o1, o2 = SimulatedOracle(q1.truth), SimulatedOracle(q2.truth)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    p1 = SemanticPredicate(q1.embed, o1, name="p1")
+    p2 = SemanticPredicate(q2.embed, o2, name="p2")
+    engine.filter(p1 & ~p2, seed=0)
+    assert {p1.key, p2.key} <= set(engine._proxies)
+    # a follow-up single-leaf query on the later leaf re-buys no training
+    res = engine.filter(p2, seed=1)
+    assert res.leaf_reports[0].proxy_reused
+    assert res.oracle_calls_train == 0
+
+
 def test_engine_rejects_non_predicate(corpus, small_cfgs):
     pcfg, ccfg = small_cfgs
     engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
