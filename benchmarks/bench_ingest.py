@@ -1,0 +1,136 @@
+"""Offline-ingestion benchmark: the resumable streaming indexer.
+
+ScaleDoc's economics assume the representation phase is paid ONCE per
+collection and amortized over every future predicate; this suite
+measures what that one-time pass costs and what its durability
+machinery (commit groups, checkpoint markers, resume) adds on top of
+raw embedding compute. Reported rows:
+
+  ingest/docs_per_s        end-to-end ingestion throughput (LM prefill
+                           + mean-pool + append + commits)
+  ingest/bytes_per_s       embedding bytes made durable per second
+  ingest/overlap           fraction of host batch-prep I/O hidden
+                           behind device compute (1.0 = fully hidden)
+  ingest/commit_overhead   ingestion wall vs pure embed compute (x)
+  ingest/resume_fastpath   us to open an already-complete store (the
+                           every-query amortized path: no embedding)
+  ingest/resume_parity     gate row: a run killed mid-job and resumed
+                           produces a byte-identical store (0 = pass)
+
+``--smoke`` shrinks the model/corpus so CI exercises the full
+kill/resume cycle on every PR; ``--json PATH`` writes rows + derived
+metrics (default BENCH_ingest.json) for cross-PR perf tracking.
+"""
+from __future__ import annotations
+
+import pathlib
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import Rows
+from repro.config.base import ModelConfig
+from repro.data import make_corpus
+from repro.engine.ingest import Ingestor
+from repro.engine.store import DATA_NAME
+from repro.models import build_model
+from repro.runtime.serve_loop import EmbeddingService
+
+
+def _service(smoke: bool):
+    if smoke:
+        cfg = ModelConfig(name="ingest-bench-smoke", num_layers=2,
+                          d_model=32, num_heads=2, num_kv_heads=2,
+                          d_ff=64, vocab_size=64, dtype="float32",
+                          remat="none")
+        n_docs, doc_len, batch = 96, 12, 8
+    else:
+        cfg = ModelConfig(name="ingest-bench", num_layers=4, d_model=128,
+                          num_heads=4, num_kv_heads=2, d_ff=256,
+                          vocab_size=256, dtype="float32", remat="none")
+        n_docs, doc_len, batch = 512, 48, 16
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return (EmbeddingService(cfg, params, batch_size=batch),
+            n_docs, doc_len)
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    service, n_docs, doc_len = _service(smoke)
+    corpus = make_corpus(seed=0, n_docs=n_docs, dim=16, with_tokens=True,
+                         vocab=service.cfg.vocab_size, doc_len=doc_len)
+    docs = [corpus.tokens[i] for i in range(n_docs)]
+    ing = Ingestor(service, commit_every_batches=2)
+    base = pathlib.Path(tempfile.mkdtemp(prefix="bench_ingest_"))
+    try:
+        # cold full ingestion (includes jit compile of the embed program)
+        full = ing.ingest(docs, base / "full")
+        s = full.stats
+        docs_per_s = s.docs_per_second
+        bytes_per_s = s.bytes_written / max(s.wall_seconds, 1e-9)
+        commit_overhead = s.wall_seconds / max(s.compute_seconds, 1e-9)
+        rows.add("ingest/docs_per_s", 1e6 / max(docs_per_s, 1e-9),
+                 f"docs_per_s={docs_per_s:.0f};n={n_docs}")
+        rows.add("ingest/bytes_per_s", 0.0,
+                 f"mb_per_s={bytes_per_s / 1e6:.2f}")
+        rows.add("ingest/overlap", 0.0,
+                 f"frac={s.overlap_fraction:.2f};"
+                 f"host_io_s={s.host_io_seconds:.3f};"
+                 f"compute_s={s.compute_seconds:.3f}")
+        rows.add("ingest/commit_overhead", 0.0,
+                 f"x={commit_overhead:.2f};commits={s.commits}")
+
+        # resume fast path: reopening a complete store re-embeds nothing
+        t0 = time.perf_counter()
+        fast = ing.ingest(docs, base / "full")
+        fast_us = (time.perf_counter() - t0) * 1e6
+        assert fast.stats.docs == 0
+        rows.add("ingest/resume_fastpath", fast_us,
+                 f"rows={len(fast.store)}")
+
+        # kill/resume parity gate: interrupt mid-group, resume, compare
+        kill_at = (n_docs // 2) - 3          # deliberately mid-batch
+        part = ing.ingest(docs, base / "resumed", max_docs=kill_at)
+        assert part.interrupted and len(part.store) < n_docs
+        resumed = ing.ingest(docs, base / "resumed")
+        a = (base / "full" / DATA_NAME).read_bytes()
+        b = (base / "resumed" / DATA_NAME).read_bytes()
+        identical = a == b
+        rows.add("ingest/resume_parity", 0.0 if identical else 1.0,
+                 f"identical={identical};killed_at={kill_at};"
+                 f"resumed_from={resumed.stats.resumed_rows}")
+        if not identical:
+            raise AssertionError(
+                "resumed store differs from uninterrupted store")
+        return {"docs_per_s": docs_per_s, "bytes_per_s": bytes_per_s,
+                "overlap_fraction": s.overlap_fraction,
+                "commit_overhead": commit_overhead,
+                "resume_fastpath_us": fast_us,
+                "resume_identical": identical, "n_docs": n_docs,
+                "smoke": smoke}
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny model/corpus (the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_ingest.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

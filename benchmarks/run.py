@@ -10,8 +10,8 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
-                            bench_compound, bench_kernels, bench_thresholds,
-                            bench_tradeoff, bench_training)
+                            bench_compound, bench_ingest, bench_kernels,
+                            bench_thresholds, bench_tradeoff, bench_training)
     from benchmarks.common import Rows
 
     parser = argparse.ArgumentParser()
@@ -29,6 +29,7 @@ def main() -> None:
         ("tradeoff (Fig7/8/13)", bench_tradeoff.run),
         ("kernels", bench_kernels.run),
         ("training (scan trainer)", bench_training.run),
+        ("ingest (offline phase)", bench_ingest.run),
     ]
     rows = Rows()
     timings = {}

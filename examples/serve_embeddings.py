@@ -1,16 +1,24 @@
-"""End-to-end serving driver (the paper's offline representation phase):
-serve a small LM with batched requests as the document embedder, then run
-a ScaleDoc query on the produced embedding store.
+"""Offline representation phase demo: resumable LM ingestion into a
+persistent store, then a ScaleDoc query over it.
 
-This is the "serve a small model with batched requests" end-to-end
-example: tokenized documents stream through prefill + mean-pool on a
-smollm-family backbone (reduced config on CPU; swap --arch/--full for a
-pod), the embeddings feed the standard online phase, and an LM oracle
-(logit-judge) labels the samples.
+Tokenized documents stream through batched prefill + mean-pool on a
+smollm-family backbone (reduced config on CPU; swap --arch for a pod)
+and land append-only in a manifest-backed store directory via
+``repro.engine.ingest`` — commit groups, checkpoint markers, and
+kill/resume semantics included. Re-running with the same --store
+resumes from the last durable row (a completed store skips embedding
+entirely); --max-docs N stops mid-job to simulate a preemption you can
+then resume from. The online phase reads the produced ``MemmapStore``
+through the standard engine.
 
     PYTHONPATH=src python examples/serve_embeddings.py [--docs 256]
+    PYTHONPATH=src python examples/serve_embeddings.py \
+        --store /tmp/scaledoc_store --max-docs 100   # preempt...
+    PYTHONPATH=src python examples/serve_embeddings.py \
+        --store /tmp/scaledoc_store                  # ...and resume
 """
 import argparse
+import tempfile
 import time
 
 import jax
@@ -18,9 +26,11 @@ import numpy as np
 
 from repro.config import get_smoke_arch
 from repro.config.base import CascadeConfig, ProxyConfig
-from repro.core import ScaleDocPipeline, SimulatedOracle
+from repro.core import SimulatedOracle
 from repro.data import make_corpus, make_query
-from repro.runtime.serve_loop import EmbeddingService, ServeStats
+from repro.engine import ScaleDocEngine, SemanticPredicate
+from repro.models import build_model
+from repro.runtime.serve_loop import EmbeddingService
 
 
 def main():
@@ -28,44 +38,59 @@ def main():
     ap.add_argument("--docs", type=int, default=256)
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--store", default=None,
+                    help="store directory (default: fresh temp dir); "
+                         "reuse it to resume a partial ingestion")
+    ap.add_argument("--commit-every", type=int, default=4,
+                    help="batches per durable commit group")
+    ap.add_argument("--max-docs", type=int, default=None,
+                    help="stop after appending this many rows (simulated "
+                         "preemption; rerun with the same --store to resume)")
     args = ap.parse_args()
 
     # 1) tokenized corpus (planted topics drive both tokens and labels)
     corpus = make_corpus(seed=0, n_docs=args.docs, dim=128,
                          with_tokens=True, vocab=256, doc_len=48)
     query = make_query(corpus, seed=7, selectivity=0.3)
+    store_dir = args.store or tempfile.mkdtemp(prefix="scaledoc_store_")
 
-    # 2) offline representation phase: batched LM serving
+    # 2) offline representation phase: batched LM serving -> durable store
     cfg = get_smoke_arch(args.arch)
-    model_params = None
-    from repro.models import build_model
     model = build_model(cfg)
     model_params = model.init(jax.random.PRNGKey(0))
     service = EmbeddingService(cfg, model_params, batch_size=args.batch)
-    stats = ServeStats()
     t0 = time.time()
-    embeds = service.embed_documents(
-        [corpus.tokens[i] for i in range(args.docs)], stats)
-    print(f"embedded {stats.documents} docs in {stats.batches} batches "
-          f"({stats.wall_s:.1f}s, pad waste {stats.pad_waste_frac:.1%})")
+    engine = ScaleDocEngine.from_corpus(
+        service, [corpus.tokens[i] for i in range(args.docs)], store_dir,
+        proxy_cfg=ProxyConfig(embed_dim=cfg.d_model, hidden_dim=128,
+                              latent_dim=64, proj_dim=32, phase1_steps=80,
+                              phase2_steps=80, batch_size=64),
+        cascade_cfg=CascadeConfig(accuracy_target=0.85,
+                                  calib_fraction=0.15),
+        max_docs=args.max_docs,
+        ingest_kwargs=dict(commit_every_batches=args.commit_every))
+    ing = engine.ingest_result
+    print(f"store {ing.path}: {len(ing.store)}/{args.docs} rows durable "
+          f"(+{ing.stats.docs} this run, resumed from "
+          f"{ing.stats.resumed_rows}; {ing.stats.commits} commits, "
+          f"{ing.stats.docs_per_second:.0f} docs/s, pad waste "
+          f"{ing.stats.pad_waste_frac:.1%}, host-I/O overlap "
+          f"{ing.stats.overlap_fraction:.0%})")
+    if ing.interrupted:
+        print("ingestion interrupted by --max-docs; rerun with "
+              f"--store {ing.path} to resume")
+        return
 
-    # 3) online phase over the LM-produced embedding store.
+    # 3) online phase over the persisted LM embedding store.
     # Query embedding by example: the mean LM embedding of a few known
     # positives (the "query" lives in the same space as the documents).
-    pos_idx = np.nonzero(query.truth)[0][:4]
-    e_q = embeds[pos_idx].mean(axis=0)
+    embeds = engine.store.get(np.nonzero(query.truth)[0][:4])
+    e_q = embeds.mean(axis=0)
     e_q = e_q / (np.linalg.norm(e_q) + 1e-9)
     oracle = SimulatedOracle(query.truth)
-    pipe = ScaleDocPipeline(
-        embeds,
-        ProxyConfig(embed_dim=embeds.shape[1], hidden_dim=128,
-                    latent_dim=64, proj_dim=32, phase1_steps=80,
-                    phase2_steps=80, batch_size=64),
-        CascadeConfig(accuracy_target=0.85, calib_fraction=0.15))
-    qstats = pipe.query(e_q.astype(np.float32), oracle,
+    res = engine.filter(SemanticPredicate(e_q.astype(np.float32), oracle),
                         ground_truth=query.truth)
-    c = qstats.cascade
-    print(f"query F1 {c.achieved_f1:.3f}; unique docs labeled by oracle "
+    print(f"query F1 {res.achieved_f1:.3f}; unique docs labeled by oracle "
           f"{len(oracle.queried)}/{args.docs}; "
           f"end-to-end {time.time() - t0:.1f}s")
 

@@ -14,13 +14,21 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-# FLOPs cost model per document (~400 words, paper §6.2 Table 2):
-# oracle LLM >500P total / 10k docs -> ~50 TFLOPs per doc. We mirror the
-# paper's per-model numbers, normalized per document.
+# FLOPs cost model per document. Provenance: paper §6.2 (Table 2
+# "computational cost" column) reports TOTAL FLOPs over a 10k-document
+# collection of ~400-word documents; we normalize each per document.
+#   oracle LLM (GPT-4o class)  >500 PFLOPs / 10k docs -> ~50 TFLOPs/doc
+#   3B proxy-LLM baseline        27 PFLOPs / 10k docs
+#   1B proxy-LLM baseline        10 PFLOPs / 10k docs
+#   ScaleDoc MLP proxy           ~2 TFLOPs / 10k docs -> ~0.2 GFLOPs/doc
+# (sanity check: ~2*params*tokens forward FLOPs at a few hundred tokens
+# per document lands within ~2x of each row). benchmarks/ and
+# QueryStats report cost in these units because the container has no
+# GPT-4o; the ratios, not the absolute counts, carry the paper's story.
 ORACLE_FLOPS_PER_DOC = 500e15 / 10_000
 PROXY_LLM_3B_FLOPS_PER_DOC = 27e15 / 10_000
 PROXY_LLM_1B_FLOPS_PER_DOC = 10e15 / 10_000
-OUR_PROXY_FLOPS_PER_DOC = 2e12 / 10_000   # paper: 2T per 10k docs
+OUR_PROXY_FLOPS_PER_DOC = 2e12 / 10_000
 
 
 class CachedOracle:

@@ -1,5 +1,7 @@
 # Persistent multi-predicate engine (public API):
 #   * DocumentStore — chunked / memory-mapped collection access
+#   * StoreWriter / Ingestor — resumable offline ingestion into an
+#     appendable, manifest-backed store directory
 #   * Predicate algebra — SemanticPredicate composed with & | ~
 #   * ScaleDocEngine — cross-query caches + cost-ordered compound plans
 #   * ScoringExecutor — sharded, double-buffered scoring hot path
@@ -8,6 +10,14 @@ from repro.engine.engine import (  # noqa: F401
     FilterResult,
     LeafReport,
     ScaleDocEngine,
+)
+from repro.engine.ingest import (  # noqa: F401
+    build_index,
+    corpus_digest,
+    ingest_fingerprint,
+    Ingestor,
+    IngestResult,
+    IngestStats,
 )
 from repro.engine.executor import (  # noqa: F401
     ScoringExecutor,
@@ -26,8 +36,12 @@ from repro.engine.registry import (  # noqa: F401
     register_strategy,
 )
 from repro.engine.store import (  # noqa: F401
+    as_store,
     DocumentStore,
     InMemoryStore,
+    load_manifest,
     MemmapStore,
-    as_store,
+    StoreFingerprintError,
+    StoreManifest,
+    StoreWriter,
 )

@@ -188,6 +188,39 @@ class ScaleDocEngine:
         # (leaf.key, strategy, cascade cfg, seed): repeating a predicate
         # under identical settings re-buys nothing
         self._decisions: Dict[tuple, tuple] = {}
+        # populated by from_corpus(): the offline phase's accounting
+        self.ingest_result = None
+
+    # -- construction from a raw corpus (offline phase) ------------------
+
+    @classmethod
+    def from_corpus(cls, service, docs_tokens, path, *,
+                    proxy_cfg: Optional[ProxyConfig] = None,
+                    cascade_cfg: Optional[CascadeConfig] = None,
+                    ingest_mesh=None, max_docs: Optional[int] = None,
+                    ingest_kwargs: Optional[Dict] = None,
+                    **engine_kwargs) -> "ScaleDocEngine":
+        """Run (or resume) the offline representation phase, then build
+        an engine over the persisted store.
+
+        ``service`` is a ``repro.runtime.serve_loop.EmbeddingService``;
+        ``docs_tokens`` a sequence of 1-D int token arrays; ``path`` a
+        store directory (created on first use, resumed from the last
+        durable row afterwards — a completed store skips embedding
+        entirely). ``ingest_mesh`` data-parallel-shards embedding
+        batches; extra ``ingest_kwargs`` reach the ``Ingestor``
+        (``commit_every_batches``, ``prefetch_depth``, ...). The
+        returned engine reads the ``MemmapStore`` and exposes the
+        offline accounting as ``engine.ingest_result``.
+        """
+        from repro.engine.ingest import build_index
+        result = build_index(service, docs_tokens, path,
+                             max_docs=max_docs, mesh=ingest_mesh,
+                             **(ingest_kwargs or {}))
+        engine = cls(result.store, proxy_cfg, cascade_cfg,
+                     **engine_kwargs)
+        engine.ingest_result = result
+        return engine
 
     # -- caches ---------------------------------------------------------
 

@@ -109,28 +109,45 @@ class ScoringStats:
 # executor's tile boundaries can never drift from the reference path's)
 # ---------------------------------------------------------------------------
 
-class _Prefetcher:
-    """Background thread that pages chunks host->device ahead of compute.
+class PrefetchThread:
+    """Background producer thread feeding a bounded queue ahead of a
+    device-compute consumer.
 
-    ``depth`` bounds how many chunks may be resident beyond the one being
-    scored (depth=2 gives classic double buffering). Exceptions in the
+    ``depth`` bounds how many items may be resident beyond the one being
+    consumed (depth=2 gives classic double buffering). Exceptions in the
     producer are re-raised in the consumer; if the *consumer* dies (or
     abandons the iterator), the stop event unblocks the producer so the
     thread and its queued device buffers are released rather than pinned
     for the process lifetime. The consumer records how long it stalled
-    waiting on an empty queue (perfect overlap = 0 stall).
+    waiting on an empty queue (perfect overlap = 0 stall); producers
+    accumulate their host-side work into ``io_seconds``.
+
+    Subclasses implement ``_produce(*args)`` (args = whatever was passed
+    to ``__init__`` after ``depth``), pushing items via ``_put`` and
+    returning early when it reports the consumer is gone. The scoring
+    ``_Prefetcher`` and the ingest batch feeder share this lifecycle.
     """
 
     _DONE = object()
 
-    def __init__(self, store, chunk: int, depth: int, put_fn):
+    def __init__(self, depth: int, *args):
         self._queue: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
         self.io_seconds = 0.0
         self.stall_seconds = 0.0
-        self._thread = threading.Thread(
-            target=self._produce, args=(store, chunk, put_fn), daemon=True)
+        self._thread = threading.Thread(target=self._run, args=args,
+                                        daemon=True)
         self._thread.start()
+
+    def _run(self, *args):
+        try:
+            self._produce(*args)
+            self._put(self._DONE)
+        except BaseException as exc:  # surfaced on the consumer side
+            self._put(exc)
+
+    def _produce(self, *args):
+        raise NotImplementedError
 
     def _put(self, item) -> bool:
         while not self._stop.is_set():
@@ -140,21 +157,6 @@ class _Prefetcher:
             except queue.Full:
                 continue
         return False
-
-    def _produce(self, store, chunk, put_fn):
-        try:
-            for start, block in _iter_chunks(store, chunk):
-                if self._stop.is_set():
-                    return
-                t0 = time.perf_counter()
-                arr = np.ascontiguousarray(block, dtype=np.float32)
-                dev = put_fn(arr)
-                self.io_seconds += time.perf_counter() - t0
-                if not self._put((start, arr.shape[0], arr.nbytes, dev)):
-                    return
-            self._put(self._DONE)
-        except BaseException as exc:  # surfaced on the consumer side
-            self._put(exc)
 
     def __iter__(self):
         try:
@@ -176,6 +178,24 @@ class _Prefetcher:
                     self._queue.get_nowait()
                 except queue.Empty:
                     break
+
+
+class _Prefetcher(PrefetchThread):
+    """Pages store chunks host->device ahead of the scoring compute."""
+
+    def __init__(self, store, chunk: int, depth: int, put_fn):
+        super().__init__(depth, store, chunk, put_fn)
+
+    def _produce(self, store, chunk, put_fn):
+        for start, block in _iter_chunks(store, chunk):
+            if self._stop.is_set():
+                return
+            t0 = time.perf_counter()
+            arr = np.ascontiguousarray(block, dtype=np.float32)
+            dev = put_fn(arr)
+            self.io_seconds += time.perf_counter() - t0
+            if not self._put((start, arr.shape[0], arr.nbytes, dev)):
+                return
 
 
 # ---------------------------------------------------------------------------

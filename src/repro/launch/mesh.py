@@ -29,11 +29,12 @@ def make_test_mesh(data: int = 1, model: int = 1):
 
 
 def make_scoring_mesh(num_devices: Optional[int] = None):
-    """1-D ("data",) mesh for the streaming scoring executor
-    (repro.engine.executor): document tiles row-shard over it, so the
-    right shape is simply every device the process owns. ``None`` = all
-    local devices; a 1-device mesh degrades to the executor's
-    single-device path."""
+    """1-D ("data",) mesh for the streaming data-parallel loops: the
+    scoring executor (repro.engine.executor) row-shards document tiles
+    over it, and the offline indexer (repro.engine.ingest) row-shards
+    embedding token batches over it — so the right shape is simply
+    every device the process owns. ``None`` = all local devices; a
+    1-device mesh degrades to the single-device path of both."""
     devs = jax.devices()
     n = num_devices or len(devs)
     return jax.make_mesh((n,), ("data",), devices=devs[:n])

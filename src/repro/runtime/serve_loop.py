@@ -1,12 +1,17 @@
-"""Batched serving driver — the offline representation phase.
+"""Batched serving driver — the compute side of the offline phase.
 
 Drains a queue of documents through prefill + mean-pool, producing the
-embedding store ScaleDoc's online phase consumes. Microbatches to the
+embeddings ScaleDoc's online phase consumes. Microbatches to the
 compiled batch size (padding the tail), optionally splitting long
 documents into chunks whose pooled states are averaged.
 
-On a pod this runs under the production mesh with the serve shardings
-from launch/steps.py; here it also powers examples/serve_embeddings.py.
+``EmbeddingService`` is the pure compute service: tokens in, pooled
+embeddings out, nothing persisted. The durable offline *job* — writing
+those embeddings append-only into a manifest-backed store directory
+with commit markers and kill/resume semantics — lives in
+``repro.engine.ingest``, which drives this service batch by batch
+(``embed_batch``). On a pod this runs under the production mesh with
+the serve shardings from launch/steps.py.
 """
 from __future__ import annotations
 
@@ -64,6 +69,15 @@ class EmbeddingService:
             return pooled.astype(jnp.float32)
 
         self._embed = jax.jit(embed_batch)
+
+    def embed_batch(self, batch) -> jax.Array:
+        """One already-padded (B, W) int32 token batch -> (B, d_model)
+        float32 pooled embeddings, on device. Rows of all-zero (pad)
+        tokens pool to zero vectors; callers slice them off. The batch
+        may carry any jax sharding (repro.engine.ingest row-shards it
+        over a data mesh) — the jitted program follows the input
+        placement."""
+        return self._embed(self.params, batch)
 
     def embed_documents(self, docs_tokens: Iterable[np.ndarray],
                         stats: Optional[ServeStats] = None) -> np.ndarray:
