@@ -1,0 +1,190 @@
+"""Online serving benchmark: concurrent sessions + oracle micro-batching.
+
+ScaleDoc's online phase is served, not batch-run: many clients submit
+predicates against one resident store, and the oracle LLM's latency —
+not proxy compute — dominates each query. This suite drives the same
+mixed workload through serial ``filter()`` calls (fresh engine per
+query, shared ``CachedOracle``s: the bit-parity baseline) and through
+``PredicateServer`` at 1/4/8 concurrent clients, with a fixed
+per-invocation oracle latency so coalescing is visible in wall-clock.
+Reported rows:
+
+  serve/serial_qps         sequential baseline throughput (queries/s)
+  serve/qps_c{1,4,8}       server throughput at 1/4/8 workers
+  serve/gain_c4            qps_c4 - serial_qps (CI gate: must be > 1)
+  serve/oracle_invocations oracle label() invocations serial vs c4 —
+                           micro-batching merges asks across sessions
+  serve/batch_occupancy    mean docs per coalesced oracle batch at c4
+  serve/parity             gate row: c4 masks bit-identical to serial
+                           AND docs purchased <= serial (0 = pass)
+
+``--smoke`` shrinks the workload for CI; ``--json PATH`` writes rows +
+derived metrics (default BENCH_serve.json).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core.oracle import CachedOracle, SimulatedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+from repro.serve import PredicateServer
+
+
+class LatencyOracle(SimulatedOracle):
+    """Deterministic labels behind a fixed per-invocation latency (the
+    oracle-LLM shape: a batched ask costs one round trip, so fuller
+    batches amortize it). Counts invocations next to per-doc calls."""
+
+    def __init__(self, truth, delay: float):
+        super().__init__(truth)
+        self.delay = delay
+        self.invocations = 0
+
+    def label(self, indices):
+        time.sleep(self.delay)
+        self.invocations += 1
+        return super().label(indices)
+
+
+def _workload(smoke: bool):
+    if smoke:
+        n_docs, dim, n_preds, n_requests, delay = 1200, 32, 4, 8, 0.06
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=64, latent_dim=32,
+                           proj_dim=16, phase1_steps=30, phase2_steps=30)
+    else:
+        n_docs, dim, n_preds, n_requests, delay = 4000, 64, 6, 12, 0.08
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=128, latent_dim=64,
+                           proj_dim=32, phase1_steps=60, phase2_steps=60)
+    corpus = make_corpus(0, n_docs=n_docs, dim=dim)
+    queries = [make_query(corpus, 100 + i, selectivity=0.3)
+               for i in range(n_preds)]
+    ccfg = CascadeConfig(accuracy_target=0.9)
+    return corpus, queries, pcfg, ccfg, n_requests, delay
+
+
+def _fresh_requests(queries, n_requests, delay):
+    """n_requests client asks over len(queries) distinct predicates —
+    popular predicates repeat across clients (distinct seeds), so their
+    sessions race on the same oracle and the broker has asks to merge.
+    Oracles are rebuilt per run so every run pays from scratch."""
+    oracles = [LatencyOracle(q.truth, delay) for q in queries]
+    cached = [CachedOracle(o) for o in oracles]
+    preds = [SemanticPredicate(queries[i % len(queries)].embed,
+                               cached[i % len(queries)],
+                               name=f"req{i}")
+             for i in range(n_requests)]
+    return oracles, preds
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    corpus, queries, pcfg, ccfg, n_requests, delay = _workload(smoke)
+    store_embeds = corpus.embeds
+
+    # warmup: compile the train/score programs outside every timing
+    w_oracles, w_preds = _fresh_requests(queries, 1, 0.0)
+    ScaleDocEngine(InMemoryStore(store_embeds), pcfg, ccfg).filter(
+        w_preds[0], seed=0)
+
+    # serial baseline: fresh engine per request, shared label caches
+    oracles, preds = _fresh_requests(queries, n_requests, delay)
+    t0 = time.perf_counter()
+    serial_masks = []
+    for i, pred in enumerate(preds):
+        engine = ScaleDocEngine(InMemoryStore(store_embeds), pcfg, ccfg)
+        serial_masks.append(engine.filter(pred, seed=i).mask)
+    serial_s = time.perf_counter() - t0
+    serial_qps = n_requests / serial_s
+    serial_docs = sum(o.calls for o in oracles)
+    serial_inv = sum(o.invocations for o in oracles)
+    rows.add("serve/serial_qps", 1e6 / max(serial_qps, 1e-9),
+             f"qps={serial_qps:.2f};n={n_requests};delay_ms="
+             f"{delay * 1e3:.0f}")
+
+    derived = {"serial_qps": serial_qps, "serial_seconds": serial_s,
+               "serial_oracle_docs": serial_docs,
+               "serial_oracle_invocations": serial_inv,
+               "n_requests": n_requests, "smoke": smoke}
+    qps_at = {}
+    for clients in (1, 4, 8):
+        oracles, preds = _fresh_requests(queries, n_requests, delay)
+        engine = ScaleDocEngine(InMemoryStore(store_embeds), pcfg, ccfg)
+        t0 = time.perf_counter()
+        with PredicateServer(engine, workers=clients,
+                             queue_depth=n_requests) as server:
+            results = server.run(preds, seeds=range(n_requests))
+        wall = time.perf_counter() - t0
+        qps = n_requests / wall
+        qps_at[clients] = qps
+        docs = sum(o.calls for o in oracles)
+        inv = sum(o.invocations for o in oracles)
+        snap = server.metrics_snapshot()
+        occ = snap["observations"].get("oracle_batch_occupancy",
+                                       {"mean": 0.0})
+        rows.add(f"serve/qps_c{clients}", 1e6 / max(qps, 1e-9),
+                 f"qps={qps:.2f};speedup={qps / serial_qps:.2f}x;"
+                 f"oracle_inv={inv}(serial {serial_inv});docs={docs}")
+        derived[f"qps_c{clients}"] = qps
+        derived[f"oracle_invocations_c{clients}"] = inv
+        derived[f"oracle_docs_c{clients}"] = docs
+        if clients == 4:
+            parity = all(np.array_equal(m, r.mask)
+                         for m, r in zip(serial_masks, results))
+            savings_ok = docs <= serial_docs
+            rows.add("serve/oracle_invocations", 0.0,
+                     f"serial={serial_inv};c4={inv};"
+                     f"merged={1 - inv / max(serial_inv, 1):.0%}")
+            rows.add("serve/batch_occupancy", 0.0,
+                     f"mean={occ['mean']:.1f};flushes="
+                     f"{snap['counters'].get('oracle_flushes', 0):.0f}")
+            derived["parity_c4"] = parity
+            derived["oracle_docs_saved_c4"] = serial_docs - docs
+            derived["batch_occupancy_c4"] = occ["mean"]
+
+    gain = qps_at[4] - serial_qps
+    derived["gain_c4_qps"] = gain
+    rows.add("serve/gain_c4", 0.0,
+             f"gain_qps={gain:.2f};serial={serial_qps:.2f};"
+             f"c4={qps_at[4]:.2f}")
+    rows.add("serve/parity", 0.0 if (derived["parity_c4"]
+                                     and derived["oracle_docs_saved_c4"]
+                                     >= 0) else 1.0,
+             f"bitwise={derived['parity_c4']};"
+             f"docs_saved={derived['oracle_docs_saved_c4']}")
+    if not derived["parity_c4"]:
+        raise AssertionError("concurrent c4 masks diverged from serial")
+    if derived["oracle_docs_saved_c4"] < 0:
+        raise AssertionError("concurrent run purchased more oracle docs "
+                             "than the serial shared-cache baseline")
+    if gain <= 1.0:
+        raise AssertionError(
+            f"aggregate throughput gain at 4 clients was {gain:.2f} "
+            f"queries/s (need > 1): serial {serial_qps:.2f} vs c4 "
+            f"{qps_at[4]:.2f}")
+    return derived
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="small workload (the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

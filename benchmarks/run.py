@@ -11,7 +11,8 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
                             bench_compound, bench_ingest, bench_kernels,
-                            bench_thresholds, bench_tradeoff, bench_training)
+                            bench_serve, bench_thresholds, bench_tradeoff,
+                            bench_training)
     from benchmarks.common import Rows
 
     parser = argparse.ArgumentParser()
@@ -30,6 +31,7 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("training (scan trainer)", bench_training.run),
         ("ingest (offline phase)", bench_ingest.run),
+        ("serve (concurrent sessions)", bench_serve.run),
     ]
     rows = Rows()
     timings = {}

@@ -10,6 +10,7 @@
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -35,32 +36,94 @@ class CachedOracle:
     """Memoizing wrapper: labels already purchased are never re-paid.
     The pipeline samples training, calibration and ambiguous-band labels
     independently; overlaps are common at high selectivity and should
-    cost nothing."""
+    cost nothing.
+
+    Thread-safe: the serving layer shares one ``CachedOracle`` per
+    underlying oracle across every concurrent query session, so the
+    miss-check and the purchase happen under one lock — two sessions
+    racing on the same document can never both pay for it. ``calls`` /
+    ``queried`` snapshot the inner oracle under the same lock, so they
+    are mutually consistent even while purchases are in flight.
+
+    Deliberate trade: holding the lock across ``inner.label`` means
+    purchases for one oracle are serialized (and a slow round trip
+    briefly blocks ``calls``/``stats``/``peek`` for that oracle). That
+    is what makes at-most-once purchase a one-lock invariant;
+    *concurrency* across asks is the layer above's job — the
+    ``OracleBroker`` coalesces concurrent asks into one batched
+    purchase instead of queueing on this lock, so the serialized
+    section is one round trip per micro-batch, not per session.
+    """
 
     def __init__(self, inner):
         self.inner = inner
         self._cache = {}
+        self._lock = threading.Lock()
+        self.hits = 0            # label asks served from cache
+        self.purchases = 0       # inner label() invocations
 
     @property
     def calls(self):
-        return self.inner.calls
+        with self._lock:
+            return self.inner.calls
 
     @property
     def queried(self):
-        return self.inner.queried
+        with self._lock:
+            return set(self.inner.queried)
+
+    @property
+    def cached_count(self):
+        with self._lock:
+            return len(self._cache)
+
+    def stats(self) -> dict:
+        """One atomic snapshot of calls / queried / cache size / hit
+        accounting (reading the properties separately can interleave
+        with a concurrent purchase)."""
+        with self._lock:
+            return {"calls": self.inner.calls,
+                    "queried": len(getattr(self.inner, "queried", ())),
+                    "cached": len(self._cache),
+                    "hits": self.hits,
+                    "purchases": self.purchases}
 
     @property
     def flops_per_doc(self):
         return getattr(self.inner, "flops_per_doc", ORACLE_FLOPS_PER_DOC)
 
+    def peek(self, indices) -> Sequence[int]:
+        """Indices (deduped, first-appearance order) not yet cached.
+        Advisory only — another thread may purchase them between peek
+        and label; ``label`` re-checks under the lock."""
+        with self._lock:
+            out, seen = [], set()
+            for i in np.asarray(indices, dtype=np.int64):
+                i = int(i)
+                if i not in self._cache and i not in seen:
+                    seen.add(i)
+                    out.append(i)
+            return out
+
     def label(self, indices):
         indices = np.asarray(indices, dtype=np.int64)
-        missing = [int(i) for i in indices if int(i) not in self._cache]
-        if missing:
-            got = self.inner.label(np.asarray(missing, dtype=np.int64))
-            for i, v in zip(missing, got):
-                self._cache[i] = bool(v)
-        return np.array([self._cache[int(i)] for i in indices], dtype=bool)
+        with self._lock:
+            missing = []
+            seen = set()
+            for i in indices:
+                i = int(i)
+                if i not in self._cache and i not in seen:
+                    seen.add(i)
+                    missing.append(i)
+            if missing:
+                got = self.inner.label(np.asarray(missing, dtype=np.int64))
+                for i, v in zip(missing, got):
+                    self._cache[i] = bool(v)
+                self.purchases += 1
+            else:
+                self.hits += 1
+            return np.array([self._cache[int(i)] for i in indices],
+                            dtype=bool)
 
 
 class SimulatedOracle:

@@ -45,9 +45,11 @@ Cascade execution is pluggable via the strategy registry
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -58,7 +60,7 @@ from repro.core.cascade import CascadeResult, f1_score
 from repro.core.oracle import CachedOracle
 from repro.core.trainer import train_proxy, train_proxy_multi, unstack_params
 from repro.engine.executor import ScoringExecutor, ScoringStats
-from repro.engine.predicate import (UNKNOWN, Not, Predicate,
+from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, Not, Predicate,
                                     SemanticPredicate)
 from repro.engine.registry import get_strategy
 from repro.engine.store import DocumentStore, InMemoryStore, as_store
@@ -188,6 +190,16 @@ class ScaleDocEngine:
         # (leaf.key, strategy, cascade cfg, seed): repeating a predicate
         # under identical settings re-buys nothing
         self._decisions: Dict[tuple, tuple] = {}
+        # cache mutations are lock-scoped so concurrent filter() calls
+        # (or concurrent session views sharing _oracles) stay safe;
+        # session views copy the reference, so one lock guards them all
+        self._lock = threading.RLock()
+        # serving-layer injection points (set on session views):
+        #   _oracle_wrap maps each CachedOracle to the label handle the
+        #   session actually calls (the OracleBroker coalesces there);
+        #   _observer receives phase / partial-result callbacks
+        self._oracle_wrap: Optional[Callable] = None
+        self._observer = None
         # populated by from_corpus(): the offline phase's accounting
         self.ingest_result = None
 
@@ -222,6 +234,53 @@ class ScaleDocEngine:
         engine.ingest_result = result
         return engine
 
+    # -- session views (online serving) ----------------------------------
+
+    def session_view(self, *, oracle_wrap: Optional[Callable] = None,
+                     observer=None,
+                     share_caches: bool = False) -> "ScaleDocEngine":
+        """A lightweight per-session view over this engine.
+
+        The view shares the resident store, executor, configs, lock and
+        — crucially — the ``_oracles`` label caches (a label purchased
+        by any session is free for every other), but gets *fresh*
+        proxy/decision/selectivity caches unless ``share_caches=True``.
+        Isolated decision caches are what make concurrent serving
+        bit-reproducible: each session behaves exactly like a serial
+        ``filter()`` on a fresh engine sharing the ``CachedOracle``s,
+        so its RNG stream cannot be perturbed by which *other* sessions
+        happened to populate a cache first.
+
+        ``oracle_wrap`` (CachedOracle -> label handle) is the serving
+        layer's injection point: every label purchase this session makes
+        routes through the returned handle (the ``OracleBroker`` batches
+        there). ``observer`` receives ``on_phase(name)`` and
+        ``on_partial(accepted_ids, rejected_ids)`` callbacks from
+        ``filter()``.
+        """
+        view = copy.copy(self)
+        view._oracle_wrap = oracle_wrap
+        view._observer = observer
+        if not share_caches:
+            view._proxies = {}
+            view._sel_est = {}
+            view._decisions = {}
+        return view
+
+    def _notify(self, phase: str) -> None:
+        obs = self._observer
+        if obs is not None:
+            on_phase = getattr(obs, "on_phase", None)
+            if on_phase is not None:
+                on_phase(phase)
+
+    def _partial(self, accepted: np.ndarray, rejected: np.ndarray) -> None:
+        obs = self._observer
+        if obs is not None:
+            on_partial = getattr(obs, "on_partial", None)
+            if on_partial is not None:
+                on_partial(accepted, rejected)
+
     # -- caches ---------------------------------------------------------
 
     def _cached_oracle(self, oracle) -> CachedOracle:
@@ -229,14 +288,24 @@ class ScaleDocEngine:
         # leaf keys embed id(oracle), so letting one be collected would
         # free its id for a different oracle and serve it stale cached
         # proxies/decisions
-        if isinstance(oracle, CachedOracle):
-            self._oracles.setdefault(id(oracle), oracle)
-            return oracle
-        got = self._oracles.get(id(oracle))
-        if got is None or got.inner is not oracle:
-            got = CachedOracle(oracle)
-            self._oracles[id(oracle)] = got
-        return got
+        with self._lock:
+            if isinstance(oracle, CachedOracle):
+                self._oracles.setdefault(id(oracle), oracle)
+                return oracle
+            got = self._oracles.get(id(oracle))
+            if got is None or got.inner is not oracle:
+                got = CachedOracle(oracle)
+                self._oracles[id(oracle)] = got
+            return got
+
+    def _session_oracle(self, oracle):
+        """The label handle a filter() call uses for ``oracle``: the
+        shared CachedOracle itself, or — on serving-session views — the
+        broker handle wrapped around it."""
+        cached = self._cached_oracle(oracle)
+        if self._oracle_wrap is None:
+            return cached
+        return self._oracle_wrap(cached)
 
     def clear_caches(self) -> None:
         """Drop all cross-query state (labels, proxies, decisions).
@@ -245,10 +314,11 @@ class ScaleDocEngine:
         pairs served — each pins its oracle and, for full-collection
         runs, an (N,) decision/score pair. Long-lived engines serving
         unbounded ad-hoc workloads should call this periodically."""
-        self._oracles.clear()
-        self._proxies.clear()
-        self._sel_est.clear()
-        self._decisions.clear()
+        with self._lock:
+            self._oracles.clear()
+            self._proxies.clear()
+            self._sel_est.clear()
+            self._decisions.clear()
 
     # -- planning -------------------------------------------------------
 
@@ -265,11 +335,14 @@ class ScaleDocEngine:
         """
         est: Dict[str, float] = {}
         jobs, job_leaves = [], []
+        with self._lock:
+            sel_snapshot = dict(self._sel_est)
+            proxies_snapshot = dict(self._proxies)
         for leaf in leaves:
-            if leaf.key in self._sel_est:
-                est[leaf.key] = self._sel_est[leaf.key]
+            if leaf.key in sel_snapshot:
+                est[leaf.key] = sel_snapshot[leaf.key]
             else:
-                jobs.append((self._proxies.get(leaf.key), leaf.e_q))
+                jobs.append((proxies_snapshot.get(leaf.key), leaf.e_q))
                 job_leaves.append(leaf)
         if jobs:
             cols, pass_stats = self.executor.score_multi(jobs, self.store)
@@ -301,24 +374,34 @@ class ScaleDocEngine:
         Labeled samples are drawn from the full collection (in plan
         order, so the rng stream is identical whether training is batched
         or sequential), then handed to ``train_proxy_multi``. Returns
-        ``leaf.key -> (oracle_calls_train, proxy_reused)`` for leaf
-        reports. Leaves with a cached proxy or cached decisions, and
-        tiny collections that direct-label, skip training entirely.
+        ``(info, local_params)``: ``info`` maps ``leaf.key ->
+        (oracle_calls_train, proxy_reused)`` for leaf reports, and
+        ``local_params`` pins the exact params this filter() call will
+        score with — concurrent sessions may overwrite the shared proxy
+        cache mid-flight, but never what *this* call already resolved.
+        Leaves with a cached proxy or cached decisions, and tiny
+        collections that direct-label, skip training entirely.
         """
         n = len(self.store)
         info: Dict[str, tuple] = {}
+        local_params: Dict[str, Dict] = {}
         jobs = []
+        with self._lock:
+            proxies_snapshot = dict(self._proxies)
+            decision_keys = set(self._decisions)
         for ordinal, leaf in enumerate(order):
-            reused = leaf.key in self._proxies
+            reused = leaf.key in proxies_snapshot
             dkey = (leaf.key, self.strategy, ccfg, seed)
-            if (reused or dkey in self._decisions
+            if reused:
+                local_params[leaf.key] = proxies_snapshot[leaf.key]
+            if (reused or dkey in decision_keys
                     or n <= DIRECT_LABEL_CUTOFF):
                 info[leaf.key] = (0, reused)
                 continue
             jobs.append((ordinal, leaf))
         keys, samples, labels = [], [], []
         for ordinal, leaf in jobs:
-            oracle = self._cached_oracle(leaf.oracle)
+            oracle = self._session_oracle(leaf.oracle)
             calls0 = oracle.calls
             n_train = min(max(int(self.proxy_cfg.train_fraction * n), 16),
                           n)
@@ -331,30 +414,36 @@ class ScaleDocEngine:
             res = train_proxy_multi(
                 keys, np.stack([leaf.e_q for _, leaf in jobs]), samples,
                 labels, self.proxy_cfg)
-            for (_, leaf), params in zip(jobs, unstack_params(res.params)):
-                self._proxies[leaf.key] = params
+            trained = list(zip(jobs, unstack_params(res.params)))
         else:
-            for (_, leaf), key, sample, y in zip(jobs, keys, samples,
-                                                 labels):
-                self._proxies[leaf.key] = train_proxy(
-                    key, leaf.e_q, sample, y, self.proxy_cfg).params
-        return info
+            trained = [((ordinal, leaf),
+                        train_proxy(key, leaf.e_q, sample, y,
+                                    self.proxy_cfg).params)
+                       for (ordinal, leaf), key, sample, y
+                       in zip(jobs, keys, samples, labels)]
+        with self._lock:
+            for (_, leaf), params in trained:
+                local_params[leaf.key] = params
+                self._proxies[leaf.key] = params
+        return info, local_params
 
     # -- leaf execution --------------------------------------------------
 
     def _execute_leaf(self, leaf: SemanticPredicate, pending: np.ndarray,
                       ccfg: CascadeConfig, rng: np.random.Generator,
                       train_info: Dict[str, tuple],
+                      local_params: Dict[str, Dict],
                       truth_local: Optional[np.ndarray],
                       seed: int, stats: ScoringStats) -> LeafReport:
-        oracle = self._cached_oracle(leaf.oracle)
+        oracle = self._session_oracle(leaf.oracle)
         calls0 = oracle.calls
         n = len(self.store)
         train_calls, reused = train_info.get(
-            leaf.key, (0, leaf.key in self._proxies))
+            leaf.key, (0, leaf.key in local_params))
 
         dkey = (leaf.key, self.strategy, ccfg, seed)
-        hit = self._decisions.get(dkey)
+        with self._lock:
+            hit = self._decisions.get(dkey)
         if hit is not None:
             labels_full, scores_full, cres = hit
             cascade = cres if len(pending) == n else None
@@ -386,7 +475,7 @@ class ScaleDocEngine:
             embeds_view = self.store.get(pending)
         else:
             embeds_view = _PendingView(self.store, pending, self.chunk)
-        params = self._proxies.get(leaf.key)
+        params = local_params.get(leaf.key)
         if params is None:
             raise RuntimeError(
                 f"no trained proxy for leaf {leaf.name!r}; "
@@ -399,8 +488,9 @@ class ScaleDocEngine:
             scores, _SubsetOracle(oracle, pending), ccfg,
             ground_truth=truth_local, rng=rng)
         if len(pending) == n:
-            self._sel_est[leaf.key] = float(cres.labels.mean())
-            self._decisions[dkey] = (cres.labels, scores, cres)
+            with self._lock:
+                self._sel_est[leaf.key] = float(cres.labels.mean())
+                self._decisions[dkey] = (cres.labels, scores, cres)
 
         return LeafReport(
             name=leaf.name, key=leaf.key, n_pending=len(pending),
@@ -436,6 +526,7 @@ class ScaleDocEngine:
         scoring_stats = ScoringStats()
         # single-leaf predicates have nothing to reorder — skip the
         # estimation pass over the collection
+        self._notify("planning")
         sel = (self._estimate_selectivities(leaves, scoring_stats)
                if len(leaves) > 1 else {})
         order, _ = predicate.plan(sel)
@@ -443,13 +534,17 @@ class ScaleDocEngine:
 
         calls_before = {}
         for leaf in leaves:
-            o = self._cached_oracle(leaf.oracle)
-            calls_before.setdefault(id(o), (o, o.calls))
+            o = self._session_oracle(leaf.oracle)
+            calls_before.setdefault(id(self._cached_oracle(leaf.oracle)),
+                                    (o, o.calls))
 
         # collect-then-batch: one compiled program trains every leaf
         # proxy this plan still needs, before any cascade runs
-        train_info = self._train_pending_leaves(order, ccfg, rng, seed)
+        self._notify("training")
+        train_info, local_params = self._train_pending_leaves(
+            order, ccfg, rng, seed)
 
+        self._notify("scoring")
         leaf_values: Dict[str, np.ndarray] = {}
         root = predicate.evaluate({lf.key: np.full(n, UNKNOWN, np.int8)
                                    for lf in leaves})
@@ -462,15 +557,20 @@ class ScaleDocEngine:
             if truth_local is not None:
                 truth_local = truth_local[pending]
             report = self._execute_leaf(leaf, pending, ccfg, rng,
-                                        train_info, truth_local, seed,
-                                        scoring_stats)
+                                        train_info, local_params,
+                                        truth_local, seed, scoring_stats)
             reports.append(report)
             vals = np.full(n, UNKNOWN, np.int8)
             vals[pending] = report.labels.astype(np.int8)
             leaf_values[leaf.key] = vals
             full = {lf.key: leaf_values.get(
                 lf.key, np.full(n, UNKNOWN, np.int8)) for lf in leaves}
+            prev_root = root
             root = predicate.evaluate(full)
+            # stream newly-decided doc ids to any session observer
+            newly = prev_root == UNKNOWN
+            self._partial(np.nonzero(newly & (root == TRUE))[0],
+                          np.nonzero(newly & (root == FALSE))[0])
 
         assert not (root == UNKNOWN).any(), \
             "plan executed every leaf yet left documents undecided"
@@ -490,6 +590,7 @@ class ScaleDocEngine:
             truth = np.asarray(ground_truth).astype(bool)
             result.achieved_f1 = f1_score(result.mask, truth)
             result.achieved_exact = float(np.mean(result.mask == truth))
+        self._notify("done")
         return result
 
     def query(self, e_q: np.ndarray, oracle, *,

@@ -1,7 +1,16 @@
-"""Minimal metrics sink: in-memory ring + optional JSONL file."""
+"""Metrics sinks.
+
+* ``Metrics`` — in-memory ring + optional JSONL file (training loops).
+* ``CounterSet`` — thread-safe counters / gauges / value observations
+  for the online serving subsystem (repro.serve): session latencies,
+  admission-queue depth, oracle micro-batch occupancy. Exported as one
+  JSON-serializable snapshot so a server can answer "how am I doing"
+  without stopping.
+"""
 from __future__ import annotations
 
 import json
+import threading
 import time
 from collections import deque
 from pathlib import Path
@@ -27,3 +36,108 @@ class Metrics:
 
     def last(self) -> Optional[Dict]:
         return self.ring[-1] if self.ring else None
+
+
+class _Observation:
+    """Streaming summary of one observed value series."""
+
+    __slots__ = ("count", "total", "min", "max", "last")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.last = 0.0
+
+    def add(self, value: float) -> None:
+        self.count += 1
+        self.total += value
+        self.min = min(self.min, value)
+        self.max = max(self.max, value)
+        self.last = value
+
+    def summary(self) -> Dict:
+        if not self.count:
+            return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
+                    "max": 0.0, "last": 0.0}
+        return {"count": self.count, "sum": self.total,
+                "mean": self.total / self.count, "min": self.min,
+                "max": self.max, "last": self.last}
+
+
+class CounterSet:
+    """Thread-safe named counters, gauges and value observations.
+
+    ``inc`` accumulates monotonically (events), ``gauge`` records the
+    current level (queue depth, in-flight sessions; tracking the peak on
+    the side), ``observe`` summarizes a value stream (latency seconds,
+    oracle batch occupancy) as count/sum/mean/min/max/last.
+    ``snapshot()`` returns one plain-dict view of everything;
+    ``to_json()`` is the wire form the serving layer exports.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+        self._peaks: Dict[str, float] = {}
+        self._observations: Dict[str, _Observation] = {}
+
+    def inc(self, name: str, value: float = 1.0) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + value
+
+    def gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+            self._peaks[name] = max(self._peaks.get(name, value), value)
+
+    def gauge_delta(self, name: str, delta: float) -> float:
+        """Adjust a gauge relatively (e.g. queue depth +1/-1)."""
+        with self._lock:
+            value = self._gauges.get(name, 0.0) + delta
+            self._gauges[name] = value
+            self._peaks[name] = max(self._peaks.get(name, value), value)
+            return value
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            obs = self._observations.get(name)
+            if obs is None:
+                obs = self._observations[name] = _Observation()
+            obs.add(value)
+
+    def timer(self, name: str):
+        """Context manager: observes the block's wall seconds."""
+        return _Timer(self, name)
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "gauges": {k: {"value": v, "peak": self._peaks[k]}
+                           for k, v in self._gauges.items()},
+                "observations": {k: o.summary()
+                                 for k, o in self._observations.items()},
+                "time": time.time(),
+            }
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True,
+                          default=float)
+
+
+class _Timer:
+    def __init__(self, counters: CounterSet, name: str):
+        self._counters = counters
+        self._name = name
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._counters.observe(self._name,
+                               time.perf_counter() - self._t0)
+        return False

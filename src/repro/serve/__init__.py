@@ -1,0 +1,20 @@
+# Online predicate-serving subsystem (public API):
+#   * PredicateServer — concurrent query sessions over one resident
+#     ScaleDocEngine: worker pool + bounded admission queue
+#   * QuerySession — explicit lifecycle (QUEUED → TRAINING → SCORING →
+#     ORACLE_WAIT → DONE), streaming accepted/rejected deltas, stats
+#   * OracleBroker — cross-session oracle micro-batching over the
+#     engine's shared CachedOracle label caches
+from repro.serve.broker import (  # noqa: F401
+    OracleBroker,
+    SessionOracleHandle,
+)
+from repro.serve.server import (  # noqa: F401
+    Delta,
+    PredicateServer,
+    QueryRequest,
+    QuerySession,
+    ServerClosed,
+    ServerSaturated,
+    SessionState,
+)

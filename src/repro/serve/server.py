@@ -1,0 +1,396 @@
+"""PredicateServer — concurrent query sessions over one resident engine.
+
+The engine's ``filter()`` is a blocking single-caller API; production
+traffic is many ad-hoc predicates arriving at once. The server owns one
+resident ``ScaleDocEngine`` (hence one store, one executor, one set of
+cross-query label caches) and executes sessions on a worker pool behind
+a bounded admission queue:
+
+    submit() ──► admission queue ──► worker pool ──► session.result()
+                 (backpressure:       each worker runs
+                  ServerSaturated     filter() on an isolated
+                  when full)          engine session view
+
+Each session progresses through explicit states — QUEUED → TRAINING →
+SCORING → ORACLE_WAIT → DONE (FAILED on error) — streams partial
+results (accepted/rejected doc-id deltas after every resolved leaf) and
+keeps per-session stats. All oracle label traffic routes through the
+shared ``OracleBroker``, which coalesces asks across in-flight sessions
+into micro-batches over the engine's ``CachedOracle``s.
+
+Bit-parity: session views isolate the proxy/decision caches, so every
+session computes exactly what a serial ``filter()`` on a fresh engine
+(sharing the label caches) would — concurrency changes throughput and
+oracle invocation shape, never decisions. See docs/serving.md.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import queue
+import threading
+import time
+import uuid
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.engine.engine import FilterResult, ScaleDocEngine
+from repro.engine.predicate import Predicate
+from repro.runtime.metrics import CounterSet
+from repro.serve.broker import OracleBroker
+
+
+class ServerSaturated(RuntimeError):
+    """Admission queue full: shed load upstream or raise queue_depth."""
+
+
+class ServerClosed(RuntimeError):
+    """submit() after shutdown()."""
+
+
+class SessionState(enum.Enum):
+    QUEUED = "queued"
+    TRAINING = "training"
+    SCORING = "scoring"
+    ORACLE_WAIT = "oracle_wait"
+    DONE = "done"
+    FAILED = "failed"
+
+
+# engine filter() phases -> session states (planning is a scoring pass)
+_PHASE_STATES = {
+    "planning": SessionState.SCORING,
+    "training": SessionState.TRAINING,
+    "scoring": SessionState.SCORING,
+}
+
+
+@dataclass
+class QueryRequest:
+    predicate: Predicate
+    accuracy_target: Optional[float] = None
+    ground_truth: Optional[np.ndarray] = None
+    seed: int = 0
+    name: Optional[str] = None
+
+
+@dataclass
+class Delta:
+    """One streamed increment of decided documents."""
+    accepted: np.ndarray
+    rejected: np.ndarray
+    seq: int = 0
+    final: bool = False
+
+
+class QuerySession:
+    """Handle for one in-flight (or finished) query.
+
+    Doubles as the engine-side observer: ``on_phase``/``on_partial``
+    are invoked by the session's engine view, ``oracle_wait`` by its
+    broker handles. Consumers use ``state``, ``iter_deltas()``,
+    ``result()`` and ``stats()``.
+    """
+
+    def __init__(self, request: QueryRequest, counters: CounterSet):
+        self.id = uuid.uuid4().hex[:12]
+        self.request = request
+        self.name = request.name or f"session-{self.id[:6]}"
+        self._counters = counters
+        self._cond = threading.Condition()
+        self._state = SessionState.QUEUED
+        self._history: List[tuple] = [(SessionState.QUEUED.value,
+                                       time.perf_counter())]
+        self._deltas: List[Delta] = []
+        self._result: Optional[FilterResult] = None
+        self._error: Optional[BaseException] = None
+        self._done = threading.Event()
+        self._accepted = 0
+        self._rejected = 0
+        self._oracle_wait_seconds = 0.0
+        self._submitted_at = time.perf_counter()
+        self._started_at: Optional[float] = None
+        self._finished_at: Optional[float] = None
+
+    # -- engine-facing observer hooks ------------------------------------
+
+    def on_phase(self, phase: str) -> None:
+        state = _PHASE_STATES.get(phase)
+        if state is not None:
+            self._set_state(state)
+
+    def on_partial(self, accepted: np.ndarray, rejected: np.ndarray) -> None:
+        with self._cond:
+            self._deltas.append(Delta(accepted=np.asarray(accepted),
+                                      rejected=np.asarray(rejected),
+                                      seq=len(self._deltas)))
+            self._accepted += len(accepted)
+            self._rejected += len(rejected)
+            self._cond.notify_all()
+
+    @contextlib.contextmanager
+    def oracle_wait(self):
+        prev = self.state
+        self._set_state(SessionState.ORACLE_WAIT)
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._oracle_wait_seconds += time.perf_counter() - t0
+            self._set_state(prev)
+
+    # -- server-facing lifecycle -----------------------------------------
+
+    def _mark_started(self) -> None:
+        self._started_at = time.perf_counter()
+        self._counters.observe("session_queue_wait_seconds",
+                               self._started_at - self._submitted_at)
+
+    def _finish(self, result: FilterResult) -> None:
+        self._result = result
+        self._finished_at = time.perf_counter()
+        with self._cond:
+            self._deltas.append(Delta(accepted=np.array([], np.int64),
+                                      rejected=np.array([], np.int64),
+                                      seq=len(self._deltas), final=True))
+            self._cond.notify_all()
+        self._set_state(SessionState.DONE)
+        self._done.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._finished_at = time.perf_counter()
+        self._set_state(SessionState.FAILED)
+        with self._cond:
+            self._cond.notify_all()
+        self._done.set()
+
+    def _set_state(self, state: SessionState) -> None:
+        with self._cond:
+            if self._state in (SessionState.DONE, SessionState.FAILED):
+                return
+            self._state = state
+            self._history.append((state.value, time.perf_counter()))
+
+    # -- consumer API -----------------------------------------------------
+
+    @property
+    def state(self) -> SessionState:
+        with self._cond:
+            return self._state
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> FilterResult:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"{self.name} still {self.state.value} "
+                               f"after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def iter_deltas(self, timeout: Optional[float] = None):
+        """Yield accepted/rejected doc-id deltas as leaves resolve,
+        until the final (empty, ``final=True``) delta. Safe to call
+        while the session is still running."""
+        seen = 0
+        while True:
+            with self._cond:
+                while seen >= len(self._deltas):
+                    if self._error is not None:
+                        raise self._error
+                    if not self._cond.wait(timeout):
+                        raise TimeoutError(
+                            f"{self.name}: no delta within {timeout}s")
+                delta = self._deltas[seen]
+            seen += 1
+            yield delta
+            if delta.final:
+                return
+
+    def stats(self) -> Dict:
+        with self._cond:
+            history = list(self._history)
+            accepted, rejected = self._accepted, self._rejected
+        wall = ((self._finished_at or time.perf_counter())
+                - self._submitted_at)
+        run = (None if self._started_at is None else
+               (self._finished_at or time.perf_counter())
+               - self._started_at)
+        return {
+            "id": self.id, "name": self.name,
+            "state": self.state.value,
+            "states": history,
+            "accepted": accepted, "rejected": rejected,
+            "oracle_wait_seconds": self._oracle_wait_seconds,
+            "queue_wait_seconds": (None if self._started_at is None else
+                                   self._started_at - self._submitted_at),
+            "run_seconds": run,
+            "wall_seconds": wall,
+        }
+
+
+_STOP = object()
+
+
+class PredicateServer:
+    """Thread-pool predicate-serving front over one resident engine."""
+
+    def __init__(self, engine: ScaleDocEngine, *, workers: int = 4,
+                 queue_depth: int = 32,
+                 broker: Optional[OracleBroker] = None,
+                 max_batch: int = 16, max_delay: float = 0.002,
+                 counters: Optional[CounterSet] = None,
+                 keep_sessions: int = 1024):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.engine = engine
+        self.counters = counters if counters is not None else CounterSet()
+        self.broker = broker or OracleBroker(max_batch=max_batch,
+                                             max_delay=max_delay,
+                                             counters=self.counters)
+        self._queue: "queue.Queue" = queue.Queue(maxsize=queue_depth)
+        self._closed = False
+        self._lock = threading.Lock()
+        # bounded history for sessions(): a long-lived server would
+        # otherwise pin every finished session's result arrays forever
+        self._sessions: "deque[QuerySession]" = deque(maxlen=keep_sessions)
+        self._workers = [threading.Thread(target=self._worker_loop,
+                                          name=f"scaledoc-serve-{i}",
+                                          daemon=True)
+                         for i in range(workers)]
+        for t in self._workers:
+            t.start()
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, predicate: Predicate, *,
+               accuracy_target: Optional[float] = None,
+               ground_truth: Optional[np.ndarray] = None,
+               seed: int = 0, name: Optional[str] = None,
+               block: bool = False,
+               timeout: Optional[float] = None) -> QuerySession:
+        """Admit one query. Non-blocking by default: raises
+        ``ServerSaturated`` when the admission queue is full (callers
+        shed or retry); ``block=True`` waits up to ``timeout``."""
+        request = QueryRequest(predicate=predicate,
+                               accuracy_target=accuracy_target,
+                               ground_truth=ground_truth, seed=seed,
+                               name=name)
+        session = QuerySession(request, self.counters)
+        # closed-check and enqueue are one atomic step (shutdown takes
+        # the same lock), so a session can never slip in behind the
+        # worker stop sentinels and hang unserved. Workers never take
+        # this lock, so a blocking put still drains.
+        with self._lock:
+            if self._closed:
+                raise ServerClosed("server is shut down")
+            # gauge moves before the put: a worker may dequeue (and
+            # decrement) the instant the session lands
+            self.counters.gauge_delta("queue_depth", 1)
+            try:
+                self._queue.put(session, block=block, timeout=timeout)
+            except queue.Full:
+                self.counters.gauge_delta("queue_depth", -1)
+                self.counters.inc("sessions_rejected")
+                raise ServerSaturated(
+                    f"admission queue full ({self._queue.maxsize} deep); "
+                    "retry later or raise queue_depth") from None
+            self._sessions.append(session)
+        self.counters.inc("sessions_submitted")
+        return session
+
+    def run(self, predicates: Sequence, *, seeds: Optional[Sequence[int]]
+            = None, accuracy_target: Optional[float] = None,
+            timeout: Optional[float] = None) -> List[FilterResult]:
+        """Convenience: submit a batch (blocking admission) and wait for
+        every result, in submission order."""
+        seeds = seeds if seeds is not None else range(len(predicates))
+        sessions = [self.submit(p, seed=s, block=True,
+                                accuracy_target=accuracy_target)
+                    for p, s in zip(predicates, seeds)]
+        return [s.result(timeout) for s in sessions]
+
+    # -- workers ----------------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                return
+            session: QuerySession = item
+            self.counters.gauge_delta("queue_depth", -1)
+            self.counters.gauge_delta("active_sessions", 1)
+            session._mark_started()
+            view = self.engine.session_view(
+                oracle_wrap=self.broker.wrap_for(session),
+                observer=session)
+            req = session.request
+            try:
+                result = view.filter(
+                    req.predicate, accuracy_target=req.accuracy_target,
+                    ground_truth=req.ground_truth, seed=req.seed)
+                session._finish(result)
+                self.counters.inc("sessions_done")
+                self.counters.observe(
+                    "session_latency_seconds",
+                    session._finished_at - session._submitted_at)
+                self.counters.observe("session_oracle_wait_seconds",
+                                      session._oracle_wait_seconds)
+            except BaseException as exc:
+                session._fail(exc)
+                self.counters.inc("sessions_failed")
+            finally:
+                self.counters.gauge_delta("active_sessions", -1)
+
+    # -- introspection -----------------------------------------------------
+
+    def sessions(self) -> List[QuerySession]:
+        with self._lock:
+            return list(self._sessions)
+
+    def metrics_snapshot(self) -> Dict:
+        """JSON-serializable view of the server's counters plus oracle
+        cache totals (docs purchased / served from cache)."""
+        snap = self.counters.snapshot()
+        with self.engine._lock:
+            oracles = list(self.engine._oracles.values())
+        snap["oracle_cache"] = {
+            "oracles": len(oracles),
+            "docs_purchased": sum(o.calls for o in oracles),
+            "docs_cached": sum(o.cached_count for o in oracles),
+            "purchases": sum(o.purchases for o in oracles),
+            "cache_hits": sum(o.hits for o in oracles),
+        }
+        snap["queue"] = {"depth": self._queue.qsize(),
+                         "capacity": self._queue.maxsize}
+        return snap
+
+    def metrics_json(self, indent: int = 2) -> str:
+        import json
+        return json.dumps(self.metrics_snapshot(), indent=indent,
+                          sort_keys=True, default=float)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for _ in self._workers:
+            self._queue.put(_STOP)
+        if wait:
+            for t in self._workers:
+                t.join()
+        self.broker.flush_all()
+
+    def __enter__(self) -> "PredicateServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(wait=True)

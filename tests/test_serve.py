@@ -1,0 +1,333 @@
+"""Online serving subsystem: PredicateServer sessions, the OracleBroker
+micro-batcher, and the concurrent-vs-serial bit-parity gate."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import SimulatedOracle
+from repro.core.oracle import CachedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+from repro.runtime.metrics import CounterSet
+from repro.serve import (OracleBroker, PredicateServer, ServerClosed,
+                         ServerSaturated, SessionState)
+
+N_DOCS, DIM = 800, 32
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(0, n_docs=N_DOCS, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    pcfg = ProxyConfig(embed_dim=DIM, hidden_dim=64, latent_dim=32,
+                       proj_dim=16, phase1_steps=30, phase2_steps=30)
+    return pcfg, CascadeConfig(accuracy_target=0.9)
+
+
+def _mixed_workload(corpus):
+    """≥4 mixed compound/leaf requests over 4 distinct oracles (fresh
+    oracle objects per call so runs are independent)."""
+    qs = [make_query(corpus, 100 + i, selectivity=0.3) for i in range(4)]
+    sims = [SimulatedOracle(q.truth) for q in qs]
+    cached = [CachedOracle(s) for s in sims]
+    p = [SemanticPredicate(qs[i].embed, cached[i], name=f"p{i}")
+         for i in range(4)]
+    preds = [p[0], p[1] & ~p[2], p[3] | p[1], p[2]]
+    return sims, preds
+
+
+def _serial_baseline(corpus, cfgs):
+    """N serial filter() calls, each on a fresh engine, sharing the
+    CachedOracles — the parity reference the server must reproduce."""
+    pcfg, ccfg = cfgs
+    sims, preds = _mixed_workload(corpus)
+    masks = []
+    for i, pred in enumerate(preds):
+        engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+        masks.append(engine.filter(pred, seed=i).mask)
+    return masks, sum(s.calls for s in sims)
+
+
+# -- acceptance gate: concurrent == serial, bit for bit ----------------------
+
+def test_concurrent_server_matches_serial_bitwise(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    serial_masks, serial_calls = _serial_baseline(corpus, cfgs)
+
+    sims, preds = _mixed_workload(corpus)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=4, max_delay=0.003) as server:
+        sessions = [server.submit(p, seed=i) for i, p in enumerate(preds)]
+        results = [s.result(timeout=300) for s in sessions]
+    for i, (mask, res) in enumerate(zip(serial_masks, results)):
+        np.testing.assert_array_equal(
+            mask, res.mask, err_msg=f"query {i} diverged from serial")
+    # the broker can only dedup harder than the serial shared cache
+    assert sum(s.calls for s in sims) <= serial_calls
+    assert all(s.state == SessionState.DONE for s in sessions)
+
+
+def test_repeated_submissions_are_deterministic(corpus, cfgs):
+    """Same workload served twice -> identical masks both times (no
+    order-of-execution leakage through the shared caches)."""
+    pcfg, ccfg = cfgs
+    runs = []
+    for _ in range(2):
+        _, preds = _mixed_workload(corpus)
+        engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+        with PredicateServer(engine, workers=3) as server:
+            runs.append([r.mask for r in
+                         server.run(preds, seeds=range(len(preds)))])
+    for a, b in zip(*runs):
+        np.testing.assert_array_equal(a, b)
+
+
+# -- broker ------------------------------------------------------------------
+
+def test_broker_coalesces_concurrent_asks():
+    truth = np.random.default_rng(0).random(600) < 0.4
+    inner = SimulatedOracle(truth)
+    cached = CachedOracle(inner)
+    counters = CounterSet()
+    broker = OracleBroker(max_batch=64, max_delay=0.01, counters=counters)
+    lane = broker.lane(cached)
+    rng = np.random.default_rng(1)
+    asks = [rng.choice(600, size=100, replace=False) for _ in range(8)]
+
+    threads = [threading.Thread(target=lane.request, args=(a,))
+               for a in asks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    union = set(int(i) for a in asks for i in a)
+    # every doc purchased exactly once, across all concurrent askers
+    assert inner.calls == len(union)
+    assert inner.queried == union
+    # coalescing really merged asks: far fewer flushes than askers' docs
+    snap = counters.snapshot()
+    assert snap["counters"]["oracle_flushes"] < 8 * 100
+    assert snap["counters"]["oracle_docs_flushed"] == len(union)
+    occ = snap["observations"]["oracle_batch_occupancy"]
+    assert occ["mean"] >= 1.0
+    # trigger semantics: one big ask goes out whole, never fragmented
+    assert occ["max"] >= 64
+
+
+def test_broker_handle_charges_per_session():
+    truth = np.ones(100, bool)
+    cached = CachedOracle(SimulatedOracle(truth))
+    broker = OracleBroker(max_batch=8, max_delay=0.001)
+    h1 = broker.wrap_for()(cached)
+    h2 = broker.wrap_for()(cached)
+    np.testing.assert_array_equal(h1.label(np.arange(40)), truth[:40])
+    np.testing.assert_array_equal(h2.label(np.arange(20, 60)),
+                                  truth[20:60])
+    assert h1.calls == 40          # first session paid 0..39
+    assert h2.calls == 20          # second only its fresh 40..59
+    assert cached.calls == 60
+    # identical wrap from one session reuses the handle (accounting
+    # accumulates across phases)
+    wrap = broker.wrap_for()
+    assert wrap(cached) is wrap(cached)
+
+
+def test_broker_flush_on_deadline_without_filling():
+    cached = CachedOracle(SimulatedOracle(np.ones(10, bool)))
+    broker = OracleBroker(max_batch=1000, max_delay=0.005)
+    t0 = time.perf_counter()
+    out = broker.wrap_for()(cached).label([1, 2, 3])
+    assert (time.perf_counter() - t0) < 2.0
+    np.testing.assert_array_equal(out, [True] * 3)
+    assert cached.purchases == 1
+
+
+def test_broker_propagates_oracle_errors():
+    class Boom:
+        calls = 0
+
+        def label(self, idx):
+            raise RuntimeError("oracle down")
+
+    broker = OracleBroker(max_batch=4, max_delay=0.001)
+    handle = broker.wrap_for()(CachedOracle(Boom()))
+    with pytest.raises(RuntimeError, match="oracle down"):
+        handle.label([0, 1, 2, 3])
+
+
+# -- server lifecycle --------------------------------------------------------
+
+class _SlowOracle:
+    """Deterministic oracle with a fixed per-invocation latency."""
+
+    def __init__(self, truth, delay=0.05):
+        self._truth = np.asarray(truth, bool)
+        self.delay = delay
+        self.calls = 0
+
+    def label(self, indices):
+        time.sleep(self.delay)
+        indices = np.asarray(indices, np.int64)
+        self.calls += len(indices)
+        return self._truth[indices]
+
+
+def test_server_backpressure_and_blocking_submit(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    q = make_query(corpus, 7, selectivity=0.3)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    server = PredicateServer(engine, workers=1, queue_depth=1)
+    try:
+        slow = [SemanticPredicate(q.embed, _SlowOracle(q.truth),
+                                  name=f"slow{i}") for i in range(8)]
+        admitted = []
+        with pytest.raises(ServerSaturated):
+            for i, pred in enumerate(slow):      # 1 running + 1 queued max
+                admitted.append(server.submit(pred, seed=i))
+        assert 1 <= len(admitted) < len(slow)
+        snap = server.metrics_snapshot()
+        assert snap["counters"]["sessions_rejected"] >= 1
+        # blocking submit waits for a slot instead of shedding
+        blocked = server.submit(slow[-1], seed=99, block=True, timeout=120)
+        for s in admitted + [blocked]:
+            s.result(timeout=300)
+    finally:
+        server.shutdown()
+
+
+def test_session_states_deltas_and_stats(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    q1 = make_query(corpus, 31, selectivity=0.3)
+    q2 = make_query(corpus, 33, selectivity=0.4)
+    pred = (SemanticPredicate(q1.embed, SimulatedOracle(q1.truth), name="a")
+            & ~SemanticPredicate(q2.embed, SimulatedOracle(q2.truth),
+                                 name="b"))
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=2) as server:
+        session = server.submit(pred, seed=0)
+        deltas = list(session.iter_deltas(timeout=300))
+        res = session.result(timeout=300)
+    assert deltas[-1].final and [d.seq for d in deltas] == \
+        list(range(len(deltas)))
+    accepted = np.concatenate([d.accepted for d in deltas])
+    rejected = np.concatenate([d.rejected for d in deltas])
+    np.testing.assert_array_equal(np.sort(accepted),
+                                  np.nonzero(res.mask)[0])
+    np.testing.assert_array_equal(np.sort(rejected),
+                                  np.nonzero(~res.mask)[0])
+    stats = session.stats()
+    seen_states = [s for s, _ in stats["states"]]
+    assert seen_states[0] == "queued" and seen_states[-1] == "done"
+    assert "training" in seen_states and "scoring" in seen_states
+    assert stats["accepted"] + stats["rejected"] == N_DOCS
+    assert stats["wall_seconds"] > 0
+
+
+def test_failed_session_reports_and_server_survives(corpus, cfgs):
+    pcfg, ccfg = cfgs
+
+    class BadOracle:
+        calls = 0
+
+        def label(self, idx):
+            raise ValueError("labeler exploded")
+
+    q = make_query(corpus, 7, selectivity=0.3)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=1) as server:
+        bad = server.submit(SemanticPredicate(q.embed, BadOracle()), seed=0)
+        with pytest.raises(ValueError, match="labeler exploded"):
+            bad.result(timeout=300)
+        assert bad.state == SessionState.FAILED
+        # the worker survives a failed session and serves the next one
+        good = server.submit(
+            SemanticPredicate(q.embed, SimulatedOracle(q.truth)), seed=0)
+        assert good.result(timeout=300).mask.shape == (N_DOCS,)
+        snap = server.metrics_snapshot()
+        assert snap["counters"]["sessions_failed"] == 1
+        assert snap["counters"]["sessions_done"] == 1
+
+
+def test_submit_after_shutdown_raises(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    server = PredicateServer(engine, workers=1)
+    server.shutdown()
+    q = make_query(corpus, 7, selectivity=0.3)
+    with pytest.raises(ServerClosed):
+        server.submit(SemanticPredicate(q.embed, SimulatedOracle(q.truth)))
+
+
+def test_metrics_snapshot_is_json_serializable(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    q = make_query(corpus, 7, selectivity=0.3)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=2) as server:
+        server.run([SemanticPredicate(q.embed, SimulatedOracle(q.truth))],
+                   seeds=[0])
+        snap = server.metrics_snapshot()
+        wire = server.metrics_json()
+    parsed = json.loads(wire)
+    for blob in (snap, parsed):
+        assert blob["counters"]["sessions_done"] == 1
+        assert "session_latency_seconds" in blob["observations"]
+        assert "queue_depth" in blob["gauges"]
+        assert blob["oracle_cache"]["docs_purchased"] > 0
+    assert parsed["queue"]["capacity"] == 32
+
+
+# -- engine session views ----------------------------------------------------
+
+def test_session_view_isolates_decision_caches(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    q = make_query(corpus, 7, selectivity=0.3)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    oracle = SimulatedOracle(q.truth)
+    pred = SemanticPredicate(q.embed, oracle)
+    view = engine.session_view()
+    res1 = view.filter(pred, seed=0)
+    # the view trained and decided, but the parent engine saw none of it
+    assert view._proxies and not engine._proxies
+    assert view._decisions and not engine._decisions
+    # ...while the label cache IS shared: a fresh view re-buys nothing
+    calls = oracle.calls
+    res2 = engine.session_view().filter(pred, seed=0)
+    assert oracle.calls == calls
+    np.testing.assert_array_equal(res1.mask, res2.mask)
+
+
+def test_concurrent_filter_on_shared_engine_is_safe(corpus, cfgs):
+    """Direct concurrent filter() on ONE engine (no server): the lock-
+    scoped caches must keep it crash-free and each call's mask valid."""
+    pcfg, ccfg = cfgs
+    queries = [make_query(corpus, 60 + i, selectivity=0.3)
+               for i in range(3)]
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    out, errors = {}, []
+
+    def work(i):
+        try:
+            q = queries[i]
+            res = engine.filter(
+                SemanticPredicate(q.embed, SimulatedOracle(q.truth),
+                                  name=f"c{i}"), seed=i)
+            out[i] = res.mask
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert sorted(out) == [0, 1, 2]
+    for mask in out.values():
+        assert mask.dtype == bool and mask.shape == (N_DOCS,)

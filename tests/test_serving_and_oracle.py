@@ -92,3 +92,44 @@ def test_generate_rwkv_state_based():
     out = generate(model, params, prompt, 4)
     assert out.shape == (1, 4)
     assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_cached_oracle_thread_safe_under_hammering():
+    """Satellite gate: a thread pool hammering one CachedOracle with
+    overlapping asks never double-purchases a document, and calls /
+    queried stay mutually consistent throughout."""
+    import threading
+    from repro.core.oracle import CachedOracle
+
+    n = 2000
+    truth = np.random.default_rng(0).random(n) < 0.4
+    inner = SimulatedOracle(truth)
+    oracle = CachedOracle(inner)
+    rng = np.random.default_rng(1)
+    asks = [rng.choice(n, size=200, replace=False) for _ in range(16)]
+    errors = []
+
+    def hammer(idx):
+        try:
+            for _ in range(5):
+                got = oracle.label(idx)
+                np.testing.assert_array_equal(got, truth[idx])
+                # consistency probe while others are purchasing: the
+                # atomic snapshot can never show calls != unique docs
+                snap = oracle.stats()
+                assert snap["calls"] == snap["queried"] == snap["cached"]
+        except BaseException as exc:
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(a,)) for a in asks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:1]
+    union = set(int(i) for a in asks for i in a)
+    assert inner.calls == len(union)          # each doc paid exactly once
+    assert inner.queried == union
+    assert oracle.calls == len(oracle.queried) == len(union)
+    assert oracle.cached_count == len(union)
+    assert oracle.hits > 0                    # repeats were free
