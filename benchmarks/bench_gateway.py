@@ -1,0 +1,244 @@
+"""Network gateway benchmark: HTTP/SSE service plane vs in-process serving.
+
+The gateway puts a stdlib HTTP server, JSON wire codec and per-tenant
+admission between clients and ``PredicateServer``; this suite prices
+that layer against the in-process baseline ``bench_serve`` establishes.
+The same mixed workload runs three ways — serial ``filter()`` (the
+bit-parity reference), in-process ``PredicateServer`` at 4 workers, and
+remote ``GatewayClient``s at 1/4/8 concurrent clients against one
+4-worker server. Reported rows:
+
+  gateway/serial_qps       sequential in-process baseline (queries/s)
+  gateway/inproc_qps_c4    in-process server, 4 workers (the ceiling)
+  gateway/http_qps_r{1,4,8} remote clients over HTTP, same server
+  gateway/added_latency    mean per-request latency over HTTP minus the
+                           in-process session latency (wire+codec cost)
+  gateway/sse_done_lag     client arrival of the SSE `done` event minus
+                           the server-side done transition (same-process
+                           clock, so this is pure delivery lag)
+  gateway/parity           gate row: accept/reject sets over HTTP — and
+                           reassembled from SSE — bitwise-identical to
+                           serial filter() (0 = pass)
+
+Only parity gates the run (throughput depends on the host's thread
+scheduling; numbers are tracked, not asserted). ``--smoke`` shrinks the
+workload for CI; ``--json PATH`` writes rows + derived metrics (default
+BENCH_gateway.json).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.bench_serve import LatencyOracle
+from benchmarks.common import Rows
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core.oracle import CachedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+from repro.gateway import GatewayClient, PredicateGateway
+from repro.serve import PredicateServer
+
+SERVER_WORKERS = 4
+
+
+def _workload(smoke: bool):
+    if smoke:
+        n_docs, dim, n_preds, n_requests, delay = 1200, 32, 4, 8, 0.06
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=64, latent_dim=32,
+                           proj_dim=16, phase1_steps=30, phase2_steps=30)
+    else:
+        n_docs, dim, n_preds, n_requests, delay = 4000, 64, 6, 12, 0.08
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=128, latent_dim=64,
+                           proj_dim=32, phase1_steps=60, phase2_steps=60)
+    corpus = make_corpus(0, n_docs=n_docs, dim=dim)
+    queries = [make_query(corpus, 100 + i, selectivity=0.3)
+               for i in range(n_preds)]
+    ccfg = CascadeConfig(accuracy_target=0.9)
+    return corpus, queries, pcfg, ccfg, n_requests, delay
+
+
+def _fresh_requests(queries, n_requests, delay):
+    """Same request mix as bench_serve: popular predicates repeat across
+    clients; fresh oracles per run so every run pays from scratch. Also
+    returns the name -> oracle registry the wire format resolves
+    against."""
+    cached = [CachedOracle(LatencyOracle(q.truth, delay))
+              for q in queries]
+    preds = [SemanticPredicate(queries[i % len(queries)].embed,
+                               cached[i % len(queries)],
+                               name=f"req{i}")
+             for i in range(n_requests)]
+    oracles = {f"o{i}": c for i, c in enumerate(cached)}
+    return oracles, preds
+
+
+def _drive_http(url, wires, n_clients):
+    """n_clients threads drain the request list through one gateway;
+    returns (wall_seconds, per-request latencies, results by index)."""
+    latencies = [0.0] * len(wires)
+    results = [None] * len(wires)
+    errors = []
+    cursor = iter(range(len(wires)))
+    lock = threading.Lock()
+
+    def worker():
+        client = GatewayClient(url)
+        while True:
+            with lock:
+                i = next(cursor, None)
+            if i is None:
+                return
+            try:
+                t0 = time.perf_counter()
+                sub = client.submit(wires[i], seed=i)
+                res = client.wait(sub["id"], timeout=600, interval=2.0)
+                latencies[i] = time.perf_counter() - t0
+                results[i] = res
+            except BaseException as exc:  # surfaced after join
+                errors.append((i, exc))
+
+    threads = [threading.Thread(target=worker)
+               for _ in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise AssertionError(f"HTTP requests failed: {errors[:3]}")
+    return wall, latencies, results
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    corpus, queries, pcfg, ccfg, n_requests, delay = _workload(smoke)
+    embeds = corpus.embeds
+
+    def engine():
+        return ScaleDocEngine(InMemoryStore(embeds), pcfg, ccfg)
+
+    # warmup: compile train/score programs outside every timing
+    _, w_preds = _fresh_requests(queries, 1, 0.0)
+    engine().filter(w_preds[0], seed=0)
+
+    # serial in-process baseline (the parity reference)
+    oracles, preds = _fresh_requests(queries, n_requests, delay)
+    t0 = time.perf_counter()
+    serial_masks = [engine().filter(p, seed=i).mask
+                    for i, p in enumerate(preds)]
+    serial_s = time.perf_counter() - t0
+    serial_qps = n_requests / serial_s
+    rows.add("gateway/serial_qps", 1e6 / max(serial_qps, 1e-9),
+             f"qps={serial_qps:.2f};n={n_requests};delay_ms="
+             f"{delay * 1e3:.0f}")
+
+    # in-process server at 4 workers: the no-network ceiling
+    oracles, preds = _fresh_requests(queries, n_requests, delay)
+    t0 = time.perf_counter()
+    with PredicateServer(engine(), workers=SERVER_WORKERS,
+                         queue_depth=n_requests) as server:
+        server.run(preds, seeds=range(n_requests))
+    inproc_s = time.perf_counter() - t0
+    inproc_qps = n_requests / inproc_s
+    snap = server.metrics_snapshot()
+    inproc_lat = snap["observations"]["session_latency_seconds"]["mean"]
+    rows.add("gateway/inproc_qps_c4", 1e6 / max(inproc_qps, 1e-9),
+             f"qps={inproc_qps:.2f};mean_latency_s={inproc_lat:.3f}")
+
+    derived = {"serial_qps": serial_qps, "inproc_qps_c4": inproc_qps,
+               "inproc_mean_latency_s": inproc_lat,
+               "n_requests": n_requests, "smoke": smoke,
+               "server_workers": SERVER_WORKERS}
+
+    parity = True
+    http_lat_r4 = None
+    for n_clients in (1, 4, 8):
+        oracles, preds = _fresh_requests(queries, n_requests, delay)
+        wires = [p.to_wire(oracles) for p in preds]
+        with PredicateServer(engine(), workers=SERVER_WORKERS,
+                             queue_depth=n_requests) as server:
+            with PredicateGateway(server, oracles) as gw:
+                wall, lats, results = _drive_http(gw.url, wires,
+                                                  n_clients)
+        qps = n_requests / wall
+        mean_lat = float(np.mean(lats))
+        rows.add(f"gateway/http_qps_r{n_clients}",
+                 1e6 / max(qps, 1e-9),
+                 f"qps={qps:.2f};vs_serial={qps / serial_qps:.2f}x;"
+                 f"mean_latency_s={mean_lat:.3f}")
+        derived[f"http_qps_r{n_clients}"] = qps
+        derived[f"http_mean_latency_r{n_clients}_s"] = mean_lat
+        if n_clients == 4:
+            http_lat_r4 = mean_lat
+            for i, mask in enumerate(serial_masks):
+                ok = (np.array_equal(np.sort(results[i]["accepted"]),
+                                     np.nonzero(mask)[0])
+                      and np.array_equal(np.sort(results[i]["rejected"]),
+                                         np.nonzero(~mask)[0]))
+                parity = parity and ok
+
+    added = http_lat_r4 - inproc_lat
+    derived["added_latency_s"] = added
+    rows.add("gateway/added_latency", max(added, 0.0) * 1e6,
+             f"http_r4={http_lat_r4:.3f}s;inproc_c4={inproc_lat:.3f}s;"
+             f"added={added * 1e3:.1f}ms")
+
+    # SSE delivery lag: stream one live session; the server-side done
+    # transition and the client arrival share one process clock
+    oracles, preds = _fresh_requests(queries, 1, delay)
+    wires = [p.to_wire(oracles) for p in preds]
+    with PredicateServer(engine(), workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.submit(wires[0], seed=0)
+            events, arrivals = [], []
+            for event in client.iter_deltas(sub["id"], timeout=600):
+                arrivals.append(time.perf_counter())
+                events.append(event)
+            session = server.get_session(sub["id"])
+            done_at = dict((s, t) for s, t in
+                           session.stats()["states"])["done"]
+            sse_masks_ok = bool(events[-1]["final"])
+            res = client.wait(sub["id"], timeout=60)
+            sse_acc = sorted(d for e in events for d in e["accepted"])
+            sse_masks_ok = sse_masks_ok and \
+                sse_acc == sorted(res["accepted"])
+            parity = parity and sse_masks_ok
+    lag = arrivals[-1] - done_at
+    derived["sse_done_lag_s"] = lag
+    derived["sse_events"] = len(events)
+    rows.add("gateway/sse_done_lag", max(lag, 0.0) * 1e6,
+             f"lag_ms={lag * 1e3:.2f};events={len(events)}")
+
+    derived["parity"] = parity
+    rows.add("gateway/parity", 0.0 if parity else 1.0,
+             f"bitwise={parity};requests={n_requests};sse=1")
+    if not parity:
+        raise AssertionError(
+            "HTTP/SSE decisions diverged from serial filter()")
+    return derived
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="small workload (the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_gateway.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

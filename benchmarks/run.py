@@ -10,9 +10,9 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
-                            bench_compound, bench_ingest, bench_kernels,
-                            bench_serve, bench_thresholds, bench_tradeoff,
-                            bench_training)
+                            bench_compound, bench_gateway, bench_ingest,
+                            bench_kernels, bench_serve, bench_thresholds,
+                            bench_tradeoff, bench_training)
     from benchmarks.common import Rows
 
     parser = argparse.ArgumentParser()
@@ -32,6 +32,7 @@ def main() -> None:
         ("training (scan trainer)", bench_training.run),
         ("ingest (offline phase)", bench_ingest.run),
         ("serve (concurrent sessions)", bench_serve.run),
+        ("gateway (HTTP/SSE service plane)", bench_gateway.run),
     ]
     rows = Rows()
     timings = {}

@@ -25,10 +25,12 @@ from repro.engine.executor import (  # noqa: F401
 )
 from repro.engine.predicate import (  # noqa: F401
     And,
+    from_wire,
     Not,
     Or,
     Predicate,
     SemanticPredicate,
+    WireFormatError,
 )
 from repro.engine.registry import (  # noqa: F401
     available_strategies,

@@ -10,17 +10,38 @@ Evaluation is three-valued (Kleene logic): a document's value under a
 node is TRUE/FALSE once enough leaves have been resolved to decide it,
 UNKNOWN until then. UNKNOWN documents are exactly the ones the engine
 still has to spend proxy/oracle budget on.
+
+Wire format (the network gateway's request body): every predicate
+serializes to a pure-JSON AST via ``to_wire()`` and reconstructs via
+``from_wire()``. Leaves carry their query either as a raw embedding
+(base64 of the float32 bytes — *bit-exact*, so the reconstructed leaf
+has the same cache ``key`` and the engine makes identical decisions) or
+as a ``prompt`` string resolved by a server-side embedder; oracles
+never travel — leaves reference them by name against a server-side
+registry, so a round-tripped predicate labels through the very same
+(cached) oracle object. See docs/gateway.md for the grammar.
 """
 from __future__ import annotations
 
+import base64
 import hashlib
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 TRUE = np.int8(1)
 FALSE = np.int8(0)
 UNKNOWN = np.int8(-1)
+
+WIRE_VERSION = 1
+# bombs a client could mail in: a deeply right-nested AST recurses the
+# decoder, a wide one explodes the plan — both are rejected up front
+MAX_WIRE_DEPTH = 32
+MAX_WIRE_NODES = 512
+
+
+class WireFormatError(ValueError):
+    """Malformed predicate AST received over the wire."""
 
 
 def kleene_not(v: np.ndarray) -> np.ndarray:
@@ -82,6 +103,30 @@ class Predicate:
         """
         raise NotImplementedError
 
+    def to_wire(self, oracles: Optional[Mapping[str, object]] = None
+                ) -> Dict:
+        """Serialize to the pure-JSON wire AST.
+
+        ``oracles`` is the name -> oracle registry the *receiving* side
+        holds (same mapping ``from_wire`` takes); each leaf's oracle is
+        resolved to its name by identity (the leaf's own oracle or, for
+        a leaf built over a ``CachedOracle``, its ``inner``). Without a
+        registry, an oracle exposing a ``wire_name`` attribute
+        self-identifies. Unresolvable oracles raise ``WireFormatError``
+        — an oracle is a priced labeling service and cannot travel in a
+        request body.
+        """
+        reverse: Dict[int, str] = {}
+        for name, oracle in (oracles or {}).items():
+            reverse[id(oracle)] = name
+            inner = getattr(oracle, "inner", None)
+            if inner is not None:
+                reverse.setdefault(id(inner), name)
+        return self._to_wire(reverse)
+
+    def _to_wire(self, reverse: Dict[int, str]) -> Dict:
+        raise NotImplementedError
+
 
 class SemanticPredicate(Predicate):
     """One LLM predicate: query embedding + oracle labeler.
@@ -113,6 +158,22 @@ class SemanticPredicate(Predicate):
     def plan(self, selectivity):
         return [self], float(selectivity.get(self.key, 0.5))
 
+    def _to_wire(self, reverse):
+        oracle_name = reverse.get(id(self.oracle))
+        if oracle_name is None:
+            inner = getattr(self.oracle, "inner", None)
+            oracle_name = (reverse.get(id(inner))
+                           or getattr(self.oracle, "wire_name", None))
+        if oracle_name is None:
+            raise WireFormatError(
+                f"leaf {self.name!r}: oracle not in the registry and has "
+                "no wire_name — register it under a name first")
+        return {"op": "leaf", "name": self.name, "oracle": oracle_name,
+                "embed": {"dtype": "float32",
+                          "shape": list(self.e_q.shape),
+                          "b64": base64.b64encode(
+                              self.e_q.tobytes()).decode("ascii")}}
+
     def __repr__(self):
         return self.name
 
@@ -130,6 +191,9 @@ class Not(Predicate):
     def plan(self, selectivity):
         order, sel = self.child.plan(selectivity)
         return order, 1.0 - sel
+
+    def _to_wire(self, reverse):
+        return {"op": "not", "child": self.child._to_wire(reverse)}
 
     def __repr__(self):
         return f"~{self.child!r}"
@@ -172,6 +236,10 @@ class _NaryOp(Predicate):
     def _combine_sel(self, sels):
         raise NotImplementedError
 
+    def _to_wire(self, reverse):
+        return {"op": "and" if type(self).combine is kleene_and else "or",
+                "children": [c._to_wire(reverse) for c in self.children]}
+
     def __repr__(self):
         return "(" + f" {self.symbol} ".join(map(repr, self.children)) + ")"
 
@@ -199,3 +267,103 @@ class Or(_NaryOp):
         for s in sels:
             out *= (1.0 - s)
         return 1.0 - out
+
+
+# -- wire decoding ------------------------------------------------------------
+
+def _decode_embed(node: Mapping, where: str) -> np.ndarray:
+    spec = node["embed"]
+    if not isinstance(spec, Mapping):
+        raise WireFormatError(f"{where}: embed must be an object")
+    dtype = spec.get("dtype", "float32")
+    if dtype != "float32":
+        raise WireFormatError(f"{where}: unsupported embed dtype {dtype!r}")
+    try:
+        raw = base64.b64decode(spec["b64"], validate=True)
+    except (KeyError, TypeError, ValueError) as exc:
+        raise WireFormatError(f"{where}: bad embed.b64: {exc}") from None
+    shape = spec.get("shape")
+    if (not isinstance(shape, (list, tuple)) or len(shape) != 1
+            or not isinstance(shape[0], int) or shape[0] < 1):
+        raise WireFormatError(f"{where}: embed.shape must be [D]")
+    try:
+        e_q = np.frombuffer(raw, np.float32)
+    except ValueError as exc:            # buffer not a multiple of 4 bytes
+        raise WireFormatError(f"{where}: bad embed bytes: {exc}") from None
+    if e_q.shape != tuple(shape):
+        raise WireFormatError(
+            f"{where}: embed bytes decode to shape {e_q.shape}, "
+            f"declared {tuple(shape)}")
+    return e_q
+
+
+def _from_wire(node, oracles: Mapping[str, object],
+               embedder: Optional[Callable[[str], np.ndarray]],
+               depth: int, budget: List[int]) -> Predicate:
+    if depth > MAX_WIRE_DEPTH:
+        raise WireFormatError(f"AST deeper than {MAX_WIRE_DEPTH}")
+    budget[0] -= 1
+    if budget[0] < 0:
+        raise WireFormatError(f"AST larger than {MAX_WIRE_NODES} nodes")
+    if not isinstance(node, Mapping):
+        raise WireFormatError(f"node must be an object, got "
+                              f"{type(node).__name__}")
+    op = node.get("op")
+    if op == "leaf":
+        name = node.get("name")
+        oracle_name = node.get("oracle")
+        if not isinstance(oracle_name, str):
+            raise WireFormatError("leaf: missing oracle name")
+        oracle = oracles.get(oracle_name)
+        if oracle is None:
+            raise WireFormatError(
+                f"leaf: unknown oracle {oracle_name!r} (registered: "
+                f"{sorted(oracles)})")
+        if "embed" in node:
+            e_q = _decode_embed(node, f"leaf {name!r}")
+        elif "prompt" in node:
+            if embedder is None:
+                raise WireFormatError(
+                    f"leaf {name!r}: prompt leaves need a server-side "
+                    "embedder; send an embed instead")
+            if not isinstance(node["prompt"], str):
+                raise WireFormatError(f"leaf {name!r}: prompt must be a "
+                                      "string")
+            e_q = np.asarray(embedder(node["prompt"]), np.float32)
+        else:
+            raise WireFormatError(
+                f"leaf {name!r}: needs a prompt or an embed")
+        return SemanticPredicate(e_q, oracle, name=name)
+    if op == "not":
+        if "child" not in node:
+            raise WireFormatError("not: missing child")
+        return Not(_from_wire(node["child"], oracles, embedder,
+                              depth + 1, budget))
+    if op in ("and", "or"):
+        children = node.get("children")
+        if not isinstance(children, list) or len(children) < 2:
+            raise WireFormatError(f"{op}: needs a list of >= 2 children")
+        built = [_from_wire(c, oracles, embedder, depth + 1, budget)
+                 for c in children]
+        return (And if op == "and" else Or)(*built)
+    raise WireFormatError(f"unknown op {op!r}")
+
+
+def from_wire(node, *, oracles: Mapping[str, object],
+              embedder: Optional[Callable[[str], np.ndarray]] = None
+              ) -> Predicate:
+    """Reconstruct a predicate from its wire AST (``to_wire`` output).
+
+    ``oracles`` maps wire names to the oracle objects this side labels
+    with; ``embedder`` (prompt str -> (D,) embedding) enables ``prompt``
+    leaves. Raises ``WireFormatError`` on any malformed node — unknown
+    op, unregistered oracle, missing prompt/embed, byte/shape mismatch,
+    or an AST exceeding ``MAX_WIRE_DEPTH`` / ``MAX_WIRE_NODES``.
+
+    Round-trip guarantee: embeds travel as raw float32 bytes, so
+    ``from_wire(p.to_wire(reg), oracles=reg)`` rebuilds every leaf with
+    a bit-identical ``e_q`` *and* the same oracle object — hence the
+    same cache ``key``, the same RNG streams, and bitwise-identical
+    ``filter()`` decisions as the original predicate.
+    """
+    return _from_wire(node, oracles, embedder, 1, [MAX_WIRE_NODES])

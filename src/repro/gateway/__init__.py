@@ -1,0 +1,26 @@
+# Network gateway (public API): the HTTP/SSE service plane over
+# repro.serve.PredicateServer.
+#   * PredicateGateway — stdlib ThreadingHTTPServer front end: wire-
+#     format predicate submission, session lifecycle + SSE delta
+#     streams, per-tenant admission, /healthz /readyz /v1/metrics
+#     /v1/admin/sessions ops surface
+#   * Tenant / TenantTable — API-key tenants with token-bucket rate and
+#     max-in-flight quotas (429 + Retry-After before the server queue)
+#   * GatewayClient — thin stdlib client: submit/wait/filter,
+#     iter_deltas SSE streaming, typed RateLimited/GatewayUnavailable/
+#     RemoteQueryFailed errors
+from repro.gateway.admission import (  # noqa: F401
+    PUBLIC_TENANT,
+    Tenant,
+    TenantState,
+    TenantTable,
+    TokenBucket,
+)
+from repro.gateway.client import (  # noqa: F401
+    GatewayClient,
+    GatewayError,
+    GatewayUnavailable,
+    RateLimited,
+    RemoteQueryFailed,
+)
+from repro.gateway.gateway import PredicateGateway  # noqa: F401

@@ -1,0 +1,430 @@
+"""PredicateGateway — the HTTP/SSE service plane over PredicateServer.
+
+Everything behind this module already exists in-process: PR 5's
+``PredicateServer`` runs concurrent sessions with explicit lifecycle
+states, streamed deltas and a metrics snapshot nothing consumed. The
+gateway is the wire: a stdlib-only (``http.server.ThreadingHTTPServer``,
+zero new dependencies) front end that turns those APIs into a network
+service with per-tenant admission and a live ops surface.
+
+    POST   /v1/queries               submit a wire-format predicate AST
+    GET    /v1/queries/<id>          session state + stats
+    GET    /v1/queries/<id>/result   decisions (blocks up to ?timeout=)
+    GET    /v1/queries/<id>/deltas   accepted/rejected doc-id deltas as
+                                     server-sent events (final sentinel
+                                     -> `done` event -> stream close)
+    DELETE /v1/queries/<id>          cooperative cancel
+    GET    /healthz | /readyz        liveness | engine-resident+store-open
+    GET    /v1/metrics               CounterSet snapshot: queue depth,
+                                     micro-batch occupancy, per-tenant
+                                     counters, latency p50/p95/p99
+    GET    /v1/admin/sessions        live session registry with states
+
+Admission is layered: API key -> tenant (401), token-bucket rate and
+max-in-flight quota (429 + ``Retry-After``, enforced *before* the
+server's admission queue so a throttled tenant costs the pool nothing),
+then ``PredicateServer.submit`` (``ServerSaturated`` -> 429,
+``ServerClosed`` -> 503, both with ``Retry-After`` — backpressure is a
+status code, never a hung request).
+
+Decisions over the wire are exactly in-process decisions: the AST
+rebuilds each leaf bit-exactly (``repro.engine.predicate.from_wire``)
+against the gateway's named oracle registry, so sessions share the same
+``CachedOracle`` objects, caches and RNG streams as a serial
+``filter()`` — the end-to-end parity gate in ``tests/test_gateway.py``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Mapping, Optional
+
+import numpy as np
+
+from repro.engine.predicate import WireFormatError, from_wire
+from repro.gateway.admission import TenantState, TenantTable
+from repro.serve.server import (PredicateServer, QuerySession,
+                                ServerClosed, ServerSaturated,
+                                SessionCancelled, SessionState)
+
+MAX_BODY_BYTES = 8 << 20            # request bodies larger than this: 413
+SATURATED_RETRY_AFTER = 1.0         # hint when the admission queue is full
+CLOSED_RETRY_AFTER = 5.0
+
+
+def _retry_header(seconds: float) -> Dict[str, str]:
+    return {"Retry-After": str(max(1, math.ceil(seconds)))}
+
+
+class _GatewayHTTPServer(ThreadingHTTPServer):
+    # SSE streams pin handler threads; daemonize so close() never hangs
+    # on a client that keeps its stream open
+    daemon_threads = True
+
+    def __init__(self, addr, handler, gateway: "PredicateGateway"):
+        super().__init__(addr, handler)
+        self.gateway = gateway
+
+
+class PredicateGateway:
+    """HTTP/SSE front end over one ``PredicateServer``.
+
+    ``oracles`` is the name -> oracle registry wire predicates resolve
+    against (names are what leaves carry; the objects are what sessions
+    label with). ``tenants`` is a ``TenantTable``, a list of ``Tenant``
+    records, a JSON config path, or ``None`` for open admission.
+    ``embedder`` (prompt -> embedding) enables ``prompt`` leaves. The
+    listener starts immediately on ``host:port`` (port 0 = ephemeral;
+    read it back from ``gateway.port``/``gateway.url``).
+    """
+
+    def __init__(self, server: PredicateServer,
+                 oracles: Mapping[str, object], *,
+                 tenants=None, embedder=None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 stream_timeout: float = 600.0):
+        self.server = server
+        self.counters = server.counters
+        self.oracles = dict(oracles)
+        if isinstance(tenants, TenantTable):
+            self.tenants = tenants
+        elif isinstance(tenants, (str, bytes)) or hasattr(tenants,
+                                                          "read_text"):
+            self.tenants = TenantTable.from_file(tenants)
+        else:
+            self.tenants = TenantTable(tenants)
+        self.embedder = embedder
+        self.stream_timeout = stream_timeout
+        self._httpd = _GatewayHTTPServer((host, port), _Handler, self)
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever,
+            name="scaledoc-gateway", daemon=True)
+        self._thread.start()
+
+    # -- addressing ------------------------------------------------------
+
+    @property
+    def host(self) -> str:
+        return self._httpd.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    # -- lifecycle -------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop accepting connections and release the listener. The
+        underlying ``PredicateServer`` is not touched — it may serve
+        other fronts; shut it down separately (or nest context
+        managers: ``with server: with gateway: ...``)."""
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=10)
+
+    def __enter__(self) -> "PredicateGateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- request-level operations (handler delegates here) ---------------
+
+    def submit(self, tenant: TenantState, body: Dict) -> QuerySession:
+        pred = from_wire(body["predicate"], oracles=self.oracles,
+                         embedder=self.embedder)
+        target = body.get("accuracy_target")
+        session = self.server.submit(
+            pred,
+            accuracy_target=None if target is None else float(target),
+            seed=int(body.get("seed", 0)),
+            name=body.get("name"),
+            tenant=tenant.tenant.name)
+        tenant.track(session)
+        return session
+
+    def lookup(self, session_id: str,
+               tenant: Optional[TenantState]) -> Optional[QuerySession]:
+        """Session by id, scoped to the requesting tenant: with a closed
+        tenant table a session is invisible (404, not 403 — ids are
+        unguessable but still should not leak) to everyone but its
+        owner."""
+        session = self.server.get_session(session_id)
+        if session is None:
+            return None
+        if (not self.tenants.open and tenant is not None
+                and session.tenant != tenant.tenant.name):
+            return None
+        return session
+
+    def metrics_snapshot(self) -> Dict:
+        snap = self.server.metrics_snapshot()
+        snap["tenants"] = self.tenants.snapshot()
+        return snap
+
+    def readiness(self) -> Dict:
+        reason = None
+        docs = 0
+        if self.server.closed:
+            reason = "server closed"
+        else:
+            try:
+                docs = len(self.server.engine.store)
+            except Exception as exc:  # store unreadable = not ready
+                reason = f"store not open: {exc}"
+            else:
+                if docs == 0:
+                    reason = "store is empty"
+        return {"ready": reason is None, "docs": docs,
+                **({"reason": reason} if reason else {})}
+
+
+def _result_payload(session: QuerySession) -> Dict:
+    res = session._result
+    mask = res.mask
+    return {"done": True, "state": session.state.value,
+            "id": session.id, "name": session.name,
+            "tenant": session.tenant,
+            "accepted": np.nonzero(mask)[0].tolist(),
+            "rejected": np.nonzero(~mask)[0].tolist(),
+            "n_docs": int(res.n_docs),
+            "oracle_calls_total": int(res.oracle_calls_total),
+            "oracle_calls_train": int(res.oracle_calls_train),
+            "plan": res.plan,
+            "wall_seconds": res.wall_seconds,
+            "achieved_f1": res.achieved_f1,
+            "achieved_exact": res.achieved_exact}
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "scaledoc-gateway"
+
+    def log_message(self, *args):    # request logging -> CounterSet only
+        pass
+
+    @property
+    def gw(self) -> PredicateGateway:
+        return self.server.gateway
+
+    # -- verbs -----------------------------------------------------------
+
+    def do_GET(self):
+        self._route("GET")
+
+    def do_POST(self):
+        self._route("POST")
+
+    def do_DELETE(self):
+        self._route("DELETE")
+
+    # -- routing ---------------------------------------------------------
+
+    def _route(self, method: str) -> None:
+        t0 = time.perf_counter()
+        self._status = 500
+        try:
+            split = urllib.parse.urlsplit(self.path)
+            self._query = dict(urllib.parse.parse_qsl(split.query))
+            parts = [p for p in split.path.split("/") if p]
+            self._dispatch(method, parts)
+        except (BrokenPipeError, ConnectionResetError):
+            self.close_connection = True
+        except Exception as exc:  # noqa: BLE001 — service boundary
+            try:
+                self._json(500, {"error": f"{type(exc).__name__}: {exc}"})
+            except OSError:
+                pass
+        finally:
+            c = self.gw.counters
+            c.inc("gateway_requests")
+            c.inc(f"gateway_http_{self._status // 100}xx")
+            c.observe("gateway_request_seconds",
+                      time.perf_counter() - t0)
+
+    def _dispatch(self, method: str, parts) -> None:
+        if method == "GET" and parts == ["healthz"]:
+            return self._json(200, {"ok": True})
+        if method == "GET" and parts == ["readyz"]:
+            ready = self.gw.readiness()
+            return self._json(200 if ready["ready"] else 503, ready)
+        if method == "GET" and parts == ["v1", "metrics"]:
+            return self._json(200, self.gw.metrics_snapshot())
+        if method == "GET" and parts == ["v1", "admin", "sessions"]:
+            stats = [s.stats() for s in self.gw.server.sessions()]
+            return self._json(200, {"count": len(stats),
+                                    "sessions": stats})
+        if parts[:2] == ["v1", "queries"]:
+            return self._queries(method, parts[2:])
+        self._json(404, {"error": f"no route {method} {self.path}"})
+
+    def _queries(self, method: str, rest) -> None:
+        tenant = self._tenant()
+        if tenant is None:
+            return self._json(401, {"error": "unknown or missing API "
+                                             "key"})
+        name = tenant.tenant.name
+        self.gw.tenants.fold_counters(self.gw.counters, name, "requests")
+        if method == "POST" and not rest:
+            return self._submit(tenant)
+        if len(rest) >= 1:
+            session = self.gw.lookup(rest[0], tenant)
+            if session is None:
+                return self._json(404, {"error": f"no session "
+                                                 f"{rest[0]!r}"})
+            if method == "GET" and len(rest) == 1:
+                return self._json(200, session.stats())
+            if method == "GET" and rest[1:] == ["result"]:
+                return self._result(session)
+            if method == "GET" and rest[1:] == ["deltas"]:
+                return self._sse(session)
+            if method == "DELETE" and len(rest) == 1:
+                cancelled = session.cancel()
+                return self._json(200, {"cancelled": cancelled,
+                                        "state": session.state.value})
+        self._json(404, {"error": f"no route {method} {self.path}"})
+
+    # -- endpoints -------------------------------------------------------
+
+    def _submit(self, tenant: TenantState) -> None:
+        name = tenant.tenant.name
+        counters = self.gw.counters
+        fold = self.gw.tenants.fold_counters
+        admitted, retry_after, reason = tenant.admit()
+        if not admitted:
+            fold(counters, name, "rejected_rate" if reason == "rate"
+                 else "rejected_quota")
+            return self._json(
+                429, {"error": f"tenant {name!r} over its "
+                               f"{reason} limit",
+                      "reason": reason, "retry_after": retry_after},
+                headers=_retry_header(retry_after))
+        try:
+            body = self._body()
+            session = self.gw.submit(tenant, body)
+        except WireFormatError as exc:
+            fold(counters, name, "rejected_malformed")
+            return self._json(400, {"error": str(exc)})
+        except (KeyError, TypeError, ValueError) as exc:
+            fold(counters, name, "rejected_malformed")
+            return self._json(400, {"error": f"bad request body: "
+                                             f"{exc}"})
+        except ServerSaturated as exc:
+            # global backpressure surfaces as a status code + hint, not
+            # a request parked on the admission queue
+            fold(counters, name, "rejected_saturated")
+            return self._json(
+                429, {"error": str(exc), "reason": "saturated",
+                      "retry_after": SATURATED_RETRY_AFTER},
+                headers=_retry_header(SATURATED_RETRY_AFTER))
+        except ServerClosed as exc:
+            return self._json(
+                503, {"error": str(exc),
+                      "retry_after": CLOSED_RETRY_AFTER},
+                headers=_retry_header(CLOSED_RETRY_AFTER))
+        fold(counters, name, "submitted")
+        self._json(202, {"id": session.id, "name": session.name,
+                         "tenant": name,
+                         "state": session.state.value})
+
+    def _result(self, session: QuerySession) -> None:
+        timeout = min(float(self._query.get("timeout", 0.0)),
+                      self.gw.stream_timeout)
+        try:
+            session.result(timeout=timeout)
+        except TimeoutError:
+            return self._json(202, {"done": False,
+                                    "state": session.state.value,
+                                    "id": session.id})
+        except SessionCancelled as exc:
+            return self._json(409, {"done": True, "state": "cancelled",
+                                    "error": str(exc)})
+        except BaseException as exc:  # the session's own failure
+            return self._json(500, {"done": True, "state": "failed",
+                                    "error": f"{type(exc).__name__}: "
+                                             f"{exc}"})
+        self._json(200, _result_payload(session))
+
+    def _sse(self, session: QuerySession) -> None:
+        """Stream the session's accepted/rejected deltas as server-sent
+        events; the engine's final sentinel becomes a ``done`` event and
+        the stream closes."""
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        self.close_connection = True
+        self._status = 200
+        try:
+            for delta in session.iter_deltas(
+                    timeout=self.gw.stream_timeout):
+                event = "done" if delta.final else "delta"
+                payload = {"seq": delta.seq,
+                           "accepted": np.asarray(delta.accepted,
+                                                  np.int64).tolist(),
+                           "rejected": np.asarray(delta.rejected,
+                                                  np.int64).tolist(),
+                           "state": session.state.value}
+                self._event(event, payload)
+                self.gw.counters.inc("gateway_sse_events")
+        except (BrokenPipeError, ConnectionResetError):
+            pass                      # client went away mid-stream
+        except BaseException as exc:  # session failed / stream timed out
+            try:
+                self._event("error", {"error": f"{type(exc).__name__}: "
+                                               f"{exc}",
+                                      "state": session.state.value})
+            except OSError:
+                pass
+
+    def _event(self, name: str, payload: Dict) -> None:
+        blob = json.dumps(payload, default=float)
+        self.wfile.write(f"event: {name}\ndata: {blob}\n\n".encode())
+        self.wfile.flush()
+
+    # -- plumbing --------------------------------------------------------
+
+    def _tenant(self) -> Optional[TenantState]:
+        key = self.headers.get("X-API-Key")
+        if key is None:
+            auth = self.headers.get("Authorization", "")
+            if auth.startswith("Bearer "):
+                key = auth[len("Bearer "):]
+        return self.gw.tenants.authenticate(key)
+
+    def _body(self) -> Dict:
+        length = int(self.headers.get("Content-Length", 0))
+        if length > MAX_BODY_BYTES:
+            raise ValueError(f"body of {length} bytes exceeds "
+                             f"{MAX_BODY_BYTES}")
+        raw = self.rfile.read(length) if length else b"{}"
+        try:
+            body = json.loads(raw)
+        except json.JSONDecodeError as exc:
+            raise ValueError(f"body is not JSON: {exc}") from None
+        if not isinstance(body, dict):
+            raise ValueError("body must be a JSON object")
+        if "predicate" not in body:
+            raise KeyError("'predicate'")
+        return body
+
+    def _json(self, status: int, payload: Dict,
+              headers: Optional[Dict[str, str]] = None) -> None:
+        body = json.dumps(payload, default=float).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        for key, value in (headers or {}).items():
+            self.send_header(key, value)
+        self.end_headers()
+        self.wfile.write(body)
+        self._status = status

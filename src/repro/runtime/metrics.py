@@ -10,14 +10,24 @@
 from __future__ import annotations
 
 import json
+import math
+import random
 import threading
 import time
 from collections import deque
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 
 class Metrics:
+    """In-memory ring + optional JSONL file sink.
+
+    The file handle stays open across ``log()`` calls (append + flush
+    per record); ``close()`` — or using the instance as a context
+    manager — flushes and releases it. Logging after close keeps
+    feeding the in-memory ring only.
+    """
+
     def __init__(self, path: Optional[str] = None, keep: int = 10_000):
         self.path = Path(path) if path else None
         self.ring: deque = deque(maxlen=keep)
@@ -37,11 +47,41 @@ class Metrics:
     def last(self) -> Optional[Dict]:
         return self.ring[-1] if self.ring else None
 
+    @property
+    def closed(self) -> bool:
+        return self._fh is None
+
+    def close(self) -> None:
+        """Flush and close the JSONL sink (idempotent)."""
+        if self._fh is not None:
+            self._fh.flush()
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "Metrics":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+RESERVOIR_SIZE = 1024
+
 
 class _Observation:
-    """Streaming summary of one observed value series."""
+    """Streaming summary of one observed value series.
 
-    __slots__ = ("count", "total", "min", "max", "last")
+    Alongside the running count/sum/min/max/last it keeps a bounded
+    reservoir (Vitter's Algorithm R, fixed-seed PRNG so snapshots are
+    reproducible) from which ``summary()`` reports p50/p95/p99: exact
+    order statistics while ``count <= RESERVOIR_SIZE``, an unbiased
+    uniform-sample estimate beyond that — O(1) memory either way, which
+    is what lets a server export latency percentiles forever without
+    retaining every observation.
+    """
+
+    __slots__ = ("count", "total", "min", "max", "last", "_reservoir",
+                 "_rng")
 
     def __init__(self):
         self.count = 0
@@ -49,6 +89,8 @@ class _Observation:
         self.min = float("inf")
         self.max = float("-inf")
         self.last = 0.0
+        self._reservoir: List[float] = []
+        self._rng = random.Random(0x5CA1ED0C)
 
     def add(self, value: float) -> None:
         self.count += 1
@@ -56,14 +98,32 @@ class _Observation:
         self.min = min(self.min, value)
         self.max = max(self.max, value)
         self.last = value
+        if len(self._reservoir) < RESERVOIR_SIZE:
+            self._reservoir.append(value)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < RESERVOIR_SIZE:
+                self._reservoir[j] = value
+
+    def percentiles(self, qs=(0.50, 0.95, 0.99)) -> List[float]:
+        """Nearest-rank percentiles over the reservoir sample."""
+        ordered = sorted(self._reservoir)
+        n = len(ordered)
+        if not n:
+            return [0.0 for _ in qs]
+        return [ordered[min(n - 1, max(0, math.ceil(q * n) - 1))]
+                for q in qs]
 
     def summary(self) -> Dict:
         if not self.count:
             return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
-                    "max": 0.0, "last": 0.0}
+                    "max": 0.0, "last": 0.0, "p50": 0.0, "p95": 0.0,
+                    "p99": 0.0}
+        p50, p95, p99 = self.percentiles()
         return {"count": self.count, "sum": self.total,
                 "mean": self.total / self.count, "min": self.min,
-                "max": self.max, "last": self.last}
+                "max": self.max, "last": self.last,
+                "p50": p50, "p95": p95, "p99": p99}
 
 
 class CounterSet:

@@ -88,6 +88,20 @@ class Trainer:
         self.checkpointer = ckpt.AsyncCheckpointer(
             train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints)
 
+    # -- lifecycle -------------------------------------------------------------
+    def close(self) -> None:
+        """Drain pending checkpoints and release the metrics JSONL
+        handle. Safe to call more than once; ``with Trainer(...) as tr``
+        does it on exit."""
+        self.checkpointer.wait()
+        self.metrics.close()
+
+    def __enter__(self) -> "Trainer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- state ----------------------------------------------------------------
     def init_state(self):
         with self.mesh:

@@ -16,5 +16,6 @@ from repro.serve.server import (  # noqa: F401
     QuerySession,
     ServerClosed,
     ServerSaturated,
+    SessionCancelled,
     SessionState,
 )

@@ -51,6 +51,11 @@ class ServerClosed(RuntimeError):
     """submit() after shutdown()."""
 
 
+class SessionCancelled(RuntimeError):
+    """Session aborted by ``QuerySession.cancel()`` (e.g. a gateway
+    DELETE): raised to consumers blocked on result()/iter_deltas()."""
+
+
 class SessionState(enum.Enum):
     QUEUED = "queued"
     TRAINING = "training"
@@ -58,6 +63,11 @@ class SessionState(enum.Enum):
     ORACLE_WAIT = "oracle_wait"
     DONE = "done"
     FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+_TERMINAL = (SessionState.DONE, SessionState.FAILED,
+             SessionState.CANCELLED)
 
 
 # engine filter() phases -> session states (planning is a scoring pass)
@@ -75,6 +85,7 @@ class QueryRequest:
     ground_truth: Optional[np.ndarray] = None
     seed: int = 0
     name: Optional[str] = None
+    tenant: Optional[str] = None    # admission identity (set by gateways)
 
 
 @dataclass
@@ -99,7 +110,9 @@ class QuerySession:
         self.id = uuid.uuid4().hex[:12]
         self.request = request
         self.name = request.name or f"session-{self.id[:6]}"
+        self.tenant = request.tenant
         self._counters = counters
+        self._cancel = False
         self._cond = threading.Condition()
         self._state = SessionState.QUEUED
         self._history: List[tuple] = [(SessionState.QUEUED.value,
@@ -118,11 +131,13 @@ class QuerySession:
     # -- engine-facing observer hooks ------------------------------------
 
     def on_phase(self, phase: str) -> None:
+        self._check_cancelled()
         state = _PHASE_STATES.get(phase)
         if state is not None:
             self._set_state(state)
 
     def on_partial(self, accepted: np.ndarray, rejected: np.ndarray) -> None:
+        self._check_cancelled()
         with self._cond:
             self._deltas.append(Delta(accepted=np.asarray(accepted),
                                       rejected=np.asarray(rejected),
@@ -133,6 +148,7 @@ class QuerySession:
 
     @contextlib.contextmanager
     def oracle_wait(self):
+        self._check_cancelled()
         prev = self.state
         self._set_state(SessionState.ORACLE_WAIT)
         t0 = time.perf_counter()
@@ -161,19 +177,27 @@ class QuerySession:
         self._done.set()
 
     def _fail(self, error: BaseException) -> None:
+        if self._done.is_set():       # cancel/fail races are first-wins
+            return
         self._error = error
         self._finished_at = time.perf_counter()
-        self._set_state(SessionState.FAILED)
+        self._set_state(SessionState.CANCELLED
+                        if isinstance(error, SessionCancelled)
+                        else SessionState.FAILED)
         with self._cond:
             self._cond.notify_all()
         self._done.set()
 
     def _set_state(self, state: SessionState) -> None:
         with self._cond:
-            if self._state in (SessionState.DONE, SessionState.FAILED):
+            if self._state in _TERMINAL:
                 return
             self._state = state
             self._history.append((state.value, time.perf_counter()))
+
+    def _check_cancelled(self) -> None:
+        if self._cancel:
+            raise SessionCancelled(f"{self.name} cancelled")
 
     # -- consumer API -----------------------------------------------------
 
@@ -184,6 +208,21 @@ class QuerySession:
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def cancel(self) -> bool:
+        """Request cancellation. Cooperative: a QUEUED session is failed
+        immediately (workers skip it); a running one aborts at its next
+        observer callback (phase change, leaf delta, oracle wait).
+        Returns False if the session had already finished."""
+        with self._cond:
+            if self._state in _TERMINAL:
+                return False
+            self._cancel = True
+            queued = self._state is SessionState.QUEUED
+        if queued:
+            self._fail(SessionCancelled(f"{self.name} cancelled while "
+                                        "queued"))
+        return True
 
     def result(self, timeout: Optional[float] = None) -> FilterResult:
         if not self._done.wait(timeout):
@@ -222,7 +261,7 @@ class QuerySession:
                (self._finished_at or time.perf_counter())
                - self._started_at)
         return {
-            "id": self.id, "name": self.name,
+            "id": self.id, "name": self.name, "tenant": self.tenant,
             "state": self.state.value,
             "states": history,
             "accepted": accepted, "rejected": rejected,
@@ -272,15 +311,18 @@ class PredicateServer:
                accuracy_target: Optional[float] = None,
                ground_truth: Optional[np.ndarray] = None,
                seed: int = 0, name: Optional[str] = None,
+               tenant: Optional[str] = None,
                block: bool = False,
                timeout: Optional[float] = None) -> QuerySession:
         """Admit one query. Non-blocking by default: raises
         ``ServerSaturated`` when the admission queue is full (callers
-        shed or retry); ``block=True`` waits up to ``timeout``."""
+        shed or retry); ``block=True`` waits up to ``timeout``.
+        ``tenant`` tags the session with its admission identity (the
+        gateway's per-tenant accounting reads it back from stats)."""
         request = QueryRequest(predicate=predicate,
                                accuracy_target=accuracy_target,
                                ground_truth=ground_truth, seed=seed,
-                               name=name)
+                               name=name, tenant=tenant)
         session = QuerySession(request, self.counters)
         # closed-check and enqueue are one atomic step (shutdown takes
         # the same lock), so a session can never slip in behind the
@@ -324,6 +366,9 @@ class PredicateServer:
                 return
             session: QuerySession = item
             self.counters.gauge_delta("queue_depth", -1)
+            if session.done():      # cancelled while queued: skip
+                self.counters.inc("sessions_cancelled")
+                continue
             self.counters.gauge_delta("active_sessions", 1)
             session._mark_started()
             view = self.engine.session_view(
@@ -343,7 +388,9 @@ class PredicateServer:
                                       session._oracle_wait_seconds)
             except BaseException as exc:
                 session._fail(exc)
-                self.counters.inc("sessions_failed")
+                self.counters.inc("sessions_cancelled"
+                                  if isinstance(exc, SessionCancelled)
+                                  else "sessions_failed")
             finally:
                 self.counters.gauge_delta("active_sessions", -1)
 
@@ -352,6 +399,20 @@ class PredicateServer:
     def sessions(self) -> List[QuerySession]:
         with self._lock:
             return list(self._sessions)
+
+    def get_session(self, session_id: str) -> Optional[QuerySession]:
+        """Look up a (live or recently finished) session by id — the
+        handle a network front end round-trips to its clients."""
+        with self._lock:
+            for session in self._sessions:
+                if session.id == session_id:
+                    return session
+        return None
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
 
     def metrics_snapshot(self) -> Dict:
         """JSON-serializable view of the server's counters plus oracle

@@ -26,7 +26,7 @@ def _blocks(path: pathlib.Path):
 def test_doc_files_exist():
     names = {p.name for p in DOC_FILES}
     assert {"README.md", "index.md", "architecture.md", "offline.md",
-            "engine.md", "serving.md", "training.md",
+            "engine.md", "serving.md", "gateway.md", "training.md",
             "kernels.md"} <= names
 
 

@@ -1,0 +1,511 @@
+"""Network gateway: wire-format codec, per-tenant admission, and the
+HTTP/SSE end-to-end parity gate against serial in-process filter()."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import SimulatedOracle
+from repro.core.oracle import CachedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import (InMemoryStore, ScaleDocEngine, SemanticPredicate,
+                          WireFormatError, from_wire)
+from repro.gateway import (GatewayClient, GatewayError, PredicateGateway,
+                           RateLimited, RemoteQueryFailed, Tenant,
+                           TenantTable, TokenBucket)
+from repro.serve import PredicateServer
+
+N_DOCS, DIM = 800, 32
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(0, n_docs=N_DOCS, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    pcfg = ProxyConfig(embed_dim=DIM, hidden_dim=64, latent_dim=32,
+                       proj_dim=16, phase1_steps=30, phase2_steps=30)
+    return pcfg, CascadeConfig(accuracy_target=0.9)
+
+
+def _workload(corpus):
+    """4 mixed compound/leaf predicates over 4 named CachedOracles —
+    fresh objects per call so every run labels independently."""
+    qs = [make_query(corpus, 100 + i, selectivity=0.3) for i in range(4)]
+    cached = [CachedOracle(SimulatedOracle(q.truth)) for q in qs]
+    p = [SemanticPredicate(qs[i].embed, cached[i], name=f"p{i}")
+         for i in range(4)]
+    preds = [p[0], p[1] & ~p[2], p[3] | p[1], p[2]]
+    oracles = {f"o{i}": cached[i] for i in range(4)}
+    return oracles, preds
+
+
+def _engine(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    return ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+
+
+# -- wire format -------------------------------------------------------------
+
+
+def test_wire_roundtrip_leaf_bitwise_parity(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    pred = SemanticPredicate(q.embed, cached, name="leaf")
+    oracles = {"the-oracle": cached}
+
+    wire = pred.to_wire(oracles)
+    # pure JSON all the way down
+    rebuilt = from_wire(json.loads(json.dumps(wire)), oracles=oracles)
+
+    # bit-identical embedding bytes -> identical cache key
+    assert rebuilt.key == pred.key
+    np.testing.assert_array_equal(rebuilt.e_q, pred.e_q)
+    assert rebuilt.oracle is cached
+
+    base = _engine(corpus, cfgs).filter(pred, seed=3).mask
+    again = _engine(corpus, cfgs).filter(rebuilt, seed=3).mask
+    np.testing.assert_array_equal(base, again)
+
+
+def test_wire_roundtrip_compound_bitwise_parity(corpus, cfgs):
+    oracles, preds = _workload(corpus)
+    pred = preds[1] | ~preds[3]          # and/or/not all exercised
+    rebuilt = from_wire(json.loads(json.dumps(pred.to_wire(oracles))),
+                        oracles=oracles)
+    assert [l.key for l in rebuilt.leaves()] == \
+        [l.key for l in pred.leaves()]
+    base = _engine(corpus, cfgs).filter(pred, seed=0).mask
+    again = _engine(corpus, cfgs).filter(rebuilt, seed=0).mask
+    np.testing.assert_array_equal(base, again)
+
+
+def test_wire_prompt_leaf_uses_server_embedder(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    node = {"op": "leaf", "name": "prompted", "oracle": "o",
+            "prompt": "docs about topic 7"}
+    with pytest.raises(WireFormatError, match="embedder"):
+        from_wire(node, oracles=oracles)
+    rebuilt = from_wire(node, oracles=oracles,
+                        embedder=lambda prompt: q.embed)
+    np.testing.assert_array_equal(rebuilt.e_q, q.embed)
+    assert rebuilt.oracle is cached
+
+
+def test_wire_unresolvable_oracle_raises():
+    pred = SemanticPredicate(np.ones(4, np.float32), SimulatedOracle(
+        np.ones(4, bool)))
+    with pytest.raises(WireFormatError, match="registry"):
+        pred.to_wire({})                 # oracle not registered
+
+
+@pytest.mark.parametrize("node, match", [
+    ({"op": "xor", "children": []}, "unknown op"),
+    ({"op": "leaf", "oracle": "o"}, "prompt or an embed"),
+    ({"op": "leaf", "embed": {"b64": "AAAA", "shape": [1]}},
+     "oracle name"),
+    ({"op": "leaf", "oracle": "nope",
+      "embed": {"b64": "AAAA", "shape": [1]}}, "unknown oracle"),
+    ({"op": "and", "children": [{"op": "leaf"}]}, ">= 2 children"),
+    ({"op": "not"}, "missing child"),
+    ({"op": "leaf", "oracle": "o",
+      "embed": {"b64": "!!notb64!!", "shape": [1]}}, "bad embed.b64"),
+    ({"op": "leaf", "oracle": "o",
+      "embed": {"b64": "AAAAAAAAAAA=", "shape": [1]}},
+     "decode to shape"),
+    ({"op": "leaf", "oracle": "o",
+      "embed": {"dtype": "float64", "b64": "AAAA", "shape": [1]}},
+     "dtype"),
+    ("not a node", "must be an object"),
+])
+def test_wire_rejects_malformed_nodes(node, match):
+    oracles = {"o": SimulatedOracle(np.ones(4, bool))}
+    with pytest.raises(WireFormatError, match=match):
+        from_wire(node, oracles=oracles)
+
+
+def test_wire_rejects_depth_and_node_bombs():
+    oracles = {"o": SimulatedOracle(np.ones(4, bool))}
+    leaf = {"op": "leaf", "oracle": "o",
+            "embed": {"b64": "AAAAAA==", "shape": [1]}}
+    bomb = leaf
+    for _ in range(64):                  # deeply nested ~~~~p
+        bomb = {"op": "not", "child": bomb}
+    with pytest.raises(WireFormatError, match="deeper"):
+        from_wire(bomb, oracles=oracles)
+    wide = {"op": "and", "children": [dict(leaf) for _ in range(600)]}
+    with pytest.raises(WireFormatError, match="nodes"):
+        from_wire(wide, oracles=oracles)
+
+
+# -- admission units ---------------------------------------------------------
+
+
+def test_token_bucket_refill_and_retry_hint():
+    now = [0.0]
+    bucket = TokenBucket(rate=2.0, burst=2.0, clock=lambda: now[0])
+    assert bucket.try_acquire() == (True, 0.0)
+    assert bucket.try_acquire() == (True, 0.0)
+    ok, retry_after = bucket.try_acquire()
+    assert not ok and retry_after == pytest.approx(0.5)
+    now[0] += 0.5                        # one token refilled
+    assert bucket.try_acquire()[0]
+    now[0] += 100.0                      # refill caps at burst
+    assert bucket.tokens == pytest.approx(2.0)
+
+
+def test_tenant_table_auth_and_config(tmp_path):
+    cfg = tmp_path / "tenants.json"
+    cfg.write_text(json.dumps({"tenants": [
+        {"name": "acme", "api_key": "k-acme", "rate": 5, "burst": 5,
+         "max_in_flight": 2},
+        {"name": "globex", "api_key": "k-globex"},
+    ]}))
+    table = TenantTable.from_file(cfg)
+    assert not table.open
+    assert table.authenticate("k-acme").tenant.name == "acme"
+    assert table.authenticate("wrong") is None
+    assert table.authenticate(None) is None
+    assert {s["name"] for s in table.snapshot()} == {"acme", "globex"}
+
+    with pytest.raises(ValueError, match="duplicate"):
+        TenantTable([Tenant("a", "k"), Tenant("b", "k")])
+    with pytest.raises(ValueError, match="rate"):
+        Tenant("a", "k", rate=0.0)
+    # empty table = open admission: any key (or none) maps to public
+    assert TenantTable().authenticate(None).tenant.name == "public"
+
+
+def test_tenant_state_concurrency_check_spends_no_token():
+    now = [0.0]
+
+    class _Done:
+        def __init__(self, done):
+            self._done = done
+
+        def done(self):
+            return self._done
+
+    state = TenantTable(
+        [Tenant("t", "k", rate=1.0, burst=1.0, max_in_flight=1)],
+        clock=lambda: now[0]).get("t")
+    live = _Done(False)
+    state.track(live)
+    admitted, _, reason = state.admit()
+    assert not admitted and reason == "max_in_flight"
+    # pinned at max_in_flight did NOT drain the bucket
+    assert state.bucket.tokens == pytest.approx(1.0)
+    live._done = True                    # lazy pruning frees the slot
+    assert state.admit() == (True, 0.0, "")
+
+
+# -- e2e parity gate ---------------------------------------------------------
+
+
+def test_http_clients_match_serial_bitwise(corpus, cfgs):
+    """Acceptance gate: accept/reject sets over HTTP — and reassembled
+    from the SSE delta stream — are bitwise-identical to serial
+    in-process filter() with shared label caches, under 4 concurrent
+    remote clients."""
+    # serial reference: fresh engine per query, sharing CachedOracles
+    oracles, preds = _workload(corpus)
+    serial_masks = [_engine(corpus, cfgs).filter(p, seed=i).mask
+                    for i, p in enumerate(preds)]
+
+    oracles, preds = _workload(corpus)   # fresh oracles for the server
+    wires = [p.to_wire(oracles) for p in preds]
+    out, errors = {}, []
+
+    with PredicateServer(_engine(corpus, cfgs), workers=4,
+                         max_delay=0.003) as server:
+        with PredicateGateway(server, oracles) as gw:
+
+            def remote(i):
+                try:
+                    client = GatewayClient(gw.url)   # one client each
+                    sub = client.submit(wires[i], seed=i)
+                    sse = list(client.iter_deltas(sub["id"],
+                                                  timeout=300))
+                    res = client.wait(sub["id"], timeout=300)
+                    out[i] = (res, sse)
+                except BaseException as exc:  # pragma: no cover
+                    errors.append((i, exc))
+
+            threads = [threading.Thread(target=remote, args=(i,))
+                       for i in range(len(preds))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+
+    assert not errors, errors
+    for i, mask in enumerate(serial_masks):
+        res, sse = out[i]
+        accepted = np.nonzero(mask)[0]
+        rejected = np.nonzero(~mask)[0]
+        np.testing.assert_array_equal(
+            np.sort(res["accepted"]), accepted,
+            err_msg=f"query {i}: HTTP result diverged from serial")
+        np.testing.assert_array_equal(np.sort(res["rejected"]), rejected)
+        # the SSE stream reassembles to the same decision sets
+        assert sse[-1]["final"]
+        sse_acc = np.sort([d for e in sse for d in e["accepted"]])
+        sse_rej = np.sort([d for e in sse for d in e["rejected"]])
+        np.testing.assert_array_equal(
+            sse_acc, accepted,
+            err_msg=f"query {i}: SSE stream diverged from serial")
+        np.testing.assert_array_equal(sse_rej, rejected)
+
+
+# -- admission over HTTP -----------------------------------------------------
+
+
+class _SlowOracle:
+    def __init__(self, truth, delay=0.05):
+        self._truth = np.asarray(truth, bool)
+        self.delay = delay
+        self.calls = 0
+
+    def label(self, indices):
+        time.sleep(self.delay)
+        indices = np.asarray(indices, np.int64)
+        self.calls += len(indices)
+        return self._truth[indices]
+
+
+def test_rate_limited_tenant_does_not_slow_others(corpus, cfgs):
+    """Acceptance gate: a tenant exceeding its token bucket gets 429 +
+    Retry-After; another tenant's concurrently submitted queries are
+    admitted and complete untouched."""
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    wire = SemanticPredicate(q.embed, cached, name="p").to_wire(oracles)
+    tenants = [Tenant("throttled", "k-thr", rate=0.001, burst=1.0),
+               Tenant("steady", "k-std", rate=100.0, burst=100.0)]
+
+    with PredicateServer(_engine(corpus, cfgs), workers=2) as server:
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            thr = GatewayClient(gw.url, api_key="k-thr")
+            std = GatewayClient(gw.url, api_key="k-std")
+
+            first = thr.submit(wire, seed=0)       # burst token spent
+            with pytest.raises(RateLimited) as exc_info:
+                thr.submit(wire, seed=1)
+            assert exc_info.value.reason == "rate"
+            assert exc_info.value.retry_after >= 1.0
+
+            # the throttled tenant's 429 cost the steady tenant nothing
+            subs = [std.submit(wire, seed=i) for i in range(3)]
+            for sub in subs + [first]:
+                res = std.wait(sub["id"], timeout=300) \
+                    if sub in subs else thr.wait(sub["id"], timeout=300)
+                assert res["state"] == "done"
+
+            snap = std.metrics()["counters"]
+            assert snap["tenant.throttled.rejected_rate"] == 1
+            assert snap["tenant.steady.submitted"] == 3
+            assert "tenant.steady.rejected_rate" not in snap
+
+
+def test_max_in_flight_quota_enforced(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    slow = _SlowOracle(q.truth, delay=0.1)
+    oracles = {"slow": slow}
+    wire = SemanticPredicate(q.embed, slow, name="s").to_wire(oracles)
+    tenants = [Tenant("narrow", "k-n", rate=100.0, burst=100.0,
+                      max_in_flight=1)]
+
+    with PredicateServer(_engine(corpus, cfgs), workers=2) as server:
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            client = GatewayClient(gw.url, api_key="k-n")
+            first = client.submit(wire, seed=0)
+            with pytest.raises(RateLimited) as exc_info:
+                client.submit(wire, seed=1)
+            assert exc_info.value.reason == "max_in_flight"
+            client.wait(first["id"], timeout=300)
+            # finished session frees the slot (lazily, at next admit)
+            second = client.submit(wire, seed=1)
+            client.wait(second["id"], timeout=300)
+
+
+def test_server_saturation_maps_to_429_not_hang(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    slow = _SlowOracle(q.truth, delay=0.1)
+    oracles = {"slow": slow}
+    wire = SemanticPredicate(q.embed, slow, name="s").to_wire(oracles)
+
+    with PredicateServer(_engine(corpus, cfgs), workers=1,
+                         queue_depth=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            admitted = []
+            with pytest.raises(RateLimited) as exc_info:
+                for i in range(8):       # 1 running + 1 queued max
+                    admitted.append(client.submit(wire, seed=i))
+            assert exc_info.value.reason == "saturated"
+            assert exc_info.value.retry_after > 0
+            assert 1 <= len(admitted) < 8
+            for sub in admitted:
+                client.wait(sub["id"], timeout=300)
+
+
+def test_auth_and_tenant_scoping(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    wire = SemanticPredicate(q.embed, cached).to_wire(oracles)
+    tenants = [Tenant("a", "k-a"), Tenant("b", "k-b")]
+
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            anon = GatewayClient(gw.url)
+            with pytest.raises(GatewayError) as exc_info:
+                anon.submit(wire)
+            assert exc_info.value.status == 401
+            with pytest.raises(GatewayError) as exc_info:
+                GatewayClient(gw.url, api_key="bogus").submit(wire)
+            assert exc_info.value.status == 401
+
+            a = GatewayClient(gw.url, api_key="k-a")
+            b = GatewayClient(gw.url, api_key="k-b")
+            sub = a.submit(wire, seed=0)
+            a.wait(sub["id"], timeout=300)
+            # another tenant cannot even see the session
+            with pytest.raises(GatewayError) as exc_info:
+                b.status(sub["id"])
+            assert exc_info.value.status == 404
+            assert a.status(sub["id"])["tenant"] == "a"
+            # Bearer auth is equivalent to X-API-Key
+            import http.client
+            conn = http.client.HTTPConnection(gw.host, gw.port, timeout=10)
+            conn.request("GET", f"/v1/queries/{sub['id']}",
+                         headers={"Authorization": "Bearer k-a"})
+            assert conn.getresponse().status == 200
+            conn.close()
+
+
+# -- lifecycle over the wire -------------------------------------------------
+
+
+def test_cancel_over_http(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    slow = _SlowOracle(q.truth, delay=0.2)
+    oracles = {"slow": slow}
+    wire = SemanticPredicate(q.embed, slow, name="s").to_wire(oracles)
+
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            running = client.submit(wire, seed=0)
+            queued = client.submit(wire, seed=1)   # behind the first
+            assert client.cancel(queued["id"])["cancelled"]
+            with pytest.raises(RemoteQueryFailed) as exc_info:
+                client.wait(queued["id"], timeout=60)
+            assert exc_info.value.state == "cancelled"
+            assert client.status(queued["id"])["state"] == "cancelled"
+            # cancelling a finished session is a no-op
+            client.wait(running["id"], timeout=300)
+            assert not client.cancel(running["id"])["cancelled"]
+
+
+def test_failed_session_surfaces_over_http(corpus, cfgs):
+    class BadOracle:
+        calls = 0
+
+        def label(self, idx):
+            raise ValueError("labeler exploded")
+
+    q = make_query(corpus, 7, selectivity=0.3)
+    oracles = {"bad": BadOracle()}
+    wire = SemanticPredicate(q.embed, oracles["bad"]).to_wire(oracles)
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.submit(wire, seed=0)
+            with pytest.raises(RemoteQueryFailed, match="exploded"):
+                client.wait(sub["id"], timeout=300)
+            # the SSE stream reports the failure as an error event
+            with pytest.raises(RemoteQueryFailed, match="exploded"):
+                list(client.iter_deltas(sub["id"], timeout=60))
+
+
+def test_malformed_submission_is_400(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    oracles = {"o": SimulatedOracle(q.truth)}
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            for bad in ({"op": "xor"}, {"op": "leaf", "oracle": "nope"}):
+                with pytest.raises(GatewayError) as exc_info:
+                    client.submit(bad)
+                assert exc_info.value.status == 400
+            snap = client.metrics()["counters"]
+            assert snap["tenant.public.rejected_malformed"] == 2
+
+
+# -- ops surface -------------------------------------------------------------
+
+
+def test_ops_surface(corpus, cfgs):
+    oracles, preds = _workload(corpus)
+    wires = [p.to_wire(oracles) for p in preds]
+    with PredicateServer(_engine(corpus, cfgs), workers=2) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            assert client.health() == {"ok": True}
+            assert client.ready() == {"ready": True, "docs": N_DOCS}
+
+            subs = [client.submit(w, seed=i)
+                    for i, w in enumerate(wires)]
+            for sub in subs:
+                client.wait(sub["id"], timeout=300)
+
+            snap = client.metrics()
+            # acceptance gate: queue depth, micro-batch occupancy,
+            # per-tenant counters, latency percentiles — one document
+            assert snap["queue"] == {"depth": 0, "capacity": 32}
+            assert "oracle_batch_occupancy" in snap["observations"]
+            assert snap["counters"]["tenant.public.submitted"] == 4
+            lat = snap["observations"]["session_latency_seconds"]
+            assert lat["count"] == 4
+            assert 0 < lat["p50"] <= lat["p95"] <= lat["p99"] <= \
+                lat["max"]
+            assert snap["counters"]["gateway_http_2xx"] >= 4
+            assert {t["name"] for t in snap["tenants"]} == {"public"}
+
+            admin = client.admin_sessions()
+            assert admin["count"] == 4
+            assert all(s["state"] == "done"
+                       for s in admin["sessions"])
+            assert json.loads(json.dumps(snap))  # wire-serializable
+
+    # after server shutdown the gateway reports 503 on submit...
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        pass
+    with PredicateGateway(server, oracles) as gw:
+        client = GatewayClient(gw.url)
+        assert client.ready()["ready"] is False
+        from repro.gateway import GatewayUnavailable
+        with pytest.raises(GatewayUnavailable):
+            client.submit(wires[0])
+
+
+def test_unknown_route_is_404(corpus, cfgs):
+    oracles, _ = _workload(corpus)
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            with pytest.raises(GatewayError) as exc_info:
+                client._request("GET", "/v1/nonsense")
+            assert exc_info.value.status == 404
+            with pytest.raises(GatewayError) as exc_info:
+                client.status("no-such-session")
+            assert exc_info.value.status == 404

@@ -1,5 +1,7 @@
 """Substrate tests: optimizer, compression, checkpointing, fault
-tolerance, stragglers, elastic re-mesh, data determinism, trainer loop."""
+tolerance, stragglers, elastic re-mesh, data determinism, metrics
+sinks, trainer loop."""
+import json
 import tempfile
 
 import jax
@@ -15,6 +17,7 @@ from repro.launch.mesh import make_test_mesh
 from repro.optimizer import adamw, compression
 from repro.runtime.fault import (FailureDetector, StragglerMonitor,
                                  WorkerFailure, plan_elastic_remesh)
+from repro.runtime.metrics import RESERVOIR_SIZE, CounterSet, Metrics
 from repro.runtime.train_loop import Trainer
 
 TINY = InputShape("tiny", seq_len=32, global_batch=4, kind="train")
@@ -163,6 +166,67 @@ def test_loader_multihost_slicing():
     assert not np.array_equal(shards[0], shards[1])
 
 
+# -- metrics sinks --------------------------------------------------------------
+
+def test_observation_percentiles_exact_below_reservoir():
+    """While count <= RESERVOIR_SIZE the reservoir holds every value, so
+    p50/p95/p99 are exact (nearest-rank) order statistics."""
+    counters = CounterSet()
+    for v in range(1, 1001):             # 1..1000, shuffled
+        counters.observe("lat", ((v * 7919) % 1000) + 1)
+    summary = counters.snapshot()["observations"]["lat"]
+    assert summary["count"] == 1000
+    assert summary["p50"] == 500
+    assert summary["p95"] == 950
+    assert summary["p99"] == 990
+    assert summary["min"] == 1 and summary["max"] == 1000
+
+
+def test_observation_percentiles_beyond_reservoir_stay_sane():
+    counters = CounterSet()
+    for v in range(5 * RESERVOIR_SIZE):  # uniform over [0, 1)
+        counters.observe("lat", (v % 1000) / 1000.0)
+    summary = counters.snapshot()["observations"]["lat"]
+    assert summary["count"] == 5 * RESERVOIR_SIZE
+    # sampled estimates: ordered and within a loose band of the truth
+    assert 0.35 < summary["p50"] < 0.65
+    assert summary["p50"] <= summary["p95"] <= summary["p99"] <= 1.0
+    assert summary["p95"] > 0.85
+
+
+def test_observation_single_value_percentiles():
+    counters = CounterSet()
+    counters.observe("x", 2.5)
+    s = counters.snapshot()["observations"]["x"]
+    assert s["p50"] == s["p95"] == s["p99"] == 2.5
+
+
+def test_metrics_close_flushes_and_is_idempotent(tmp_path):
+    path = tmp_path / "m" / "train.jsonl"
+    metrics = Metrics(str(path))
+    metrics.log(0, loss=1.5)
+    assert not metrics.closed
+    metrics.close()
+    metrics.close()                      # idempotent
+    assert metrics.closed
+    records = [json.loads(line) for line in
+               path.read_text().splitlines()]
+    assert records == [pytest.approx({"step": 0, "loss": 1.5,
+                                      "time": records[0]["time"]})]
+    # logging after close keeps feeding the ring, not the file
+    metrics.log(1, loss=1.0)
+    assert metrics.last()["loss"] == 1.0
+    assert len(path.read_text().splitlines()) == 1
+
+
+def test_metrics_context_manager(tmp_path):
+    path = tmp_path / "train.jsonl"
+    with Metrics(str(path)) as metrics:
+        metrics.log(0, loss=2.0)
+    assert metrics.closed
+    assert json.loads(path.read_text())["loss"] == 2.0
+
+
 # -- trainer end-to-end ----------------------------------------------------------
 
 def test_trainer_checkpoint_restart_and_learning():
@@ -180,15 +244,25 @@ def test_trainer_checkpoint_restart_and_learning():
                 fails.discard(step)
                 raise WorkerFailure(f"injected at {step}")
 
-        tr = Trainer(cfg, tc, make_test_mesh(1, 1), fail_injector=injector)
-        rep = tr.run(30, resume=False)
+        metrics_path = f"{d}/metrics.jsonl"
+        with Trainer(cfg, tc, make_test_mesh(1, 1),
+                     metrics_path=metrics_path,
+                     fail_injector=injector) as tr:
+            rep = tr.run(30, resume=False)
         assert rep.restarts == 1
         assert np.isfinite(rep.final_loss)
         assert ckpt.latest_step(d) == 30
+        # the context manager released the JSONL sink, records intact
+        assert tr.metrics.closed
+        records = [json.loads(line) for line in
+                   open(metrics_path).read().splitlines()]
+        assert sum(1 for r in records if r.get("restart")) == 1
         # resume continues from the checkpoint without error
         tr2 = Trainer(cfg, tc, make_test_mesh(1, 1))
         rep2 = tr2.run(35, resume=True)
         assert rep2.steps_run == 5
+        tr2.close()
+        assert tr2.metrics.closed
 
 
 def test_trainer_grad_compression_trains():
