@@ -43,6 +43,7 @@ class Tenant:
     rate: float = 20.0           # sustained submits/second (token refill)
     burst: float = 20.0          # bucket capacity (instantaneous spike)
     max_in_flight: int = 8       # live sessions at once
+    admin: bool = False          # may list every tenant's sessions
 
     def __post_init__(self):
         if not self.name:
@@ -98,29 +99,48 @@ class TenantState:
         self.tenant = tenant
         self.bucket = TokenBucket(tenant.rate, tenant.burst, clock)
         self._live: List = []        # QuerySession handles
+        self._reserved = 0           # slots held between admit and track
         self._lock = threading.Lock()
 
     def in_flight(self) -> int:
-        """Live (queued or running) sessions, pruning finished ones —
-        a finished session frees its concurrency slot lazily, on the
-        next admission check, so no completion callback is needed."""
+        """Live (queued or running) sessions plus admitted-but-not-yet-
+        tracked reservations, pruning finished sessions — a finished
+        session frees its concurrency slot lazily, on the next admission
+        check, so no completion callback is needed."""
         with self._lock:
             self._live = [s for s in self._live if not s.done()]
-            return len(self._live)
+            return len(self._live) + self._reserved
 
     def track(self, session) -> None:
+        """Convert the slot ``admit()`` reserved into a live session."""
         with self._lock:
+            if self._reserved:
+                self._reserved -= 1
             self._live.append(session)
 
+    def release(self) -> None:
+        """Give back a slot reserved by ``admit()`` when the submission
+        fails before a session exists (malformed body, saturation)."""
+        with self._lock:
+            if self._reserved:
+                self._reserved -= 1
+
     def admit(self) -> Tuple[bool, float, str]:
-        """(admitted, retry_after_seconds, reason). Order matters: the
-        rate check spends a token only if the concurrency check could
-        also pass, so a tenant pinned at max_in_flight is not also
-        drained of tokens."""
-        if self.in_flight() >= self.tenant.max_in_flight:
-            return False, 1.0, "max_in_flight"
+        """(admitted, retry_after_seconds, reason). The concurrency slot
+        is *reserved* under the lock before the bucket is consulted, so
+        N racing submits cannot all pass the max_in_flight check — the
+        caller must follow up with ``track()`` (success) or ``release()``
+        (failure). Order matters: the rate check spends a token only if
+        the concurrency check passed, so a tenant pinned at
+        max_in_flight is not also drained of tokens."""
+        with self._lock:
+            self._live = [s for s in self._live if not s.done()]
+            if len(self._live) + self._reserved >= self.tenant.max_in_flight:
+                return False, 1.0, "max_in_flight"
+            self._reserved += 1
         ok, retry_after = self.bucket.try_acquire()
         if not ok:
+            self.release()
             return False, retry_after, "rate"
         return True, 0.0, ""
 

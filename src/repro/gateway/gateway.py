@@ -19,13 +19,19 @@ service with per-tenant admission and a live ops surface.
                                      micro-batch occupancy, per-tenant
                                      counters, latency p50/p95/p99
     GET    /v1/admin/sessions        live session registry with states
+                                     (scoped to the caller's tenant
+                                     unless it has ``admin=True``)
 
-Admission is layered: API key -> tenant (401), token-bucket rate and
-max-in-flight quota (429 + ``Retry-After``, enforced *before* the
-server's admission queue so a throttled tenant costs the pool nothing),
-then ``PredicateServer.submit`` (``ServerSaturated`` -> 429,
+Admission is layered: API key -> tenant (401, on the ops endpoints too
+when a tenant table is configured), oversized body (413, connection
+closed unread), token-bucket rate and max-in-flight quota (429 +
+``Retry-After``, the concurrency slot reserved atomically so racing
+submits cannot overshoot, enforced *before* the server's admission
+queue so a throttled tenant costs the pool nothing), then
+``PredicateServer.submit`` (``ServerSaturated`` -> 429,
 ``ServerClosed`` -> 503, both with ``Retry-After`` — backpressure is a
-status code, never a hung request).
+status code, never a hung request). Early rejections drain the unread
+request body so HTTP/1.1 keep-alive connections stay parseable.
 
 Decisions over the wire are exactly in-process decisions: the AST
 rebuilds each leaf bit-exactly (``repro.engine.predicate.from_wire``)
@@ -54,6 +60,12 @@ from repro.serve.server import (PredicateServer, QuerySession,
 MAX_BODY_BYTES = 8 << 20            # request bodies larger than this: 413
 SATURATED_RETRY_AFTER = 1.0         # hint when the admission queue is full
 CLOSED_RETRY_AFTER = 5.0
+
+
+class BodyTooLarge(Exception):
+    """Request body exceeds ``MAX_BODY_BYTES`` — maps to 413. The body
+    is never read, so the keep-alive connection is closed after the
+    response instead of being drained."""
 
 
 def _retry_header(seconds: float) -> Dict[str, str]:
@@ -231,6 +243,7 @@ class _Handler(BaseHTTPRequestHandler):
     def _route(self, method: str) -> None:
         t0 = time.perf_counter()
         self._status = 500
+        self._body_read = False
         try:
             split = urllib.parse.urlsplit(self.path)
             self._query = dict(urllib.parse.parse_qsl(split.query))
@@ -244,11 +257,42 @@ class _Handler(BaseHTTPRequestHandler):
             except OSError:
                 pass
         finally:
+            self._drain_unread_body()
             c = self.gw.counters
             c.inc("gateway_requests")
             c.inc(f"gateway_http_{self._status // 100}xx")
             c.observe("gateway_request_seconds",
                       time.perf_counter() - t0)
+
+    def _drain_unread_body(self) -> None:
+        """Responses on early-reject paths (401/413/429/...) are sent
+        before the request body is read; on an HTTP/1.1 keep-alive
+        connection the unread bytes would otherwise be parsed as the
+        *next* request. Consume them here — or, when the body is
+        oversized or unreadable, close the connection instead."""
+        if self._body_read:
+            return
+        self._body_read = True
+        try:
+            length = int(self.headers.get("Content-Length", 0) or 0)
+        except ValueError:
+            self.close_connection = True
+            return
+        if length <= 0:
+            return
+        if length > MAX_BODY_BYTES:
+            self.close_connection = True
+            return
+        try:
+            remaining = length
+            while remaining > 0:
+                chunk = self.rfile.read(min(remaining, 1 << 16))
+                if not chunk:
+                    self.close_connection = True
+                    return
+                remaining -= len(chunk)
+        except OSError:
+            self.close_connection = True
 
     def _dispatch(self, method: str, parts) -> None:
         if method == "GET" and parts == ["healthz"]:
@@ -257,9 +301,22 @@ class _Handler(BaseHTTPRequestHandler):
             ready = self.gw.readiness()
             return self._json(200 if ready["ready"] else 503, ready)
         if method == "GET" and parts == ["v1", "metrics"]:
+            if self._tenant() is None:   # closed table: 401, not a leak
+                return self._json(401, {"error": "unknown or missing "
+                                                 "API key"})
             return self._json(200, self.gw.metrics_snapshot())
         if method == "GET" and parts == ["v1", "admin", "sessions"]:
-            stats = [s.stats() for s in self.gw.server.sessions()]
+            tenant = self._tenant()
+            if tenant is None:
+                return self._json(401, {"error": "unknown or missing "
+                                                 "API key"})
+            sessions = self.gw.server.sessions()
+            if not self.gw.tenants.open and not tenant.tenant.admin:
+                # non-admin tenants see only their own sessions — ids
+                # are unguessable and must not leak across tenants
+                sessions = [s for s in sessions
+                            if s.tenant == tenant.tenant.name]
+            stats = [s.stats() for s in sessions]
             return self._json(200, {"count": len(stats),
                                     "sessions": stats})
         if parts[:2] == ["v1", "queries"]:
@@ -308,8 +365,17 @@ class _Handler(BaseHTTPRequestHandler):
                       "reason": reason, "retry_after": retry_after},
                 headers=_retry_header(retry_after))
         try:
-            body = self._body()
-            session = self.gw.submit(tenant, body)
+            try:
+                body = self._body()
+                session = self.gw.submit(tenant, body)
+            except BaseException:
+                tenant.release()    # return the slot admit() reserved
+                raise
+        except BodyTooLarge as exc:
+            fold(counters, name, "rejected_oversized")
+            # the oversized body is never read: close, don't drain
+            return self._json(413, {"error": str(exc)},
+                              headers={"Connection": "close"})
         except WireFormatError as exc:
             fold(counters, name, "rejected_malformed")
             return self._json(400, {"error": str(exc)})
@@ -336,8 +402,12 @@ class _Handler(BaseHTTPRequestHandler):
                          "state": session.state.value})
 
     def _result(self, session: QuerySession) -> None:
-        timeout = min(float(self._query.get("timeout", 0.0)),
-                      self.gw.stream_timeout)
+        try:
+            timeout = min(float(self._query.get("timeout", 0.0)),
+                          self.gw.stream_timeout)
+        except ValueError:
+            return self._json(400, {"error": f"bad timeout parameter "
+                                             f"{self._query['timeout']!r}"})
         try:
             session.result(timeout=timeout)
         except TimeoutError:
@@ -404,9 +474,10 @@ class _Handler(BaseHTTPRequestHandler):
     def _body(self) -> Dict:
         length = int(self.headers.get("Content-Length", 0))
         if length > MAX_BODY_BYTES:
-            raise ValueError(f"body of {length} bytes exceeds "
-                             f"{MAX_BODY_BYTES}")
+            raise BodyTooLarge(f"body of {length} bytes exceeds "
+                               f"{MAX_BODY_BYTES}")
         raw = self.rfile.read(length) if length else b"{}"
+        self._body_read = True
         try:
             body = json.loads(raw)
         except json.JSONDecodeError as exc:

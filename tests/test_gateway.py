@@ -1,5 +1,6 @@
 """Network gateway: wire-format codec, per-tenant admission, and the
 HTTP/SSE end-to-end parity gate against serial in-process filter()."""
+import http.client
 import json
 import threading
 import time
@@ -496,6 +497,179 @@ def test_ops_surface(corpus, cfgs):
         from repro.gateway import GatewayUnavailable
         with pytest.raises(GatewayUnavailable):
             client.submit(wires[0])
+
+
+# -- HTTP robustness ---------------------------------------------------------
+
+
+def _post(conn, body, key=None, path="/v1/queries"):
+    headers = {"Content-Type": "application/json"}
+    if key:
+        headers["X-API-Key"] = key
+    conn.request("POST", path, body=json.dumps(body).encode(),
+                 headers=headers)
+    resp = conn.getresponse()
+    return resp.status, json.loads(resp.read() or b"{}"), resp
+
+
+def test_keepalive_survives_early_reject_responses(corpus, cfgs):
+    """Regression: 401/429 responses are sent before the request body
+    is read; on an HTTP/1.1 keep-alive connection the unread bytes must
+    not be parsed as the next request (previously: '400 Bad request
+    syntax' for every standard keep-alive client)."""
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    wire = SemanticPredicate(q.embed, cached).to_wire(oracles)
+    tenants = [Tenant("throttled", "k-thr", rate=0.001, burst=1.0),
+               Tenant("steady", "k-std", rate=100.0, burst=100.0)]
+
+    with PredicateServer(_engine(corpus, cfgs), workers=2) as server:
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            conn = http.client.HTTPConnection(gw.host, gw.port,
+                                              timeout=30)
+            body = {"predicate": wire, "pad": "x" * 4096}
+            # 401 with a 4 KiB body the handler never read...
+            status, _, _ = _post(conn, body, key="bogus")
+            assert status == 401
+            # ...must not corrupt the next request on the same socket
+            status, first, _ = _post(conn, body, key="k-std")
+            assert status == 202
+            # same for a rate-limit 429 (rejected before the body read)
+            status, second, _ = _post(conn, body, key="k-thr")
+            assert status == 202          # burst token spent
+            status, _, _ = _post(conn, body, key="k-thr")
+            assert status == 429
+            status, third, _ = _post(conn, body, key="k-std")
+            assert status == 202
+            conn.close()
+            std = GatewayClient(gw.url, api_key="k-std")
+            thr = GatewayClient(gw.url, api_key="k-thr")
+            for client, sub in [(std, first), (thr, second),
+                                (std, third)]:
+                assert client.wait(sub["id"],
+                                   timeout=300)["state"] == "done"
+
+
+def test_oversized_body_is_413_and_closes_connection(corpus, cfgs,
+                                                     monkeypatch):
+    from repro.gateway import gateway as gateway_mod
+    monkeypatch.setattr(gateway_mod, "MAX_BODY_BYTES", 1024)
+    oracles, _ = _workload(corpus)
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            conn = http.client.HTTPConnection(gw.host, gw.port,
+                                              timeout=10)
+            conn.request("POST", "/v1/queries", body=b"x" * 4096,
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            assert resp.status == 413
+            # the body is never read, so the connection must close
+            assert resp.getheader("Connection") == "close"
+            assert "exceeds" in json.loads(resp.read())["error"]
+            conn.close()
+            snap = GatewayClient(gw.url).metrics()["counters"]
+            assert snap["tenant.public.rejected_oversized"] == 1
+
+
+def test_bad_timeout_parameter_is_400(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    wire = SemanticPredicate(q.embed, cached).to_wire(oracles)
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.submit(wire, seed=0)
+            with pytest.raises(GatewayError) as exc_info:
+                client._request(
+                    "GET", f"/v1/queries/{sub['id']}/result?timeout=abc")
+            assert exc_info.value.status == 400
+            client.wait(sub["id"], timeout=300)
+
+
+def test_concurrent_admits_cannot_exceed_max_in_flight():
+    """Regression: N racing submits from one tenant could all pass the
+    in_flight check before any track() — admit() now reserves the slot
+    atomically."""
+    class _Live:
+        def done(self):
+            return False
+
+    state = TenantTable([Tenant("t", "k", rate=1000.0, burst=1000.0,
+                                max_in_flight=2)]).get("t")
+    results = []
+    barrier = threading.Barrier(8)
+
+    def worker():
+        barrier.wait()
+        results.append(state.admit()[0])
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(results) == 2
+    # release() frees a reserved slot before any session exists
+    state.release()
+    assert state.admit() == (True, 0.0, "")
+    # track() converts its reservation instead of double-charging
+    state.track(_Live())
+    assert state.in_flight() == 2
+    assert state.admit()[2] == "max_in_flight"
+
+
+def test_failed_submit_releases_concurrency_slot(corpus, cfgs):
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    wire = SemanticPredicate(q.embed, cached).to_wire(oracles)
+    tenants = [Tenant("narrow", "k-n", rate=100.0, burst=100.0,
+                      max_in_flight=1)]
+    with PredicateServer(_engine(corpus, cfgs), workers=1) as server:
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            client = GatewayClient(gw.url, api_key="k-n")
+            with pytest.raises(GatewayError) as exc_info:
+                client.submit({"op": "xor"})
+            assert exc_info.value.status == 400
+            # the 400 released the reserved slot: a good submit fits
+            sub = client.submit(wire, seed=0)
+            client.wait(sub["id"], timeout=300)
+
+
+def test_ops_surface_requires_auth_with_tenant_table(corpus, cfgs):
+    """Regression: with a closed tenant table, /v1/metrics and
+    /v1/admin/sessions required no key and leaked every tenant's
+    session ids — now 401 unauthenticated, and the admin listing is
+    scoped to the caller unless its tenant record sets admin=True."""
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    wire = SemanticPredicate(q.embed, cached).to_wire(oracles)
+    tenants = [Tenant("a", "k-a"), Tenant("b", "k-b"),
+               Tenant("ops", "k-ops", admin=True)]
+    with PredicateServer(_engine(corpus, cfgs), workers=2) as server:
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            anon = GatewayClient(gw.url)
+            for call in (anon.metrics, anon.admin_sessions):
+                with pytest.raises(GatewayError) as exc_info:
+                    call()
+                assert exc_info.value.status == 401
+
+            a = GatewayClient(gw.url, api_key="k-a")
+            b = GatewayClient(gw.url, api_key="k-b")
+            ops = GatewayClient(gw.url, api_key="k-ops")
+            a.wait(a.submit(wire, seed=0)["id"], timeout=300)
+            b.wait(b.submit(wire, seed=1)["id"], timeout=300)
+            # non-admin tenants see only their own sessions
+            mine = a.admin_sessions()
+            assert mine["count"] == 1
+            assert {s["tenant"] for s in mine["sessions"]} == {"a"}
+            # an admin tenant sees the full registry
+            assert ops.admin_sessions()["count"] == 2
+            # any authenticated tenant can read metrics
+            assert a.metrics()["counters"]["tenant.a.submitted"] == 1
 
 
 def test_unknown_route_is_404(corpus, cfgs):
