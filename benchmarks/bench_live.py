@@ -1,0 +1,183 @@
+"""Live-collections benchmark: delta scoring vs full rescan.
+
+Without standing-predicate support, every ingest commit group forces a
+full re-``filter()`` per query — retrain, recalibrate, rescore the
+whole collection. ``LiveEngine.pump()`` instead scores only the delta
+rows against calibration-frozen proxies. This suite prices that gap at
+1/4/16 standing predicates over one growing ``MemmapStore``:
+
+  live/register_n{1,4,16}     registration (the calibration filter over
+                              the committed prefix), per predicate
+  live/delta_docs_s_n{1,4,16} pump() over one commit group — delta
+                              (row, predicate) decisions per second
+  live/rescan_speedup_n{...}  the same advance priced as n fresh full
+                              filter() calls vs the one delta pump
+  live/drift_retrain_latency  revalidate(): recalibrate + retrain over
+                              the full collection (the drift response)
+  live/parity                 gate row: pumped decisions bitwise equal
+                              the one-shot ``standing_filter`` reference
+
+The rescan-speedup gate asserts the delta path beats n full rescans at
+every n (the reason the subsystem exists); throughput numbers are
+tracked, not asserted. ``--smoke`` shrinks the workload for CI;
+``--json PATH`` writes rows + derived metrics (default BENCH_live.json).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import SimulatedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import (DriftConfig, InMemoryStore, LiveEngine,
+                          MemmapStore, ScaleDocEngine, SemanticPredicate,
+                          StoreWriter, standing_filter)
+
+FLEETS = (1, 4, 16)
+
+
+def _workload(smoke: bool):
+    if smoke:
+        n_docs, dim, calib = 1024, 32, 512
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=64, latent_dim=32,
+                           proj_dim=16, phase1_steps=30, phase2_steps=30)
+    else:
+        n_docs, dim, calib = 4096, 64, 2048
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=128, latent_dim=64,
+                           proj_dim=32, phase1_steps=60, phase2_steps=60)
+    corpus = make_corpus(0, n_docs=n_docs, dim=dim)
+    return corpus, pcfg, CascadeConfig(accuracy_target=0.9), calib
+
+
+def _preds(corpus, n: int):
+    """n distinct standing queries, fresh oracles per call so every
+    run labels (and pays) independently."""
+    qs = [make_query(corpus, 100 + i, selectivity=0.3) for i in range(n)]
+    return [SemanticPredicate(q.embed, SimulatedOracle(q.truth),
+                              name=f"p{i}") for i, q in enumerate(qs)]
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    corpus, pcfg, ccfg, calib = _workload(smoke)
+    n_docs = len(corpus.embeds)
+    delta_rows = n_docs - calib
+    chunk = 256
+    derived = {"n_docs": n_docs, "calib_rows": calib,
+               "delta_rows": delta_rows, "smoke": smoke}
+
+    # warmup: compile the train/score programs outside every timing
+    warm = ScaleDocEngine(InMemoryStore(corpus.embeds[:calib]), pcfg,
+                          ccfg, chunk=chunk)
+    warm.filter(_preds(corpus, 1)[0], seed=0)
+
+    # full-rescan baseline: one fresh filter() (train + calibrate +
+    # score) over the final collection — what each standing predicate
+    # would cost per commit group without the delta path
+    with tempfile.TemporaryDirectory() as d:
+        writer = StoreWriter.open(d, dim=corpus.embeds.shape[1],
+                                  fingerprint={"bench": "live"})
+        writer.append(corpus.embeds)
+        writer.commit()
+        writer.close()
+        pred = _preds(corpus, 1)[0]
+        t0 = time.perf_counter()
+        ScaleDocEngine(MemmapStore.open(d), pcfg, ccfg,
+                       chunk=chunk).filter(pred, seed=0)
+        rescan_s = time.perf_counter() - t0
+    derived["rescan_s_per_pred"] = rescan_s
+
+    parity = True
+    speedups = {}
+    for n in FLEETS:
+        with tempfile.TemporaryDirectory() as d:
+            writer = StoreWriter.open(d, dim=corpus.embeds.shape[1],
+                                      fingerprint={"bench": "live"})
+            writer.append(corpus.embeds[:calib])
+            writer.commit()
+            live = LiveEngine(MemmapStore.open(d), pcfg, ccfg,
+                              drift=DriftConfig(auto=False), chunk=chunk)
+            preds = _preds(corpus, n)
+            t0 = time.perf_counter()
+            sps = [live.register(p, seed=i)
+                   for i, p in enumerate(preds)]
+            reg_s = (time.perf_counter() - t0) / n
+            rows.add(f"live/register_n{n}", reg_s * 1e6,
+                     f"per_pred_s={reg_s:.3f};calib_rows={calib}")
+
+            writer.append(corpus.embeds[calib:])
+            writer.commit()
+            writer.close()
+            t0 = time.perf_counter()
+            live.pump()
+            delta_s = time.perf_counter() - t0
+            assert all(sp.watermark == n_docs for sp in sps)
+
+            docs_s = n * delta_rows / delta_s
+            speedup = n * rescan_s / delta_s
+            speedups[n] = speedup
+            rows.add(f"live/delta_docs_s_n{n}", 1e6 / max(docs_s, 1e-9),
+                     f"docs_per_s={docs_s:.0f};delta_s={delta_s:.3f};"
+                     f"preds={n}")
+            rows.add(f"live/rescan_speedup_n{n}", delta_s * 1e6 / n,
+                     f"speedup={speedup:.1f}x;"
+                     f"rescan_total_s={n * rescan_s:.2f};"
+                     f"delta_s={delta_s:.3f}")
+            derived[f"delta_docs_per_s_n{n}"] = docs_s
+            derived[f"rescan_speedup_n{n}"] = speedup
+
+            if n == 1:
+                # parity gate: the pumped decisions must be bitwise the
+                # one-shot reference at the same calibration watermark
+                ref = standing_filter(
+                    MemmapStore.open(d), sps[0].predicate, seed=0,
+                    calib_rows=calib, proxy_cfg=pcfg, cascade_cfg=ccfg,
+                    chunk=chunk)
+                parity = bool(np.array_equal(sps[0].decisions,
+                                             ref.decisions))
+                # drift response: recalibrate + retrain over all rows
+                t0 = time.perf_counter()
+                sps[0].revalidate()
+                reval_s = time.perf_counter() - t0
+                rows.add("live/drift_retrain_latency", reval_s * 1e6,
+                         f"revalidate_s={reval_s:.3f};rows={n_docs}")
+                derived["drift_retrain_latency_s"] = reval_s
+            live.close()
+
+    derived["parity"] = parity
+    rows.add("live/parity", 0.0 if parity else 1.0,
+             f"bitwise={parity};calib_rows={calib};"
+             f"delta_rows={delta_rows}")
+    if not parity:
+        raise AssertionError(
+            "pumped delta decisions diverged from standing_filter")
+    slow = {n: s for n, s in speedups.items() if s <= 1.0}
+    if slow:
+        raise AssertionError(
+            f"delta pass failed to beat full rescan: {slow}")
+    return derived
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="small workload (the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_live.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

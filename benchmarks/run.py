@@ -11,8 +11,8 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
                             bench_compound, bench_gateway, bench_ingest,
-                            bench_kernels, bench_serve, bench_thresholds,
-                            bench_tradeoff, bench_training)
+                            bench_kernels, bench_live, bench_serve,
+                            bench_thresholds, bench_tradeoff, bench_training)
     from benchmarks.common import Rows
 
     parser = argparse.ArgumentParser()
@@ -33,6 +33,7 @@ def main() -> None:
         ("ingest (offline phase)", bench_ingest.run),
         ("serve (concurrent sessions)", bench_serve.run),
         ("gateway (HTTP/SSE service plane)", bench_gateway.run),
+        ("live (standing predicates, delta vs rescan)", bench_live.run),
     ]
     rows = Rows()
     timings = {}

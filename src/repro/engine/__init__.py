@@ -5,6 +5,8 @@
 #   * Predicate algebra — SemanticPredicate composed with & | ~
 #   * ScaleDocEngine — cross-query caches + cost-ordered compound plans
 #   * ScoringExecutor — sharded, double-buffered scoring hot path
+#   * LiveEngine / StandingPredicate — continuous queries over an open
+#     store: delta-only scoring per commit group + drift re-validation
 #   * cascade-strategy registry — scaledoc | naive | probe | supg
 from repro.engine.engine import (  # noqa: F401
     FilterResult,
@@ -22,6 +24,17 @@ from repro.engine.ingest import (  # noqa: F401
 from repro.engine.executor import (  # noqa: F401
     ScoringExecutor,
     ScoringStats,
+)
+from repro.engine.live import (  # noqa: F401
+    DeltaBatch,
+    DriftConfig,
+    LiveEngine,
+    LiveEngineClosed,
+    RangeView,
+    standing_filter,
+    StandingCancelled,
+    StandingPredicate,
+    Subscription,
 )
 from repro.engine.predicate import (  # noqa: F401
     And,

@@ -275,14 +275,25 @@ class MemmapStore(DocumentStore):
     ``MemmapStore.open(dir)`` reads a manifest-backed store directory
     (the appendable layout ``StoreWriter`` / ``repro.engine.ingest``
     produce), mapping exactly the committed rows; ``from_npy`` /
-    ``from_raw`` read legacy single-file layouts."""
+    ``from_raw`` read legacy single-file layouts.
+
+    A directory-backed store is *watermark-aware*: a concurrent
+    ``StoreWriter`` may keep committing rows after ``open()``, and
+    ``refresh()`` re-reads the manifest and remaps the data file so the
+    reader advances to the new committed row count. The manifest
+    identity (fingerprint, dim, doc_id_start) is re-validated on every
+    refresh — if another producer swapped the directory out from under
+    us, ``refresh()`` raises ``StoreFingerprintError`` instead of
+    silently serving mixed-corpus rows."""
 
     def __init__(self, mmap: np.ndarray,
-                 manifest: Optional[StoreManifest] = None):
+                 manifest: Optional[StoreManifest] = None,
+                 directory=None):
         if mmap.ndim != 2:
             raise ValueError(f"memmap must be (N, D), got {mmap.shape}")
         self._mmap = mmap
         self.manifest = manifest
+        self.directory = Path(directory) if directory is not None else None
 
     @classmethod
     def from_npy(cls, path: str) -> "MemmapStore":
@@ -296,13 +307,53 @@ class MemmapStore(DocumentStore):
     def open(cls, directory) -> "MemmapStore":
         """Open a manifest-backed store directory (committed rows only)."""
         manifest = load_manifest(directory)
-        data = Path(directory) / DATA_NAME
+        mmap = cls._map(directory, manifest)
+        return cls(mmap, manifest, directory=directory)
+
+    @staticmethod
+    def _map(directory, manifest: StoreManifest) -> np.ndarray:
         if manifest.rows == 0:
-            return cls(np.empty((0, manifest.dim), manifest.dtype),
-                       manifest)
-        mmap = np.memmap(data, mode="r", dtype=manifest.dtype,
+            return np.empty((0, manifest.dim), manifest.dtype)
+        return np.memmap(Path(directory) / DATA_NAME, mode="r",
+                         dtype=manifest.dtype,
                          shape=(manifest.rows, manifest.dim))
-        return cls(mmap, manifest)
+
+    @property
+    def watermark(self) -> int:
+        """Committed rows currently visible to this reader."""
+        return self._mmap.shape[0]
+
+    def refresh(self) -> int:
+        """Advance to the latest committed row count; returns it.
+
+        Re-reads the manifest and, when rows grew, remaps the data file
+        to cover them. The new manifest must describe the *same* store:
+        any change to the producer fingerprint, dim, or doc-id range
+        means a concurrent producer swapped the directory, and we raise
+        ``StoreFingerprintError`` rather than mix corpora. A shrinking
+        row count is the same error — committed rows never retract.
+        """
+        if self.directory is None:
+            return len(self)          # non-directory stores are frozen
+        new = load_manifest(self.directory)
+        old = self.manifest
+        if (new.fingerprint != old.fingerprint or new.dim != old.dim
+                or new.doc_id_start != old.doc_id_start):
+            raise StoreFingerprintError(
+                f"store {self.directory} changed identity while open:\n"
+                f"  opened:  fingerprint={old.fingerprint} dim={old.dim}"
+                f" doc_id_start={old.doc_id_start}\n"
+                f"  current: fingerprint={new.fingerprint} dim={new.dim}"
+                f" doc_id_start={new.doc_id_start}")
+        if new.rows < old.rows:
+            raise StoreFingerprintError(
+                f"store {self.directory} shrank from {old.rows} to "
+                f"{new.rows} committed rows; a committed row count "
+                "never retracts, so the directory was rewritten")
+        if new.rows > old.rows:
+            self._mmap = self._map(self.directory, new)
+            self.manifest = new
+        return len(self)
 
     def __len__(self) -> int:
         return self._mmap.shape[0]

@@ -236,6 +236,59 @@ class GatewayClient:
             if payload["final"]:
                 return
 
+    # -- standing predicates ---------------------------------------------
+
+    def subscribe_standing(self, predicate, *,
+                           oracles: Optional[Mapping[str, object]] = None,
+                           accuracy_target: Optional[float] = None,
+                           seed: int = 0,
+                           name: Optional[str] = None) -> Dict:
+        """Register a standing predicate over the gateway's live store.
+        Returns the 202 body (``id``, ``watermark``, ``calib_rows``,
+        ...); stream its per-commit-group decisions with
+        ``iter_standing()``."""
+        if isinstance(predicate, Predicate):
+            predicate = predicate.to_wire(oracles)
+        body = {"predicate": predicate, "seed": seed}
+        if accuracy_target is not None:
+            body["accuracy_target"] = accuracy_target
+        if name is not None:
+            body["name"] = name
+        _, data = self._request("POST", "/v1/standing", body=body)
+        return data
+
+    def standing_status(self, standing_id: str) -> Dict:
+        _, data = self._request("GET", f"/v1/standing/{standing_id}")
+        return data
+
+    def cancel_standing(self, standing_id: str) -> Dict:
+        _, data = self._request("DELETE", f"/v1/standing/{standing_id}")
+        return data
+
+    def iter_standing(self, standing_id: str,
+                      timeout: float = 600.0) -> Iterator[Dict]:
+        """Stream a standing predicate's per-batch deltas as dicts with
+        a ``final`` flag; ends after the ``done`` event that follows
+        cancellation. Each dict carries ``lo``/``hi`` (the commit-group
+        row window), ``accepted``/``rejected`` doc ids and a
+        ``revalidated`` flag — a revalidated batch *replaces* all
+        decisions below its ``hi`` rather than appending."""
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=timeout)
+        try:
+            conn.request("GET", f"/v1/standing/{standing_id}/deltas",
+                         headers=self._headers())
+            resp = conn.getresponse()
+            if resp.status != 200:
+                raw = resp.read()
+                data = json.loads(raw) if raw else {}
+                self._raise_for_status(resp, data)
+                raise GatewayError(data.get("error", "stream refused"),
+                                   status=resp.status)
+            yield from self._parse_sse(resp)
+        finally:
+            conn.close()
+
     # -- ops surface -----------------------------------------------------
 
     def health(self) -> Dict:

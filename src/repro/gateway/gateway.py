@@ -14,6 +14,15 @@ service with per-tenant admission and a live ops surface.
                                      server-sent events (final sentinel
                                      -> `done` event -> stream close)
     DELETE /v1/queries/<id>          cooperative cancel
+    POST   /v1/standing              register a standing predicate over
+                                     the live store (continuous query)
+    GET    /v1/standing/<id>         watermark / drift / delta stats
+    GET    /v1/standing/<id>/deltas  SSE stream of per-commit-group
+                                     accept/reject batches; tenant
+                                     admission applied per pushed batch
+                                     (over-rate tenants are throttled,
+                                     batches delayed — never dropped)
+    DELETE /v1/standing/<id>         cancel the standing predicate
     GET    /healthz | /readyz        liveness | engine-resident+store-open
     GET    /v1/metrics               CounterSet snapshot: queue depth,
                                      micro-batch occupancy, per-tenant
@@ -55,7 +64,8 @@ from repro.engine.predicate import WireFormatError, from_wire
 from repro.gateway.admission import TenantState, TenantTable
 from repro.serve.server import (PredicateServer, QuerySession,
                                 ServerClosed, ServerSaturated,
-                                SessionCancelled, SessionState)
+                                SessionCancelled, SessionState,
+                                StandingSession)
 
 MAX_BODY_BYTES = 8 << 20            # request bodies larger than this: 413
 SATURATED_RETRY_AFTER = 1.0         # hint when the admission queue is full
@@ -155,6 +165,22 @@ class PredicateGateway:
                          embedder=self.embedder)
         target = body.get("accuracy_target")
         session = self.server.submit(
+            pred,
+            accuracy_target=None if target is None else float(target),
+            seed=int(body.get("seed", 0)),
+            name=body.get("name"),
+            tenant=tenant.tenant.name)
+        tenant.track(session)
+        return session
+
+    def subscribe(self, tenant: TenantState, body: Dict) -> StandingSession:
+        """Register a standing predicate for this tenant. The session
+        counts against ``max_in_flight`` until cancelled — a standing
+        subscription is a permanently-live query."""
+        pred = from_wire(body["predicate"], oracles=self.oracles,
+                         embedder=self.embedder)
+        target = body.get("accuracy_target")
+        session = self.server.subscribe(
             pred,
             accuracy_target=None if target is None else float(target),
             seed=int(body.get("seed", 0)),
@@ -321,6 +347,8 @@ class _Handler(BaseHTTPRequestHandler):
                                     "sessions": stats})
         if parts[:2] == ["v1", "queries"]:
             return self._queries(method, parts[2:])
+        if parts[:2] == ["v1", "standing"]:
+            return self._standing(method, parts[2:])
         self._json(404, {"error": f"no route {method} {self.path}"})
 
     def _queries(self, method: str, rest) -> None:
@@ -334,7 +362,10 @@ class _Handler(BaseHTTPRequestHandler):
             return self._submit(tenant)
         if len(rest) >= 1:
             session = self.gw.lookup(rest[0], tenant)
-            if session is None:
+            if session is None or isinstance(session, StandingSession):
+                # standing sessions live under /v1/standing — routing
+                # them here would bypass the per-batch admission the
+                # standing SSE stream applies
                 return self._json(404, {"error": f"no session "
                                                  f"{rest[0]!r}"})
             if method == "GET" and len(rest) == 1:
@@ -343,6 +374,32 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._result(session)
             if method == "GET" and rest[1:] == ["deltas"]:
                 return self._sse(session)
+            if method == "DELETE" and len(rest) == 1:
+                cancelled = session.cancel()
+                return self._json(200, {"cancelled": cancelled,
+                                        "state": session.state.value})
+        self._json(404, {"error": f"no route {method} {self.path}"})
+
+    def _standing(self, method: str, rest) -> None:
+        tenant = self._tenant()
+        if tenant is None:
+            return self._json(401, {"error": "unknown or missing API "
+                                             "key"})
+        name = tenant.tenant.name
+        self.gw.tenants.fold_counters(self.gw.counters, name, "requests")
+        if method == "POST" and not rest:
+            return self._subscribe(tenant)
+        if len(rest) >= 1:
+            session = self.gw.lookup(rest[0], tenant)
+            if session is None or not isinstance(session,
+                                                 StandingSession):
+                return self._json(404, {"error": f"no standing "
+                                                 f"predicate "
+                                                 f"{rest[0]!r}"})
+            if method == "GET" and len(rest) == 1:
+                return self._json(200, session.stats())
+            if method == "GET" and rest[1:] == ["deltas"]:
+                return self._sse_standing(session, tenant)
             if method == "DELETE" and len(rest) == 1:
                 cancelled = session.cancel()
                 return self._json(200, {"cancelled": cancelled,
@@ -401,6 +458,54 @@ class _Handler(BaseHTTPRequestHandler):
                          "tenant": name,
                          "state": session.state.value})
 
+    def _subscribe(self, tenant: TenantState) -> None:
+        name = tenant.tenant.name
+        counters = self.gw.counters
+        fold = self.gw.tenants.fold_counters
+        admitted, retry_after, reason = tenant.admit()
+        if not admitted:
+            fold(counters, name, "rejected_rate" if reason == "rate"
+                 else "rejected_quota")
+            return self._json(
+                429, {"error": f"tenant {name!r} over its "
+                               f"{reason} limit",
+                      "reason": reason, "retry_after": retry_after},
+                headers=_retry_header(retry_after))
+        try:
+            try:
+                body = self._body()
+                session = self.gw.subscribe(tenant, body)
+            except BaseException:
+                tenant.release()    # return the slot admit() reserved
+                raise
+        except BodyTooLarge as exc:
+            fold(counters, name, "rejected_oversized")
+            return self._json(413, {"error": str(exc)},
+                              headers={"Connection": "close"})
+        except WireFormatError as exc:
+            fold(counters, name, "rejected_malformed")
+            return self._json(400, {"error": str(exc)})
+        except (KeyError, TypeError, ValueError) as exc:
+            fold(counters, name, "rejected_malformed")
+            return self._json(400, {"error": f"bad request body: "
+                                             f"{exc}"})
+        except ServerClosed as exc:
+            return self._json(
+                503, {"error": str(exc),
+                      "retry_after": CLOSED_RETRY_AFTER},
+                headers=_retry_header(CLOSED_RETRY_AFTER))
+        except RuntimeError as exc:
+            # live collections not enabled on this server — a static
+            # deployment; ServerClosed subclasses RuntimeError so this
+            # arm must come second
+            return self._json(503, {"error": str(exc)})
+        fold(counters, name, "standing_subscribed")
+        self._json(202, {"id": session.id, "name": session.name,
+                         "tenant": name,
+                         "state": session.state.value,
+                         "watermark": session.standing.watermark,
+                         "calib_rows": session.standing.calib_rows})
+
     def _result(self, session: QuerySession) -> None:
         try:
             timeout = min(float(self._query.get("timeout", 0.0)),
@@ -449,6 +554,57 @@ class _Handler(BaseHTTPRequestHandler):
         except (BrokenPipeError, ConnectionResetError):
             pass                      # client went away mid-stream
         except BaseException as exc:  # session failed / stream timed out
+            try:
+                self._event("error", {"error": f"{type(exc).__name__}: "
+                                               f"{exc}",
+                                      "state": session.state.value})
+            except OSError:
+                pass
+
+    def _sse_standing(self, session: StandingSession,
+                      tenant: TenantState) -> None:
+        """Stream a standing predicate's per-commit-group delta batches
+        as server-sent events. Tenant admission applies *per pushed
+        batch*: each batch spends one token from the tenant's bucket,
+        and an over-rate tenant's stream is throttled — the batch is
+        delayed until a token accrues, never dropped (the queue between
+        the pump and this stream is unbounded and order-preserving, so
+        decisions delivered are still exactly the decisions made)."""
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        self.close_connection = True
+        self._status = 200
+        counters = self.gw.counters
+        fold = self.gw.tenants.fold_counters
+        name = tenant.tenant.name
+        try:
+            for batch in session.iter_deltas(
+                    timeout=self.gw.stream_timeout):
+                while not batch.final:   # final sentinel is admission-free
+                    ok, retry_after = tenant.bucket.try_acquire()
+                    if ok:
+                        break
+                    fold(counters, name, "standing_throttled")
+                    time.sleep(min(retry_after, 1.0))
+                event = "done" if batch.final else "delta"
+                payload = {"seq": batch.seq,
+                           "lo": batch.lo, "hi": batch.hi,
+                           "accepted": np.asarray(batch.accepted,
+                                                  np.int64).tolist(),
+                           "rejected": np.asarray(batch.rejected,
+                                                  np.int64).tolist(),
+                           "revalidated": batch.revalidated,
+                           "rows_scored": batch.rows_scored,
+                           "oracle_calls": batch.oracle_calls,
+                           "state": session.state.value}
+                self._event(event, payload)
+                counters.inc("gateway_sse_events")
+        except (BrokenPipeError, ConnectionResetError):
+            pass                      # client went away mid-stream
+        except BaseException as exc:  # cancelled / stream timed out
             try:
                 self._event("error", {"error": f"{type(exc).__name__}: "
                                                f"{exc}",

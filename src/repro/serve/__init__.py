@@ -3,6 +3,8 @@
 #     ScaleDocEngine: worker pool + bounded admission queue
 #   * QuerySession — explicit lifecycle (QUEUED → TRAINING → SCORING →
 #     ORACLE_WAIT → DONE), streaming accepted/rejected deltas, stats
+#   * StandingSession — subscription handle over a LiveEngine standing
+#     predicate: per-commit-group accept/reject delta batches
 #   * OracleBroker — cross-session oracle micro-batching over the
 #     engine's shared CachedOracle label caches
 from repro.serve.broker import (  # noqa: F401
@@ -18,4 +20,6 @@ from repro.serve.server import (  # noqa: F401
     ServerSaturated,
     SessionCancelled,
     SessionState,
+    StandingSession,
+    StandingState,
 )

@@ -38,6 +38,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.engine.engine import FilterResult, ScaleDocEngine
+from repro.engine.live import (DeltaBatch, DriftConfig, LiveEngine,
+                               StandingPredicate, Subscription)
 from repro.engine.predicate import Predicate
 from repro.runtime.metrics import CounterSet
 from repro.serve.broker import OracleBroker
@@ -273,6 +275,69 @@ class QuerySession:
         }
 
 
+class StandingState(enum.Enum):
+    LIVE = "live"
+    CANCELLED = "cancelled"
+
+
+class StandingSession:
+    """Session-shaped handle over one standing-predicate subscription.
+
+    Mirrors enough of ``QuerySession``'s consumer surface — ``id``,
+    ``name``, ``tenant``, ``state``, ``done()``, ``cancel()``,
+    ``iter_deltas()``, ``stats()`` — that the gateway's session
+    plumbing (lookup, SSE streaming, DELETE cancel, per-tenant
+    in-flight accounting) works on it unchanged. Unlike a query
+    session it never finishes on its own: batches flow per processed
+    commit group until ``cancel()`` (or server shutdown) pushes the
+    final sentinel."""
+
+    def __init__(self, standing: StandingPredicate,
+                 subscription: Subscription,
+                 tenant: Optional[str] = None):
+        self.id = standing.id
+        self.standing = standing
+        self.subscription = subscription
+        self.name = standing.name
+        self.tenant = tenant
+        self._submitted_at = time.perf_counter()
+
+    @property
+    def state(self) -> StandingState:
+        return (StandingState.CANCELLED if self.standing.done()
+                else StandingState.LIVE)
+
+    def done(self) -> bool:
+        """True once cancelled — the signal TenantState.in_flight uses
+        to lazily free this session's concurrency slot."""
+        return self.standing.done()
+
+    def cancel(self) -> bool:
+        return self.standing.cancel()
+
+    def result(self, timeout: Optional[float] = None):
+        raise TypeError(
+            f"standing session {self.name!r} has no final result; "
+            "consume iter_deltas() or read standing.decisions")
+
+    def iter_deltas(self, timeout: Optional[float] = None):
+        """Yield ``DeltaBatch``es as commit groups are processed, until
+        the final sentinel after cancel/shutdown. ``timeout`` bounds
+        the wait for each next batch (TimeoutError past it)."""
+        while True:
+            batch: DeltaBatch = self.subscription.get(timeout=timeout)
+            yield batch
+            if batch.final:
+                return
+
+    def stats(self) -> Dict:
+        snap = self.standing.stats()
+        snap["tenant"] = self.tenant
+        snap["standing"] = True
+        snap["wall_seconds"] = time.perf_counter() - self._submitted_at
+        return snap
+
+
 _STOP = object()
 
 
@@ -284,10 +349,15 @@ class PredicateServer:
                  broker: Optional[OracleBroker] = None,
                  max_batch: int = 16, max_delay: float = 0.002,
                  counters: Optional[CounterSet] = None,
-                 keep_sessions: int = 1024):
+                 keep_sessions: int = 1024,
+                 live: Optional[LiveEngine] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.engine = engine
+        # standing-predicate support: a LiveEngine over the same resident
+        # engine (pass one in, or call enable_live()); None = subscribe()
+        # is refused
+        self.live = live
         self.counters = counters if counters is not None else CounterSet()
         self.broker = broker or OracleBroker(max_batch=max_batch,
                                              max_delay=max_delay,
@@ -298,6 +368,8 @@ class PredicateServer:
         # bounded history for sessions(): a long-lived server would
         # otherwise pin every finished session's result arrays forever
         self._sessions: "deque[QuerySession]" = deque(maxlen=keep_sessions)
+        self._standing: "deque[StandingSession]" = deque(
+            maxlen=keep_sessions)
         self._workers = [threading.Thread(target=self._worker_loop,
                                           name=f"scaledoc-serve-{i}",
                                           daemon=True)
@@ -345,6 +417,51 @@ class PredicateServer:
             self._sessions.append(session)
         self.counters.inc("sessions_submitted")
         return session
+
+    # -- standing predicates (live collections) ---------------------------
+
+    def enable_live(self, *, drift: Optional[DriftConfig] = None
+                    ) -> LiveEngine:
+        """Build (or return) the server's ``LiveEngine`` over the
+        resident engine. Callers pump it after ingest commit groups;
+        ``subscribe()`` registers standing predicates against it."""
+        with self._lock:
+            if self.live is None:
+                self.live = LiveEngine(self.engine, drift=drift)
+            return self.live
+
+    def subscribe(self, predicate: Predicate, *,
+                  seed: int = 0, name: Optional[str] = None,
+                  accuracy_target: Optional[float] = None,
+                  tenant: Optional[str] = None,
+                  drift: Optional[DriftConfig] = None) -> StandingSession:
+        """Register a standing predicate and subscribe to its per-commit-
+        group accept/reject deltas. Registration (the calibration
+        ``filter()`` over the committed prefix) runs synchronously on
+        the calling thread — it is ordinary query work; the *deltas*
+        are what stream. Returns a session whose ``iter_deltas()``
+        yields ``repro.engine.live.DeltaBatch``es until cancelled."""
+        with self._lock:
+            if self._closed:
+                raise ServerClosed("server is shut down")
+            live = self.live
+        if live is None:
+            raise RuntimeError(
+                "standing predicates are disabled: construct the server "
+                "with live=LiveEngine(...) or call enable_live() first")
+        standing = live.register(predicate, seed=seed, name=name,
+                                 accuracy_target=accuracy_target,
+                                 drift=drift)
+        session = StandingSession(standing, standing.subscribe(),
+                                  tenant=tenant)
+        with self._lock:
+            self._standing.append(session)
+        self.counters.inc("standing_subscribed")
+        return session
+
+    def standing_sessions(self) -> List[StandingSession]:
+        with self._lock:
+            return list(self._standing)
 
     def run(self, predicates: Sequence, *, seeds: Optional[Sequence[int]]
             = None, accuracy_target: Optional[float] = None,
@@ -402,11 +519,15 @@ class PredicateServer:
 
     def get_session(self, session_id: str) -> Optional[QuerySession]:
         """Look up a (live or recently finished) session by id — the
-        handle a network front end round-trips to its clients."""
+        handle a network front end round-trips to its clients. Query
+        and standing sessions share one id namespace."""
         with self._lock:
             for session in self._sessions:
                 if session.id == session_id:
                     return session
+            for standing in self._standing:
+                if standing.id == session_id:
+                    return standing
         return None
 
     @property
@@ -429,6 +550,14 @@ class PredicateServer:
         }
         snap["queue"] = {"depth": self._queue.qsize(),
                          "capacity": self._queue.maxsize}
+        with self._lock:
+            standing = list(self._standing)
+        snap["standing"] = {
+            "subscribed": len(standing),
+            "live": sum(1 for s in standing if not s.done()),
+            "watermark": (len(self.live.store)
+                          if self.live is not None else 0),
+        }
         return snap
 
     def metrics_json(self, indent: int = 2) -> str:
@@ -445,6 +574,10 @@ class PredicateServer:
             self._closed = True
         for _ in self._workers:
             self._queue.put(_STOP)
+        # cancel standing subscriptions so their delta streams terminate
+        # (the final sentinel flows to every subscriber)
+        for standing in self.standing_sessions():
+            standing.cancel()
         if wait:
             for t in self._workers:
                 t.join()

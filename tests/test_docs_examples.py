@@ -26,8 +26,8 @@ def _blocks(path: pathlib.Path):
 def test_doc_files_exist():
     names = {p.name for p in DOC_FILES}
     assert {"README.md", "index.md", "architecture.md", "offline.md",
-            "engine.md", "serving.md", "gateway.md", "training.md",
-            "kernels.md"} <= names
+            "engine.md", "serving.md", "gateway.md", "live.md",
+            "training.md", "kernels.md"} <= names
 
 
 @pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)

@@ -12,11 +12,12 @@ from repro.config.base import CascadeConfig, ProxyConfig
 from repro.core import SimulatedOracle
 from repro.core.oracle import CachedOracle
 from repro.data import make_corpus, make_query
-from repro.engine import (InMemoryStore, ScaleDocEngine, SemanticPredicate,
+from repro.engine import (DriftConfig, InMemoryStore, MemmapStore,
+                          ScaleDocEngine, SemanticPredicate, StoreWriter,
                           WireFormatError, from_wire)
-from repro.gateway import (GatewayClient, GatewayError, PredicateGateway,
-                           RateLimited, RemoteQueryFailed, Tenant,
-                           TenantTable, TokenBucket)
+from repro.gateway import (GatewayClient, GatewayError, GatewayUnavailable,
+                           PredicateGateway, RateLimited, RemoteQueryFailed,
+                           Tenant, TenantTable, TokenBucket)
 from repro.serve import PredicateServer
 
 N_DOCS, DIM = 800, 32
@@ -497,6 +498,166 @@ def test_ops_surface(corpus, cfgs):
         from repro.gateway import GatewayUnavailable
         with pytest.raises(GatewayUnavailable):
             client.submit(wires[0])
+
+
+# -- standing predicates over HTTP -------------------------------------------
+
+
+def _live_store(tmp_path, corpus, rows):
+    writer = StoreWriter.open(str(tmp_path), dim=DIM,
+                              fingerprint={"model": "gw-live"})
+    writer.append(corpus.embeds[:rows])
+    writer.commit()
+    return writer, MemmapStore.open(str(tmp_path))
+
+
+def test_standing_over_http_end_to_end(corpus, cfgs, tmp_path):
+    """Subscribe / stream / cancel over the wire: the SSE delta events
+    reassemble bitwise to the server-side standing decisions, the
+    status endpoint exposes the standing stats, and standing ids are
+    invisible under /v1/queries (those routes would bypass the
+    per-batch admission the standing stream applies)."""
+    pcfg, ccfg = cfgs
+    writer, store = _live_store(tmp_path, corpus, 400)
+    q = make_query(corpus, 9, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    pred = SemanticPredicate(q.embed, cached, name="st")
+    engine = ScaleDocEngine(store, pcfg, ccfg, chunk=128)
+    with PredicateServer(engine, workers=2) as server:
+        server.enable_live(drift=DriftConfig(auto=False))
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.subscribe_standing(pred, oracles=oracles, seed=2)
+            assert sub["state"] == "live"
+            assert sub["watermark"] == 400 and sub["calib_rows"] == 400
+
+            events = []
+            consumer = threading.Thread(
+                target=lambda: events.extend(
+                    client.iter_standing(sub["id"], timeout=120)),
+                daemon=True)
+            consumer.start()
+
+            writer.append(corpus.embeds[400:N_DOCS])
+            writer.commit()
+            writer.close()
+            server.live.pump()
+
+            status = client.standing_status(sub["id"])
+            assert status["standing"] is True
+            assert status["watermark"] == N_DOCS
+            assert status["delta_batches"] == 1
+
+            # standing ids do not resolve as query sessions
+            for path in (f"/v1/queries/{sub['id']}",
+                         f"/v1/queries/{sub['id']}/deltas"):
+                with pytest.raises(GatewayError) as exc_info:
+                    client._request("GET", path)
+                assert exc_info.value.status == 404
+
+            sp = server.live.get(sub["id"])
+            decisions = sp.decisions
+            assert client.cancel_standing(sub["id"])["cancelled"]
+            consumer.join(timeout=60)
+            assert not consumer.is_alive()
+
+    deltas = [e for e in events if not e["final"]]
+    assert [(e["lo"], e["hi"]) for e in deltas] == [(400, N_DOCS)]
+    assert events[-1]["final"]
+    mask = np.zeros(N_DOCS - 400, bool)
+    for e in deltas:
+        mask[np.asarray(e["accepted"], np.int64) - 400] = True
+        assert not np.intersect1d(e["accepted"], e["rejected"]).size
+    np.testing.assert_array_equal(mask, decisions[400:])
+
+
+def test_standing_stream_throttled_but_lossless(corpus, cfgs, tmp_path):
+    """Per-batch admission: an over-rate tenant's standing stream is
+    delayed batch by batch (standing_throttled counts the stalls) but
+    every batch still arrives, in order."""
+    pcfg, ccfg = cfgs
+    writer, store = _live_store(tmp_path, corpus, 500)
+    q = make_query(corpus, 11, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    pred = SemanticPredicate(q.embed, cached, name="st")
+    tenants = [Tenant("slow", "k-s", rate=2.0, burst=1.0)]
+    engine = ScaleDocEngine(store, pcfg, ccfg, chunk=128)
+    with PredicateServer(engine, workers=2) as server:
+        server.enable_live(drift=DriftConfig(auto=False))
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            client = GatewayClient(gw.url, api_key="k-s")
+            sub = client.subscribe_standing(pred, oracles=oracles, seed=4)
+            events = []
+            consumer = threading.Thread(
+                target=lambda: events.extend(
+                    client.iter_standing(sub["id"], timeout=120)),
+                daemon=True)
+            consumer.start()
+            for lo, hi in ((500, 600), (600, 700), (700, N_DOCS)):
+                writer.append(corpus.embeds[lo:hi])
+                writer.commit()
+                server.live.pump()
+            writer.close()
+            client.cancel_standing(sub["id"])
+            consumer.join(timeout=60)
+            assert not consumer.is_alive()
+            snap = client.metrics()["counters"]
+            assert snap["tenant.slow.standing_throttled"] >= 1
+    deltas = [e for e in events if not e["final"]]
+    assert [(e["lo"], e["hi"]) for e in deltas] == \
+        [(500, 600), (600, 700), (700, N_DOCS)]
+    assert events[-1]["final"]
+
+
+def test_standing_counts_toward_max_in_flight(corpus, cfgs):
+    """A live subscription holds a concurrency slot until cancelled:
+    with max_in_flight=1 both a second standing subscribe and an
+    ordinary query submit are quota-rejected; cancel frees the slot."""
+    pcfg, ccfg = cfgs
+    q = make_query(corpus, 13, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    pred = SemanticPredicate(q.embed, cached, name="st")
+    wire = pred.to_wire(oracles)
+    tenants = [Tenant("narrow", "k-n", rate=100.0, burst=100.0,
+                      max_in_flight=1)]
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=2) as server:
+        server.enable_live(drift=DriftConfig(auto=False))
+        with PredicateGateway(server, oracles, tenants=tenants) as gw:
+            client = GatewayClient(gw.url, api_key="k-n")
+            sub = client.subscribe_standing(pred, oracles=oracles, seed=0)
+            for attempt in (lambda: client.subscribe_standing(
+                    pred, oracles=oracles, seed=1),
+                    lambda: client.submit(wire, seed=1)):
+                with pytest.raises(RateLimited) as exc_info:
+                    attempt()
+                assert exc_info.value.reason == "max_in_flight"
+            client.cancel_standing(sub["id"])
+            # the cancelled subscription frees its slot (lazy prune)
+            done = client.submit(wire, seed=1)
+            client.wait(done["id"], timeout=300)
+
+
+def test_standing_requires_live_mode(corpus, cfgs):
+    """Without enable_live() the gateway maps the server's refusal to
+    503 — a static deployment, not an error in the request."""
+    pcfg, ccfg = cfgs
+    q = make_query(corpus, 15, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    pred = SemanticPredicate(q.embed, cached, name="st")
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=1) as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            with pytest.raises(GatewayUnavailable):
+                client.subscribe_standing(pred, oracles=oracles)
+            with pytest.raises(GatewayError) as exc_info:
+                client.standing_status("no-such-standing")
+            assert exc_info.value.status == 404
 
 
 # -- HTTP robustness ---------------------------------------------------------

@@ -9,6 +9,7 @@ from repro.config import get_smoke_arch, replace
 from repro.config.base import CascadeConfig
 from repro.core import SimulatedOracle, run_cascade
 from repro.core.calibration import discretize, stratified_sample
+from repro.gateway.admission import Tenant, TenantState, TokenBucket
 from repro.models.moe import moe_apply, moe_init
 
 
@@ -48,6 +49,119 @@ def test_stratified_sample_properties(seed, frac):
     assert len(np.unique(idx)) == len(idx)          # no duplicates
     assert len(idx) >= 8
     assert (idx >= 0).all() and (idx < 2000).all()
+
+
+# -- gateway admission invariants ---------------------------------------------
+
+
+class _FakeClock:
+    """Deterministic monotonic clock the bucket refills against."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class _FakeSession:
+    def __init__(self):
+        self._done = False
+
+    def done(self) -> bool:
+        return self._done
+
+
+@settings(max_examples=50, deadline=None)
+@given(rate=st.floats(0.1, 100.0), burst=st.floats(1.0, 50.0),
+       steps=st.lists(st.tuples(st.floats(0.0, 10.0),
+                                st.floats(0.0, 5.0)), max_size=50))
+def test_token_bucket_never_exceeds_capacity(rate, burst, steps):
+    """Under arbitrary acquire/advance sequences the bucket stays in
+    [0, burst], grants report zero wait, and a denied acquire's
+    ``retry_after`` is sufficient: waiting exactly that long makes the
+    requested tokens available (whenever the request fits the bucket
+    at all)."""
+    clock = _FakeClock()
+    bucket = TokenBucket(rate, burst, clock)
+    for dt, n in steps:
+        clock.advance(dt)
+        ok, retry = bucket.try_acquire(n)
+        assert 0.0 <= bucket.tokens <= burst + 1e-9
+        if ok:
+            assert retry == 0.0
+        else:
+            assert retry > 0.0
+            if n <= burst:
+                clock.advance(retry)
+                assert bucket.tokens >= n - 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(rate=st.floats(0.5, 50.0), burst=st.floats(1.0, 20.0),
+       drained=st.floats(0.0, 1.0),
+       deficits=st.lists(st.floats(0.01, 30.0), min_size=2, max_size=10))
+def test_retry_after_monotone_in_deficit(rate, burst, drained, deficits):
+    """With the clock frozen, the 429 hint is exactly deficit/rate —
+    so a larger deficit always waits at least as long (monotone), and a
+    denied acquire consumes nothing (the hint is repeatable)."""
+    clock = _FakeClock()
+    bucket = TokenBucket(rate, burst, clock)
+    bucket.try_acquire(burst * drained)
+    tokens = bucket.tokens
+    hints = []
+    for extra in sorted(deficits):
+        ok, retry = bucket.try_acquire(tokens + extra)
+        assert not ok
+        assert retry == pytest.approx(extra / rate)
+        hints.append(retry)
+        assert bucket.tokens == tokens          # denial left no mark
+    assert hints == sorted(hints)
+
+
+@settings(max_examples=50, deadline=None)
+@given(max_in_flight=st.integers(1, 6),
+       ops=st.lists(st.sampled_from(["admit", "track", "release",
+                                     "finish"]), max_size=60))
+def test_tenant_in_flight_never_exceeds_quota(max_in_flight, ops):
+    """Arbitrary admit/track/release/finish sequences: the reserved-slot
+    protocol never lets live + reserved exceed ``max_in_flight``, admits
+    succeed exactly when a slot is free (rate unlimited here), and a
+    quota rejection never drains the token bucket."""
+    tenant = Tenant(name="t", api_key="k", rate=1e6, burst=1e6,
+                    max_in_flight=max_in_flight)
+    state = TenantState(tenant, _FakeClock())
+    live, pending = [], 0
+    for op in ops:
+        alive = sum(1 for s in live if not s._done)
+        if op == "admit":
+            tokens_before = state.bucket.tokens
+            ok, retry, reason = state.admit()
+            assert ok == (alive + pending < max_in_flight)
+            if ok:
+                pending += 1
+            else:
+                assert reason == "max_in_flight" and retry > 0
+                assert state.bucket.tokens == tokens_before
+        elif op == "track" and pending:
+            session = _FakeSession()
+            state.track(session)
+            live.append(session)
+            pending -= 1
+        elif op == "release" and pending:
+            state.release()
+            pending -= 1
+        elif op == "finish":
+            for session in live:
+                if not session._done:
+                    session._done = True
+                    break
+        assert state.in_flight() <= max_in_flight
+        assert state.in_flight() == (
+            sum(1 for s in live if not s._done) + pending)
 
 
 # -- MoE dispatch invariants -----------------------------------------------------

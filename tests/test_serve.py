@@ -11,10 +11,12 @@ from repro.config.base import CascadeConfig, ProxyConfig
 from repro.core import SimulatedOracle
 from repro.core.oracle import CachedOracle
 from repro.data import make_corpus, make_query
-from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+from repro.engine import (DriftConfig, InMemoryStore, MemmapStore,
+                          ScaleDocEngine, SemanticPredicate, StoreWriter)
 from repro.runtime.metrics import CounterSet
 from repro.serve import (OracleBroker, PredicateServer, ServerClosed,
-                         ServerSaturated, SessionState)
+                         ServerSaturated, SessionState, StandingSession,
+                         StandingState)
 
 N_DOCS, DIM = 800, 32
 
@@ -281,6 +283,78 @@ def test_metrics_snapshot_is_json_serializable(corpus, cfgs):
         assert "queue_depth" in blob["gauges"]
         assert blob["oracle_cache"]["docs_purchased"] > 0
     assert parsed["queue"]["capacity"] == 32
+
+
+# -- standing predicates over the server -------------------------------------
+
+def test_standing_subscription_over_server(corpus, cfgs, tmp_path):
+    """Full standing lifecycle through PredicateServer: refusal before
+    enable_live(), session-shaped handle (shared id namespace, LIVE
+    state, no result()), per-commit-group delta streaming off a pump,
+    the metrics standing block, and cancel terminating the stream."""
+    pcfg, ccfg = cfgs
+    writer = StoreWriter.open(str(tmp_path), dim=DIM,
+                              fingerprint={"model": "serve-live"})
+    writer.append(corpus.embeds[:400])
+    writer.commit()
+    q = make_query(corpus, 41, selectivity=0.3)
+    pred = SemanticPredicate(q.embed, SimulatedOracle(q.truth),
+                             name="standing")
+    engine = ScaleDocEngine(MemmapStore.open(str(tmp_path)), pcfg, ccfg,
+                            chunk=128)
+    with PredicateServer(engine, workers=2) as server:
+        with pytest.raises(RuntimeError, match="disabled"):
+            server.subscribe(pred, seed=3)
+        server.enable_live(drift=DriftConfig(auto=False))
+        session = server.subscribe(pred, seed=3, tenant="t")
+        assert isinstance(session, StandingSession)
+        assert session.state == StandingState.LIVE and not session.done()
+        assert server.get_session(session.id) is session
+        with pytest.raises(TypeError, match="no final result"):
+            session.result()
+
+        batches = []
+        consumer = threading.Thread(
+            target=lambda: batches.extend(session.iter_deltas(timeout=120)),
+            daemon=True)
+        consumer.start()
+
+        writer.append(corpus.embeds[400:N_DOCS])
+        writer.commit()
+        writer.close()
+        server.live.pump()
+        snap = server.metrics_snapshot()
+        assert snap["standing"] == {"subscribed": 1, "live": 1,
+                                    "watermark": N_DOCS}
+        assert snap["counters"]["standing_subscribed"] == 1
+        stats = session.stats()
+        assert stats["standing"] is True and stats["tenant"] == "t"
+        assert stats["watermark"] == N_DOCS
+        assert session.cancel()
+        consumer.join(timeout=30)
+        assert not consumer.is_alive()
+    assert (batches[0].lo, batches[0].hi) == (400, N_DOCS)
+    assert not batches[0].final and batches[-1].final
+    assert session.state == StandingState.CANCELLED and session.done()
+
+
+def test_shutdown_cancels_standing_sessions(corpus, cfgs):
+    """Server shutdown pushes the final sentinel to every standing
+    subscriber — streams terminate, nothing hangs."""
+    pcfg, ccfg = cfgs
+    q = make_query(corpus, 43, selectivity=0.3)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    server = PredicateServer(engine, workers=1)
+    server.enable_live(drift=DriftConfig(auto=False))
+    session = server.subscribe(
+        SemanticPredicate(q.embed, SimulatedOracle(q.truth)), seed=1)
+    server.shutdown()
+    batches = list(session.iter_deltas(timeout=10))
+    assert len(batches) == 1 and batches[0].final
+    assert session.done()
+    snap = server.metrics_snapshot()
+    assert snap["standing"]["subscribed"] == 1
+    assert snap["standing"]["live"] == 0
 
 
 # -- engine session views ----------------------------------------------------
