@@ -1,0 +1,247 @@
+"""Resilient oracle plane benchmark: fault injection, degraded modes.
+
+The resilience layer (``repro.serve.resilience``) wraps every oracle
+label purchase in retry/backoff, circuit breaking and bisect poison
+isolation, and the engine degrades (``defer`` / ``proxy_fallback``)
+when the plane gives up. This suite prices that layer with the seeded
+``ChaosOracle`` injector: a fault-rate sweep under ``degrade="defer"``,
+a hard-blackout comparison of the two degraded policies, and two CI
+gates. Reported rows:
+
+  resilience/fault_{0,5,20}pct   bulk-label the collection through the
+                                 stack at 0%/5%/20% injected transient
+                                 fault rate — wall time per doc, with
+                                 retries/bisects/extra invocations; the
+                                 labels stay exact and no doc is ever
+                                 purchased twice
+  resilience/zero_fault_overhead gate row: with zero faults the stack
+                                 is bit-transparent — same mask, same
+                                 purchases, same invocations, no policy
+                                 activity (0 = pass); wall overhead vs
+                                 a plain CachedOracle run is reported
+  resilience/defer_blackout      hard mid-query outage under defer:
+                                 partial degraded result + repair queue
+  resilience/proxy_fallback      same outage under proxy_fallback:
+                                 everything decided, agreement + debit
+  resilience/eventual_parity     gate row: post-heal repair_pending()
+                                 decisions bitwise equal the fault-free
+                                 baseline AND no doc purchased twice
+                                 across retries (0 = pass)
+
+``--smoke`` shrinks the workload for CI; ``--json PATH`` writes rows +
+derived metrics (default BENCH_resilience.json).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core.oracle import CachedOracle, SimulatedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+from repro.serve import (BreakerConfig, ChaosConfig, ChaosOracle,
+                         ResilientOracle, RetryPolicy)
+
+RETRY = RetryPolicy(max_attempts=4, base_delay_s=0.0005,
+                    max_delay_s=0.004, deadline_s=30.0)
+BREAKER = BreakerConfig(failure_threshold=3, cooldown_s=0.05,
+                        probe_retry_after_s=0.01)
+
+
+class LedgerOracle(SimulatedOracle):
+    """Deterministic labels plus a per-doc purchase ledger — the
+    witness for the no-double-purchase invariant under retries."""
+
+    def __init__(self, truth):
+        super().__init__(truth)
+        self.per_doc = {}
+        self._ledger_lock = threading.Lock()
+
+    def label(self, indices):
+        indices = np.asarray(indices, np.int64)
+        with self._ledger_lock:
+            for i in indices:
+                self.per_doc[int(i)] = self.per_doc.get(int(i), 0) + 1
+        return super().label(indices)
+
+
+def _workload(smoke: bool):
+    if smoke:
+        n_docs, dim = 512, 32
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=32, latent_dim=16,
+                           proj_dim=8, phase1_steps=10, phase2_steps=10,
+                           batch_size=32)
+    else:
+        n_docs, dim = 2000, 64
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=64, latent_dim=32,
+                           proj_dim=16, phase1_steps=30, phase2_steps=30)
+    corpus = make_corpus(3, n_docs=n_docs, dim=dim)
+    query = make_query(corpus, 17, selectivity=0.3)
+    return corpus, query, pcfg, CascadeConfig(accuracy_target=0.9)
+
+
+def _engine(corpus, pcfg, ccfg, **kw):
+    return ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg, **kw)
+
+
+def _stack(truth, chaos=None, seed=0):
+    """(resilient, chaos_oracle, ledger): the full policy stack."""
+    ledger = LedgerOracle(truth)
+    chaos_o = ChaosOracle(ledger, chaos or ChaosConfig())
+    res = ResilientOracle(CachedOracle(chaos_o), retry=RETRY,
+                          breaker=BREAKER, seed=seed)
+    return res, chaos_o, ledger
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    corpus, query, pcfg, ccfg = _workload(smoke)
+    derived = {}
+    seed = 6
+
+    # warm the jit caches so the 0% run does not pay compilation
+    _engine(corpus, pcfg, ccfg).filter(
+        SemanticPredicate(query.embed,
+                          CachedOracle(SimulatedOracle(query.truth)),
+                          name="warmup"), seed=seed)
+
+    # fault-free baseline: a plain CachedOracle, no policy layer
+    plain = CachedOracle(LedgerOracle(query.truth))
+    t0 = time.perf_counter()
+    base = _engine(corpus, pcfg, ccfg).filter(
+        SemanticPredicate(query.embed, plain, name="p"), seed=seed)
+    base_wall = time.perf_counter() - t0
+    rows.add("resilience/baseline", base_wall * 1e6,
+             f"docs={plain.docs_purchased};invocations={plain.purchases}")
+    derived["baseline_wall_s"] = base_wall
+
+    # -- zero-fault transparency gate (engine path) ----------------------
+    res0, chaos0, _ = _stack(query.truth)
+    t0 = time.perf_counter()
+    got0 = _engine(corpus, pcfg, ccfg).filter(
+        SemanticPredicate(query.embed, res0, name="p"), seed=seed)
+    wall0 = time.perf_counter() - t0
+    stats0 = res0.resilience_stats()
+    transparent = (
+        bool(np.array_equal(got0.mask, base.mask))
+        and not got0.degraded
+        and res0.purchases == plain.purchases
+        and res0.docs_purchased == plain.docs_purchased
+        and chaos0.invocations == plain.purchases
+        and all(stats0[k] == 0 for k in
+                ("retries", "bisects", "timeouts", "faults",
+                 "breaker_rejects", "gave_up_docs")))
+    overhead = wall0 / base_wall - 1.0
+    rows.add("resilience/zero_fault_overhead",
+             0.0 if transparent else 1.0,
+             f"transparent={transparent};wall_overhead={overhead:+.1%}")
+    derived["zero_fault_transparent"] = transparent
+    derived["zero_fault_overhead"] = overhead
+    if not transparent:
+        raise AssertionError(
+            "resilience stack is not bit-transparent with zero faults "
+            f"injected: {stats0}")
+
+    # -- transient-fault-rate sweep: bulk labeling through the stack -----
+    n, batch = len(query.truth), 16
+    for rate in (0.0, 0.05, 0.20):
+        res, chaos, ledger = _stack(
+            query.truth, ChaosConfig(seed=9, fail_rate=rate / 2,
+                                     timeout_rate=rate / 2))
+        labels = np.empty(n, np.int8)
+        t0 = time.perf_counter()
+        for lo in range(0, n, batch):
+            idx = np.arange(lo, min(lo + batch, n))
+            labels[idx] = res.label(idx)
+        wall = time.perf_counter() - t0
+        stats = res.resilience_stats()
+        exact = bool(np.array_equal(labels.astype(bool), query.truth))
+        once = all(v == 1 for v in ledger.per_doc.values())
+        asks = -(-n // batch)
+        pct = int(round(rate * 100))
+        rows.add(f"resilience/fault_{pct}pct", wall / n * 1e6,
+                 f"retries={stats['retries']};bisects={stats['bisects']};"
+                 f"invocations={chaos.invocations}(min {asks});"
+                 f"exact={exact}")
+        derived[f"fault_{pct}pct_wall_s"] = wall
+        derived[f"fault_{pct}pct_retries"] = stats["retries"]
+        derived[f"fault_{pct}pct_invocations"] = chaos.invocations
+        if not (exact and once):
+            raise AssertionError(
+                f"fault rate {rate:.0%}: exact={exact} "
+                f"single_purchase={once} — retries must never change "
+                f"labels or re-buy them")
+
+    # -- hard blackout: defer (partial + repair) vs proxy_fallback -------
+    res_d, chaos_d, ledger_d = _stack(query.truth)
+    engine_d = _engine(corpus, pcfg, ccfg, degrade="defer")
+    pred_d = SemanticPredicate(query.embed, res_d, name="p")
+    chaos_d.chaos = ChaosConfig(blackouts=((2, 10_000),))
+    t0 = time.perf_counter()
+    degraded = engine_d.filter(pred_d, seed=seed)
+    wall_d = time.perf_counter() - t0
+    assert degraded.degraded and degraded.degrade_mode == "defer"
+    rows.add("resilience/defer_blackout", wall_d * 1e6,
+             f"unresolved={len(degraded.unresolved)};"
+             f"repair_queue={engine_d.repair_count};"
+             f"decided={int(degraded.mask.sum())}")
+    derived["defer_unresolved"] = len(degraded.unresolved)
+
+    chaos_d.heal()
+    time.sleep(BREAKER.cooldown_s + 0.02)
+    t0 = time.perf_counter()
+    repaired = engine_d.repair_pending()[0]
+    wall_r = time.perf_counter() - t0
+    parity = bool(np.array_equal(repaired.mask, base.mask))
+    once = all(v == 1 for v in ledger_d.per_doc.values())
+    rows.add("resilience/eventual_parity",
+             0.0 if (parity and once) else 1.0,
+             f"bitwise={parity};single_purchase={once};"
+             f"repair_wall_s={wall_r:.3f}")
+    derived["eventual_parity"] = parity
+    derived["single_purchase"] = once
+    if not (parity and once):
+        raise AssertionError(
+            f"defer-then-repair broke the contract: parity={parity} "
+            f"single_purchase={once}")
+
+    res_p, chaos_p, _ = _stack(query.truth,
+                               ChaosConfig(blackouts=((2, 10_000),)))
+    t0 = time.perf_counter()
+    fallback = _engine(corpus, pcfg, ccfg).filter(
+        SemanticPredicate(query.embed, res_p, name="p"), seed=seed,
+        degrade="proxy_fallback")
+    wall_p = time.perf_counter() - t0
+    assert fallback.degraded and not len(fallback.unresolved)
+    agree = float(np.mean(fallback.mask == base.mask))
+    rows.add("resilience/proxy_fallback", wall_p * 1e6,
+             f"agreement={agree:.3f};fallback_docs={fallback.fallback_docs};"
+             f"accuracy_debit={fallback.est_accuracy_debit:.3f}")
+    derived["proxy_fallback_agreement"] = agree
+    derived["proxy_fallback_docs"] = fallback.fallback_docs
+    return derived
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="small workload (the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_resilience.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,9 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
                             bench_compound, bench_gateway, bench_ingest,
-                            bench_kernels, bench_live, bench_serve,
-                            bench_thresholds, bench_tradeoff, bench_training)
+                            bench_kernels, bench_live, bench_resilience,
+                            bench_serve, bench_thresholds, bench_tradeoff,
+                            bench_training)
     from benchmarks.common import Rows
 
     parser = argparse.ArgumentParser()
@@ -34,6 +35,7 @@ def main() -> None:
         ("serve (concurrent sessions)", bench_serve.run),
         ("gateway (HTTP/SSE service plane)", bench_gateway.run),
         ("live (standing predicates, delta vs rescan)", bench_live.run),
+        ("resilience (faulty oracle plane)", bench_resilience.run),
     ]
     rows = Rows()
     timings = {}

@@ -32,6 +32,36 @@ PROXY_LLM_1B_FLOPS_PER_DOC = 10e15 / 10_000
 OUR_PROXY_FLOPS_PER_DOC = 2e12 / 10_000
 
 
+class OracleError(RuntimeError):
+    """Base for oracle-plane failures. Subclasses RuntimeError so layers
+    that already map RuntimeError to a 5xx keep working. Lives here (not
+    in serve/) so the engine can catch it without importing the serving
+    package (which imports the engine)."""
+
+
+class OracleFault(OracleError):
+    """A single invocation failed (drop, rate-limit, poison input).
+    Retryable."""
+
+
+class OracleTimeout(OracleFault):
+    """An invocation exceeded its deadline. Retryable."""
+
+
+class OracleUnavailable(OracleError):
+    """The oracle plane gave up: retries/bisection exhausted or the
+    circuit breaker is open. Carries the doc ids that were NOT labeled
+    and an advisory retry-after horizon."""
+
+    def __init__(self, message: str = "oracle unavailable", *,
+                 docs: Sequence[int] = (), retry_after: float = 0.0,
+                 breaker_open: bool = False):
+        super().__init__(message)
+        self.docs = tuple(int(d) for d in docs)
+        self.retry_after = float(retry_after)
+        self.breaker_open = bool(breaker_open)
+
+
 class CachedOracle:
     """Memoizing wrapper: labels already purchased are never re-paid.
     The pipeline samples training, calibration and ambiguous-band labels
@@ -59,8 +89,9 @@ class CachedOracle:
         self.inner = inner
         self._cache = {}
         self._lock = threading.Lock()
-        self.hits = 0            # label asks served from cache
+        self.hits = 0            # per-doc label asks served from cache
         self.purchases = 0       # inner label() invocations
+        self.docs_purchased = 0  # docs actually paid for (sum of misses)
 
     @property
     def calls(self):
@@ -77,6 +108,15 @@ class CachedOracle:
         with self._lock:
             return len(self._cache)
 
+    def cached_positive_rate(self) -> Optional[float]:
+        """Mean of the labels already purchased (None while the cache is
+        empty) — a free positive-rate estimate degraded-mode serving
+        uses to place its proxy-score cut during an oracle outage."""
+        with self._lock:
+            if not self._cache:
+                return None
+            return float(np.mean([bool(v) for v in self._cache.values()]))
+
     def stats(self) -> dict:
         """One atomic snapshot of calls / queried / cache size / hit
         accounting (reading the properties separately can interleave
@@ -86,7 +126,8 @@ class CachedOracle:
                     "queried": len(getattr(self.inner, "queried", ())),
                     "cached": len(self._cache),
                     "hits": self.hits,
-                    "purchases": self.purchases}
+                    "purchases": self.purchases,
+                    "docs_purchased": self.docs_purchased}
 
     @property
     def flops_per_doc(self):
@@ -120,8 +161,13 @@ class CachedOracle:
                 for i, v in zip(missing, got):
                     self._cache[i] = bool(v)
                 self.purchases += 1
-            else:
-                self.hits += 1
+                self.docs_purchased += len(missing)
+            # per-doc hit accounting: every unique doc in the ask that
+            # did NOT need a purchase was served from cache, whether or
+            # not the ask was fully cached. Counted only after a
+            # successful purchase so a raising inner leaves stats
+            # describing completed asks only.
+            self.hits += len({int(i) for i in indices}) - len(missing)
             return np.array([self._cache[int(i)] for i in indices],
                             dtype=bool)
 

@@ -34,6 +34,14 @@ class QueryStats:
     total_flops: float
     wall_seconds: float
     scores: np.ndarray
+    # degraded-mode accounting (engine degrade= policy under an oracle
+    # outage): flagged so a consumer can tell contract-backed decisions
+    # from best-effort ones
+    degraded: bool = False
+    degrade_mode: Optional[str] = None
+    unresolved_docs: int = 0
+    fallback_docs: int = 0
+    est_accuracy_debit: float = 0.0
 
 
 class ScaleDocPipeline:

@@ -11,6 +11,7 @@
 from repro.engine.engine import (  # noqa: F401
     FilterResult,
     LeafReport,
+    RepairTicket,
     ScaleDocEngine,
 )
 from repro.engine.ingest import (  # noqa: F401

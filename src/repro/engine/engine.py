@@ -57,7 +57,7 @@ import numpy as np
 from repro.config.base import CascadeConfig, ProxyConfig, replace
 from repro.core import oracle as oracle_mod
 from repro.core.cascade import CascadeResult, f1_score
-from repro.core.oracle import CachedOracle
+from repro.core.oracle import CachedOracle, OracleError
 from repro.core.trainer import train_proxy, train_proxy_multi, unstack_params
 from repro.engine.executor import ScoringExecutor, ScoringStats
 from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, Not, Predicate,
@@ -152,10 +152,42 @@ class FilterResult:
     # ran (planning + per-leaf); zeroed fields when no pass was needed
     scoring_stats: ScoringStats = dataclasses.field(
         default_factory=ScoringStats)
+    # degraded-mode accounting (oracle outage mid-filter):
+    #   degraded        — the oracle plane failed and a degrade policy ran
+    #   degrade_mode    — "defer" | "proxy_fallback" when degraded
+    #   unresolved      — doc ids parked UNRESOLVED (defer: not in mask,
+    #                     a RepairTicket re-decides them after heal)
+    #   fallback_docs   — docs decided by raw proxy score (proxy_fallback)
+    #   est_accuracy_debit — heuristic accuracy give-up from fallback
+    #   error           — stringified oracle failure
+    degraded: bool = False
+    degrade_mode: Optional[str] = None
+    unresolved: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    fallback_docs: int = 0
+    est_accuracy_debit: float = 0.0
+    error: Optional[str] = None
 
     @property
     def data_reduction(self) -> float:
         return 1.0 - self.oracle_calls_total / max(self.n_docs, 1)
+
+
+@dataclasses.dataclass
+class RepairTicket:
+    """A deferred query parked by ``degrade="defer"``: everything needed
+    to replay ``filter()`` bit-identically once the oracle heals. The
+    replay runs on a *fresh* session view (fresh proxy/decision caches,
+    shared label caches) so its rng stream matches a fault-free run —
+    that, plus ``CachedOracle``'s at-most-once purchase, is the parity
+    argument (docs/resilience.md)."""
+    predicate: Predicate
+    accuracy_target: Optional[float]
+    ground_truth: Optional[np.ndarray]
+    seed: int
+    unresolved: np.ndarray
+    error: str
+    name: Optional[str] = None
 
 
 class ScaleDocEngine:
@@ -166,7 +198,8 @@ class ScaleDocEngine:
                  strategy: str = "scaledoc", use_kernel: bool = False,
                  chunk: int = 8192, mesh=None,
                  executor: Optional[ScoringExecutor] = None,
-                 batch_training: bool = True):
+                 batch_training: bool = True,
+                 degrade: str = "fail"):
         self.store: DocumentStore = as_store(store)
         proxy_cfg = proxy_cfg or ProxyConfig()
         self.proxy_cfg = replace(proxy_cfg, embed_dim=self.store.dim)
@@ -183,6 +216,14 @@ class ScaleDocEngine:
         # wins over the convenience kwargs.
         self.executor = executor or ScoringExecutor(
             chunk=chunk, use_kernel=use_kernel, mesh=mesh)
+        # what happens when the oracle plane fails mid-filter:
+        #   "fail"           — raise (pre-resilience behavior)
+        #   "defer"          — park undecided docs + a RepairTicket
+        #   "proxy_fallback" — decide the rest by proxy score, flagged
+        if degrade not in ("fail", "defer", "proxy_fallback"):
+            raise ValueError(f"unknown degrade policy {degrade!r}")
+        self.degrade = degrade
+        self._repairs: List[RepairTicket] = []
         self._oracles: Dict[int, CachedOracle] = {}
         self._proxies: Dict[str, Dict] = {}      # leaf.key -> params
         self._sel_est: Dict[str, float] = {}     # measured selectivity
@@ -289,7 +330,13 @@ class ScaleDocEngine:
         # free its id for a different oracle and serve it stale cached
         # proxies/decisions
         with self._lock:
-            if isinstance(oracle, CachedOracle):
+            # a ResilientOracle (serve.resilience) presents the full
+            # CachedOracle surface plus retry/breaker policy; adopting
+            # it here means broker lanes, live calibration and leaf
+            # execution all purchase through the policy layer with no
+            # resilience configuration anywhere else
+            if (isinstance(oracle, CachedOracle)
+                    or getattr(oracle, "acts_as_cached", False)):
                 self._oracles.setdefault(id(oracle), oracle)
                 return oracle
             got = self._oracles.get(id(oracle))
@@ -306,6 +353,42 @@ class ScaleDocEngine:
         if self._oracle_wrap is None:
             return cached
         return self._oracle_wrap(cached)
+
+    # -- repair queue (degrade="defer") ----------------------------------
+
+    @property
+    def repair_count(self) -> int:
+        with self._lock:
+            return len(self._repairs)
+
+    def take_repairs(self) -> List[RepairTicket]:
+        """Pop every parked ticket (shared across session views)."""
+        with self._lock:
+            out, self._repairs = self._repairs, []
+            return out
+
+    def repark(self, ticket: RepairTicket) -> None:
+        with self._lock:
+            self._repairs.append(ticket)
+
+    def repair_pending(self) -> List[FilterResult]:
+        """Replay every parked ticket on a fresh session view.
+
+        Each replay is a full ``filter()`` from the ticket's seed —
+        fresh proxy/decision caches so the rng stream matches a
+        fault-free run, shared label caches so nothing already purchased
+        is re-paid. A replay that degrades again re-parks itself
+        automatically (views share the repair list). Call after the
+        oracle heals (the server wires this to the breaker's half-open
+        transition)."""
+        out: List[FilterResult] = []
+        for ticket in self.take_repairs():
+            view = self.session_view()
+            out.append(view.filter(
+                ticket.predicate, accuracy_target=ticket.accuracy_target,
+                ground_truth=ticket.ground_truth, seed=ticket.seed,
+                degrade="defer"))
+        return out
 
     def clear_caches(self) -> None:
         """Drop all cross-query state (labels, proxies, decisions).
@@ -500,21 +583,118 @@ class ScaleDocEngine:
             proxy_reused=reused, cascade=cres, pending=pending,
             scores=scores, labels=cres.labels)
 
+    # -- degraded-mode resolution ----------------------------------------
+
+    def _proxy_fallback(self, predicate: Predicate,
+                        order: List[SemanticPredicate],
+                        leaves: List[SemanticPredicate],
+                        leaf_values: Dict[str, np.ndarray],
+                        local_params: Dict[str, Dict],
+                        root: np.ndarray, stats: ScoringStats):
+        """Decide every still-UNKNOWN document by proxy score alone.
+
+        The cut placement uses the best oracle-free selectivity signal
+        available: a measured selectivity from a past completed cascade,
+        else the positive rate of the labels this query *already
+        purchased* (training/calibration samples sitting in the shared
+        cache) — accepting the matching top score-quantile. With
+        neither, trained proxies cut at 0.5 and untrained leaves at 0.5
+        of min-max-normalized raw cosine (the planner's heuristic). No
+        oracle is touched, so this always completes during an outage.
+        The caller flags the result so downstream consumers know these
+        decisions carry no accuracy contract."""
+        n = len(self.store)
+        before = int(np.sum(root == UNKNOWN))
+        with self._lock:
+            sel_snapshot = dict(self._sel_est)
+        for leaf in order:
+            pending = np.nonzero(root == UNKNOWN)[0]
+            if not len(pending):
+                break
+            vals = leaf_values.get(leaf.key)
+            if vals is None:
+                vals = np.full(n, UNKNOWN, np.int8)
+            need = pending[vals[pending] == UNKNOWN]
+            if len(need):
+                if isinstance(self.store, InMemoryStore):
+                    view = self.store.get(need)
+                else:
+                    view = _PendingView(self.store, need, self.chunk)
+                params = local_params.get(leaf.key)
+                s, pass_stats = self.executor.score(params, leaf.e_q,
+                                                    view)
+                stats.merge(pass_stats)
+                if params is None:
+                    span = float(s.max() - s.min())
+                    s = ((s - s.min()) / span if span > 0
+                         else np.full(len(s), 0.5, np.float32))
+                alpha = sel_snapshot.get(leaf.key)
+                if alpha is None:
+                    cached = self._cached_oracle(leaf.oracle)
+                    rate = getattr(cached, "cached_positive_rate",
+                                   lambda: None)()
+                    alpha = rate
+                if alpha is not None and 0.0 < alpha < 1.0 and \
+                        len(need) > 1:
+                    cut = float(np.quantile(s, 1.0 - alpha))
+                else:
+                    cut = 0.5
+                vals = vals.copy()
+                vals[need] = (s > cut).astype(np.int8)
+                leaf_values[leaf.key] = vals
+            full = {lf.key: leaf_values.get(
+                lf.key, np.full(n, UNKNOWN, np.int8)) for lf in leaves}
+            prev_root = root
+            root = predicate.evaluate(full)
+            newly = prev_root == UNKNOWN
+            self._partial(np.nonzero(newly & (root == TRUE))[0],
+                          np.nonzero(newly & (root == FALSE))[0])
+        assert not (root == UNKNOWN).any(), \
+            "proxy fallback visited every leaf yet left docs undecided"
+        return root, before
+
+    @staticmethod
+    def _fallback_debit(reports: List[LeafReport], fallback_docs: int,
+                        n: int) -> float:
+        """Heuristic accuracy give-up: the fraction of docs decided by
+        raw proxy, weighted by how far the completed leaves' estimated
+        accuracy sat from a coin flip (no completed cascade -> assume
+        the full 0.5 gap)."""
+        if not fallback_docs:
+            return 0.0
+        accs = [r.cascade.est_accuracy for r in reports
+                if r.cascade is not None
+                and r.cascade.est_accuracy is not None]
+        gap = 1.0 - (float(np.mean(accs)) if accs else 0.5)
+        return float(fallback_docs) / max(n, 1) * gap
+
     # -- public API -------------------------------------------------------
 
     def filter(self, predicate: Predicate, *,
                accuracy_target: Optional[float] = None,
                ground_truth: Optional[np.ndarray] = None,
-               seed: int = 0) -> FilterResult:
+               seed: int = 0,
+               degrade: Optional[str] = None) -> FilterResult:
         """Evaluate a (possibly composed) predicate over the collection.
 
         Returns a boolean mask over all documents plus full per-leaf
         cost accounting. ``ground_truth``, if given, is the root-level
         truth used only for reporting achieved F1 / exact accuracy.
+
+        ``degrade`` overrides the engine-level policy for this call:
+        when an ``OracleError`` escapes the oracle plane mid-filter,
+        ``"fail"`` re-raises it, ``"defer"`` returns a partial degraded
+        result (undecided docs in ``result.unresolved``, a
+        ``RepairTicket`` parked for post-heal replay), and
+        ``"proxy_fallback"`` decides the remaining docs by proxy score
+        alone (flagged via ``fallback_docs``/``est_accuracy_debit``).
         """
         if not isinstance(predicate, Predicate):
             raise TypeError("predicate must be a repro.engine Predicate; "
                             "wrap raw (e_q, oracle) in SemanticPredicate")
+        mode = self.degrade if degrade is None else degrade
+        if mode not in ("fail", "defer", "proxy_fallback"):
+            raise ValueError(f"unknown degrade policy {mode!r}")
         t0 = time.time()
         ccfg = self.cascade_cfg
         if accuracy_target is not None:
@@ -540,52 +720,87 @@ class ScaleDocEngine:
 
         # collect-then-batch: one compiled program trains every leaf
         # proxy this plan still needs, before any cascade runs
-        self._notify("training")
-        train_info, local_params = self._train_pending_leaves(
-            order, ccfg, rng, seed)
-
-        self._notify("scoring")
+        train_info: Dict[str, tuple] = {}
+        local_params: Dict[str, Dict] = {}
         leaf_values: Dict[str, np.ndarray] = {}
         root = predicate.evaluate({lf.key: np.full(n, UNKNOWN, np.int8)
                                    for lf in leaves})
         reports: List[LeafReport] = []
-        for leaf in order:
-            pending = np.nonzero(root == UNKNOWN)[0]
-            if not len(pending):
-                break
-            truth_local = leaf_truth.get(leaf.key)
-            if truth_local is not None:
-                truth_local = truth_local[pending]
-            report = self._execute_leaf(leaf, pending, ccfg, rng,
-                                        train_info, local_params,
-                                        truth_local, seed, scoring_stats)
-            reports.append(report)
-            vals = np.full(n, UNKNOWN, np.int8)
-            vals[pending] = report.labels.astype(np.int8)
-            leaf_values[leaf.key] = vals
-            full = {lf.key: leaf_values.get(
-                lf.key, np.full(n, UNKNOWN, np.int8)) for lf in leaves}
-            prev_root = root
-            root = predicate.evaluate(full)
-            # stream newly-decided doc ids to any session observer
-            newly = prev_root == UNKNOWN
-            self._partial(np.nonzero(newly & (root == TRUE))[0],
-                          np.nonzero(newly & (root == FALSE))[0])
+        degrade_error: Optional[OracleError] = None
+        fallback_docs = 0
+        unresolved = np.zeros(0, np.int64)
+        try:
+            self._notify("training")
+            train_info, local_params = self._train_pending_leaves(
+                order, ccfg, rng, seed)
 
-        assert not (root == UNKNOWN).any(), \
-            "plan executed every leaf yet left documents undecided"
+            self._notify("scoring")
+            for leaf in order:
+                pending = np.nonzero(root == UNKNOWN)[0]
+                if not len(pending):
+                    break
+                truth_local = leaf_truth.get(leaf.key)
+                if truth_local is not None:
+                    truth_local = truth_local[pending]
+                report = self._execute_leaf(leaf, pending, ccfg, rng,
+                                            train_info, local_params,
+                                            truth_local, seed,
+                                            scoring_stats)
+                reports.append(report)
+                vals = np.full(n, UNKNOWN, np.int8)
+                vals[pending] = report.labels.astype(np.int8)
+                leaf_values[leaf.key] = vals
+                full = {lf.key: leaf_values.get(
+                    lf.key, np.full(n, UNKNOWN, np.int8)) for lf in leaves}
+                prev_root = root
+                root = predicate.evaluate(full)
+                # stream newly-decided doc ids to any session observer
+                newly = prev_root == UNKNOWN
+                self._partial(np.nonzero(newly & (root == TRUE))[0],
+                              np.nonzero(newly & (root == FALSE))[0])
+
+            assert not (root == UNKNOWN).any(), \
+                "plan executed every leaf yet left documents undecided"
+        except OracleError as exc:
+            # the oracle plane gave up (retries/bisect/breaker exhausted
+            # below us). Everything decided so far is committed — caches
+            # only store *completed* leaf cascades and labels — so the
+            # degrade policies operate on a clean prefix of the plan.
+            if mode == "fail":
+                raise
+            degrade_error = exc
+            self._notify("degraded")
+            if mode == "defer":
+                unresolved = np.nonzero(root == UNKNOWN)[0]
+                with self._lock:
+                    self._repairs.append(RepairTicket(
+                        predicate=predicate,
+                        accuracy_target=accuracy_target,
+                        ground_truth=ground_truth, seed=seed,
+                        unresolved=unresolved, error=str(exc)))
+            else:  # proxy_fallback
+                root, fallback_docs = self._proxy_fallback(
+                    predicate, order, leaves, leaf_values, local_params,
+                    root, scoring_stats)
 
         total = sum(o.calls - before
                     for o, before in calls_before.values())
         result = FilterResult(
-            mask=root.astype(bool),
+            mask=(root == TRUE),
             oracle_calls_total=total,
             oracle_calls_train=sum(c for c, _ in train_info.values()),
             leaf_reports=reports,
             plan=" -> ".join(r.name for r in reports) or "(decided)",
             wall_seconds=time.time() - t0,
             n_docs=n,
-            scoring_stats=scoring_stats)
+            scoring_stats=scoring_stats,
+            degraded=degrade_error is not None,
+            degrade_mode=mode if degrade_error is not None else None,
+            unresolved=unresolved,
+            fallback_docs=fallback_docs,
+            est_accuracy_debit=self._fallback_debit(reports, fallback_docs,
+                                                    n),
+            error=str(degrade_error) if degrade_error is not None else None)
         if ground_truth is not None:
             truth = np.asarray(ground_truth).astype(bool)
             result.achieved_f1 = f1_score(result.mask, truth)
@@ -596,15 +811,27 @@ class ScaleDocEngine:
     def query(self, e_q: np.ndarray, oracle, *,
               accuracy_target: Optional[float] = None,
               ground_truth: Optional[np.ndarray] = None,
-              seed: int = 0, name: Optional[str] = None):
+              seed: int = 0, name: Optional[str] = None,
+              degrade: Optional[str] = None):
         """Single-predicate convenience; returns the pipeline-shaped
         QueryStats (kept for the ScaleDocPipeline shim and benchmarks)."""
         from repro.core.pipeline import QueryStats
         t0 = time.time()
         pred = SemanticPredicate(e_q, oracle, name=name)
         res = self.filter(pred, accuracy_target=accuracy_target,
-                          ground_truth=ground_truth, seed=seed)
-        leaf = res.leaf_reports[0]
+                          ground_truth=ground_truth, seed=seed,
+                          degrade=degrade)
+        if not res.leaf_reports:
+            # outage before the leaf completed (degrade swallowed it)
+            leaf = LeafReport(
+                name=pred.name, key=pred.key, n_pending=res.n_docs,
+                oracle_calls_train=res.oracle_calls_train,
+                oracle_calls_calib=0, oracle_calls_online=0,
+                proxy_reused=False, cascade=None,
+                pending=np.arange(res.n_docs), scores=None,
+                labels=None)
+        else:
+            leaf = res.leaf_reports[0]
         n = res.n_docs
         proxy_flops = n * oracle_mod.OUR_PROXY_FLOPS_PER_DOC
         oracle_flops = res.oracle_calls_total * getattr(
@@ -626,6 +853,11 @@ class ScaleDocEngine:
             total_flops=proxy_flops + oracle_flops,
             wall_seconds=time.time() - t0,
             scores=leaf.scores,
+            degraded=res.degraded,
+            degrade_mode=res.degrade_mode,
+            unresolved_docs=len(res.unresolved),
+            fallback_docs=res.fallback_docs,
+            est_accuracy_debit=res.est_accuracy_debit,
         )
 
 

@@ -56,6 +56,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core.oracle import OracleError
 from repro.engine.engine import FilterResult, ScaleDocEngine
 from repro.engine.executor import ScoringStats
 from repro.engine.predicate import FALSE, TRUE, UNKNOWN, Predicate
@@ -285,6 +286,7 @@ class StandingPredicate:
         self.oracle_calls_delta = 0
         self.revalidations = 0
         self.drift_trips = 0
+        self.pumps_stalled = 0              # oracle-outage non-advances
         self.calibration_oracle_calls = 0
         self.scoring_stats = ScoringStats()
         self.cancelled = False
@@ -360,6 +362,7 @@ class StandingPredicate:
                 "calibration_oracle_calls": self.calibration_oracle_calls,
                 "revalidations": self.revalidations,
                 "drift_trips": self.drift_trips,
+                "pumps_stalled": self.pumps_stalled,
                 "subscribers": len(self._subs),
                 "drift": self.drift_status(),
             }
@@ -476,11 +479,27 @@ class LiveEngine:
             n = self._refresh()
             for sp in list(self._standing.values()):
                 if sp.watermark < n:
-                    self._process_delta(sp, sp.watermark, n)
+                    try:
+                        self._process_delta(sp, sp.watermark, n)
+                    except OracleError:
+                        # oracle outage mid-delta: non-advancing pump.
+                        # _process_delta commits nothing before its
+                        # labeling completes, so the watermark is
+                        # unmoved, no batch was published, and the same
+                        # rows are retried next pump. The drift check is
+                        # skipped too — its window never saw these rows,
+                        # so an outage cannot masquerade as drift.
+                        sp.pumps_stalled += 1
+                        continue
                     if sp.drift_cfg.auto and not sp.cancelled:
                         if sp.drift_status()["triggered"]:
                             sp.drift_trips += 1
-                            self._revalidate_locked(sp, n)
+                            try:
+                                self._revalidate_locked(sp, n)
+                            except OracleError:
+                                # drift stays triggered; retried on the
+                                # next pump that advances the watermark
+                                sp.pumps_stalled += 1
             return n
 
     def revalidate(self, sp: StandingPredicate) -> DeltaBatch:
@@ -525,9 +544,12 @@ class LiveEngine:
         watermarks would serve stale full-collection entries."""
         view = self.engine.session_view()
         view.store = RangeView(self.store, 0, rows)
+        # degrade="fail" always: calibration state must come from a
+        # fully-resolved run — a deferred partial would freeze wrong
+        # decisions into sp. pump() catches the OracleError instead.
         res = view.filter(sp.predicate,
                           accuracy_target=sp.accuracy_target,
-                          seed=sp.seed)
+                          seed=sp.seed, degrade="fail")
         reports = {r.key: r for r in res.leaf_reports}
         # oracle-resolution order for delta rows = the plan order the
         # registration executed, then any leaves it short-circuited past

@@ -60,6 +60,7 @@ from typing import Dict, Mapping, Optional
 
 import numpy as np
 
+from repro.core.oracle import OracleUnavailable
 from repro.engine.predicate import WireFormatError, from_wire
 from repro.gateway.admission import TenantState, TenantTable
 from repro.serve.server import (PredicateServer, QuerySession,
@@ -108,8 +109,17 @@ class PredicateGateway:
                  oracles: Mapping[str, object], *,
                  tenants=None, embedder=None,
                  host: str = "127.0.0.1", port: int = 0,
-                 stream_timeout: float = 600.0):
+                 stream_timeout: float = 600.0,
+                 keepalive_interval: float = 15.0,
+                 reap_on_disconnect: bool = True):
         self.server = server
+        # SSE liveness: idle streams emit `: keep-alive` comment frames
+        # every keepalive_interval seconds so client read timeouts don't
+        # kill healthy-but-quiet standing subscriptions; a failed socket
+        # write reaps the subscriber (reap_on_disconnect) so dead
+        # clients release their max_in_flight slot and delta queue
+        self.keepalive_interval = keepalive_interval
+        self.reap_on_disconnect = reap_on_disconnect
         self.counters = server.counters
         self.oracles = dict(oracles)
         if isinstance(tenants, TenantTable):
@@ -161,6 +171,19 @@ class PredicateGateway:
     # -- request-level operations (handler delegates here) ---------------
 
     def submit(self, tenant: TenantState, body: Dict) -> QuerySession:
+        # breaker-open fast-fail: with degrade="fail" every session
+        # would burn a worker slot just to fail — reject at the door
+        # with the breaker's own retry horizon instead. Degrading
+        # servers (defer/proxy_fallback) keep accepting: that is what
+        # the degrade policy is *for*.
+        if self.server.degrade == "fail":
+            health = self.server.oracle_health()
+            if health["state"] == "open":
+                raise OracleUnavailable(
+                    "oracle circuit open; queries would fail — retry "
+                    "after the breaker half-opens",
+                    retry_after=health["retry_after"]
+                    or CLOSED_RETRY_AFTER, breaker_open=True)
         pred = from_wire(body["predicate"], oracles=self.oracles,
                          embedder=self.embedder)
         target = body.get("accuracy_target")
@@ -221,8 +244,23 @@ class PredicateGateway:
             else:
                 if docs == 0:
                     reason = "store is empty"
-        return {"ready": reason is None, "docs": docs,
-                **({"reason": reason} if reason else {})}
+        out = {"ready": reason is None, "docs": docs,
+               **({"reason": reason} if reason else {})}
+        if reason is not None:
+            out["state"] = "unready"
+            return out
+        # a tripped breaker or a non-empty repair queue is a *distinct*
+        # degraded state: still serving (200 — load balancers must not
+        # eject the instance; the oracle outage is global, not ours),
+        # but operators and probes can tell at a glance
+        health = self.server.oracle_health()
+        degraded = (health["state"] != "closed"
+                    or health["repair_queue"] > 0)
+        out["state"] = "degraded" if degraded else "ready"
+        if degraded:
+            out["oracle"] = health
+            out["degrade_policy"] = self.server.degrade
+        return out
 
 
 def _result_payload(session: QuerySession) -> Dict:
@@ -239,7 +277,14 @@ def _result_payload(session: QuerySession) -> Dict:
             "plan": res.plan,
             "wall_seconds": res.wall_seconds,
             "achieved_f1": res.achieved_f1,
-            "achieved_exact": res.achieved_exact}
+            "achieved_exact": res.achieved_exact,
+            "degraded": res.degraded,
+            **({"degrade_mode": res.degrade_mode,
+                "unresolved": np.asarray(res.unresolved,
+                                         np.int64).tolist(),
+                "fallback_docs": int(res.fallback_docs),
+                "est_accuracy_debit": float(res.est_accuracy_debit),
+                "error": res.error} if res.degraded else {})}
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -453,6 +498,15 @@ class _Handler(BaseHTTPRequestHandler):
                 503, {"error": str(exc),
                       "retry_after": CLOSED_RETRY_AFTER},
                 headers=_retry_header(CLOSED_RETRY_AFTER))
+        except OracleUnavailable as exc:
+            # oracle circuit open on a fail-mode server: 503 with the
+            # breaker's retry horizon — the outage is upstream of us
+            fold(counters, name, "rejected_oracle_down")
+            retry_after = exc.retry_after or CLOSED_RETRY_AFTER
+            return self._json(
+                503, {"error": str(exc), "reason": "oracle_unavailable",
+                      "retry_after": retry_after},
+                headers=_retry_header(retry_after))
         fold(counters, name, "submitted")
         self._json(202, {"id": session.id, "name": session.name,
                          "tenant": name,
@@ -494,6 +548,15 @@ class _Handler(BaseHTTPRequestHandler):
                 503, {"error": str(exc),
                       "retry_after": CLOSED_RETRY_AFTER},
                 headers=_retry_header(CLOSED_RETRY_AFTER))
+        except OracleUnavailable as exc:
+            # subclasses RuntimeError, so this arm must precede the
+            # static-deployment arm below
+            fold(counters, name, "rejected_oracle_down")
+            retry_after = exc.retry_after or CLOSED_RETRY_AFTER
+            return self._json(
+                503, {"error": str(exc), "reason": "oracle_unavailable",
+                      "retry_after": retry_after},
+                headers=_retry_header(retry_after))
         except RuntimeError as exc:
             # live collections not enabled on this server — a static
             # deployment; ServerClosed subclasses RuntimeError so this
@@ -539,9 +602,29 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.close_connection = True
         self._status = 200
+        # poll the resumable get_delta() primitive instead of
+        # iter_deltas(): an idle wait becomes a ": keep-alive" comment
+        # frame (so client read timeouts and NAT entries don't expire)
+        # rather than a dead generator, while stream_timeout still
+        # bounds the wall-clock wait for the *next real delta*
+        deadline = time.monotonic() + self.gw.stream_timeout
+        poll = max(self.gw.keepalive_interval, 0.010)
+        seen = 0
         try:
-            for delta in session.iter_deltas(
-                    timeout=self.gw.stream_timeout):
+            while True:
+                delta = session.get_delta(
+                    seen, timeout=min(poll, self.gw.stream_timeout))
+                if delta is None:
+                    if time.monotonic() >= deadline:
+                        raise TimeoutError(
+                            f"{session.name}: no delta within "
+                            f"{self.gw.stream_timeout}s")
+                    self.wfile.write(b": keep-alive\n\n")
+                    self.wfile.flush()
+                    self.gw.counters.inc("gateway_sse_keepalives")
+                    continue
+                seen += 1
+                deadline = time.monotonic() + self.gw.stream_timeout
                 event = "done" if delta.final else "delta"
                 payload = {"seq": delta.seq,
                            "accepted": np.asarray(delta.accepted,
@@ -551,6 +634,8 @@ class _Handler(BaseHTTPRequestHandler):
                            "state": session.state.value}
                 self._event(event, payload)
                 self.gw.counters.inc("gateway_sse_events")
+                if delta.final:
+                    return
         except (BrokenPipeError, ConnectionResetError):
             pass                      # client went away mid-stream
         except BaseException as exc:  # session failed / stream timed out
@@ -580,9 +665,27 @@ class _Handler(BaseHTTPRequestHandler):
         counters = self.gw.counters
         fold = self.gw.tenants.fold_counters
         name = tenant.tenant.name
+        # standing streams are long-lived and mostly idle between commit
+        # groups: emit keep-alive comment frames on idle waits, and when
+        # a *write* to the client fails, reap the subscriber — close the
+        # subscription queue (so the pump stops accumulating batches for
+        # a dead socket) and, with reap_on_disconnect, cancel the
+        # session so its max_in_flight slot frees immediately
+        deadline = time.monotonic() + self.gw.stream_timeout
+        poll = max(self.gw.keepalive_interval, 0.010)
         try:
-            for batch in session.iter_deltas(
-                    timeout=self.gw.stream_timeout):
+            while True:
+                try:
+                    batch = session.subscription.get(
+                        timeout=min(poll, self.gw.stream_timeout))
+                except TimeoutError:
+                    if time.monotonic() >= deadline:
+                        raise
+                    self.wfile.write(b": keep-alive\n\n")
+                    self.wfile.flush()
+                    counters.inc("gateway_sse_keepalives")
+                    continue
+                deadline = time.monotonic() + self.gw.stream_timeout
                 while not batch.final:   # final sentinel is admission-free
                     ok, retry_after = tenant.bucket.try_acquire()
                     if ok:
@@ -602,8 +705,15 @@ class _Handler(BaseHTTPRequestHandler):
                            "state": session.state.value}
                 self._event(event, payload)
                 counters.inc("gateway_sse_events")
-        except (BrokenPipeError, ConnectionResetError):
-            pass                      # client went away mid-stream
+                if batch.final:
+                    return
+        except (BrokenPipeError, ConnectionResetError, OSError):
+            # client socket is gone — reap so the dead subscriber can't
+            # leak its queue or hold a tenant concurrency slot
+            session.subscription.close()
+            if self.gw.reap_on_disconnect:
+                session.cancel()
+            fold(counters, name, "standing_reaped")
         except BaseException as exc:  # cancelled / stream timed out
             try:
                 self._event("error", {"error": f"{type(exc).__name__}: "

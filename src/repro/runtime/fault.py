@@ -46,7 +46,10 @@ class FailureDetector:
 
     def on_failure(self, exc: Exception, latest_ckpt: Optional[int]
                    ) -> RestartDecision:
-        now = time.time()
+        # monotonic: the restart window is pure interval math and must
+        # not widen/collapse when NTP steps the wall clock. (Metrics
+        # timestamps elsewhere stay wall-clock.)
+        now = time.monotonic()
         while self.events and now - self.events[0] > self.window_s:
             self.events.popleft()
         if not isinstance(exc, (WorkerFailure, OSError)):

@@ -7,9 +7,23 @@
 #     predicate: per-commit-group accept/reject delta batches
 #   * OracleBroker — cross-session oracle micro-batching over the
 #     engine's shared CachedOracle label caches
+#   * resilience — ChaosOracle fault injection + ResilientOracle
+#     (retry/backoff, circuit breaker, bisect-on-failure) policy layer
 from repro.serve.broker import (  # noqa: F401
     OracleBroker,
     SessionOracleHandle,
+)
+from repro.serve.resilience import (  # noqa: F401
+    BreakerConfig,
+    ChaosConfig,
+    ChaosOracle,
+    CircuitBreaker,
+    OracleError,
+    OracleFault,
+    OracleTimeout,
+    OracleUnavailable,
+    ResilientOracle,
+    RetryPolicy,
 )
 from repro.serve.server import (  # noqa: F401
     Delta,

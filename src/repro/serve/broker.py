@@ -37,7 +37,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.oracle import CachedOracle
+from repro.core.oracle import CachedOracle, OracleUnavailable
 from repro.runtime.metrics import CounterSet
 
 DEFAULT_MAX_BATCH = 32
@@ -79,10 +79,48 @@ class _OracleLane:
         (misses it enqueued itself; joins of another session's pending
         ask are free). ``wait_cm``, if given, is a zero-arg context
         manager entered around any blocking wait (the session uses it to
-        surface ORACLE_WAIT state)."""
-        need = self.cached.peek(indices)
-        if not need:
-            return 0
+        surface ORACLE_WAIT state).
+
+        Failure isolation: a flush that raises fails only the waiters of
+        that batch — each gets its *own* ``OracleUnavailable`` chained
+        via ``__cause__`` (never a shared mutated traceback), and each
+        waiter independently retries once first: bisection inside a
+        resilient lane may have cached part of the batch, and a joiner
+        should not die for a batch it merely coalesced into. The lane
+        itself stays usable for the next ask either way."""
+        charged = 0
+        last_error: Optional[BaseException] = None
+        for round_ in range(2):
+            need = self.cached.peek(indices)
+            if not need:
+                if round_:
+                    self.counters.inc("oracle_rejoin_recovered")
+                return charged
+            if round_:
+                self.counters.inc("oracle_waiter_retries")
+            got, errors = self._one_round(need, wait_cm)
+            charged += got
+            if not errors:
+                return charged
+            last_error = errors[-1]
+        still = self.cached.peek(indices)
+        if not still:
+            return charged
+        self.counters.inc("oracle_asks_failed")
+        retry_after = max((getattr(e, "retry_after", 0.0)
+                           for e in [last_error]), default=0.0)
+        # the cause travels in the message too: sessions surface errors
+        # as strings (over HTTP, in stats()), where __cause__ is lost
+        raise OracleUnavailable(
+            f"oracle lane failed for {len(still)} docs after retry "
+            f"({type(last_error).__name__}: {last_error})",
+            docs=still, retry_after=retry_after,
+            breaker_open=getattr(last_error, "breaker_open", False),
+        ) from last_error
+
+    def _one_round(self, need, wait_cm):
+        """Enqueue/join ``need``, settle, and report (charged, errors)
+        instead of raising — ``request`` owns the retry/raise policy."""
         charged = 0
         waits: List[_Batch] = []
         to_flush: Optional[_Batch] = None
@@ -124,10 +162,7 @@ class _OracleLane:
                     settle()
             else:
                 settle()
-        for batch in waits:
-            if batch.error is not None:
-                raise batch.error
-        return charged
+        return charged, [b.error for b in waits if b.error is not None]
 
     # -- flush machinery -------------------------------------------------
 
@@ -172,6 +207,8 @@ class _OracleLane:
                                   time.perf_counter() - t0)
         except BaseException as exc:
             batch.error = exc
+            self.counters.inc("oracle_batches_failed")
+            self.counters.inc("oracle_docs_failed", len(batch.docs))
         finally:
             with self._lock:
                 for doc in batch.docs:

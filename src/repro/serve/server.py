@@ -234,20 +234,31 @@ class QuerySession:
             raise self._error
         return self._result
 
+    def get_delta(self, seq: int, timeout: Optional[float] = None
+                  ) -> Optional[Delta]:
+        """Delta number ``seq``, or None if it hasn't arrived within
+        ``timeout`` — the resumable primitive under ``iter_deltas``.
+        The gateway polls this so an idle wait can emit an SSE
+        keep-alive and *continue*, which a generator that raised
+        TimeoutError could not."""
+        with self._cond:
+            while seq >= len(self._deltas):
+                if self._error is not None:
+                    raise self._error
+                if not self._cond.wait(timeout):
+                    return None
+            return self._deltas[seq]
+
     def iter_deltas(self, timeout: Optional[float] = None):
         """Yield accepted/rejected doc-id deltas as leaves resolve,
         until the final (empty, ``final=True``) delta. Safe to call
         while the session is still running."""
         seen = 0
         while True:
-            with self._cond:
-                while seen >= len(self._deltas):
-                    if self._error is not None:
-                        raise self._error
-                    if not self._cond.wait(timeout):
-                        raise TimeoutError(
-                            f"{self.name}: no delta within {timeout}s")
-                delta = self._deltas[seen]
+            delta = self.get_delta(seen, timeout)
+            if delta is None:
+                raise TimeoutError(
+                    f"{self.name}: no delta within {timeout}s")
             seen += 1
             yield delta
             if delta.final:
@@ -350,10 +361,20 @@ class PredicateServer:
                  max_batch: int = 16, max_delay: float = 0.002,
                  counters: Optional[CounterSet] = None,
                  keep_sessions: int = 1024,
-                 live: Optional[LiveEngine] = None):
+                 live: Optional[LiveEngine] = None,
+                 degrade: Optional[str] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
+        if degrade is not None and degrade not in ("fail", "defer",
+                                                   "proxy_fallback"):
+            raise ValueError(f"unknown degrade policy {degrade!r}")
         self.engine = engine
+        # oracle-outage policy applied to every session's filter():
+        # "fail" surfaces OracleUnavailable to result(); "defer" finishes
+        # sessions degraded with a repair queue (drain_repairs());
+        # "proxy_fallback" decides by proxy score, flagged. None
+        # inherits whatever policy the engine was built with.
+        self.degrade = engine.degrade if degrade is None else degrade
         # standing-predicate support: a LiveEngine over the same resident
         # engine (pass one in, or call enable_live()); None = subscribe()
         # is refused
@@ -495,9 +516,16 @@ class PredicateServer:
             try:
                 result = view.filter(
                     req.predicate, accuracy_target=req.accuracy_target,
-                    ground_truth=req.ground_truth, seed=req.seed)
+                    ground_truth=req.ground_truth, seed=req.seed,
+                    degrade=self.degrade)
                 session._finish(result)
                 self.counters.inc("sessions_done")
+                if result.degraded:
+                    self.counters.inc("sessions_degraded")
+                    self.counters.inc("docs_deferred",
+                                      len(result.unresolved))
+                    self.counters.inc("docs_fallback",
+                                      result.fallback_docs)
                 self.counters.observe(
                     "session_latency_seconds",
                     session._finished_at - session._submitted_at)
@@ -510,6 +538,55 @@ class PredicateServer:
                                   else "sessions_failed")
             finally:
                 self.counters.gauge_delta("active_sessions", -1)
+
+    # -- degraded-mode operations ------------------------------------------
+
+    def drain_repairs(self, *, block: bool = False,
+                      timeout: Optional[float] = None
+                      ) -> List[QuerySession]:
+        """Resubmit every ticket the engine parked under
+        ``degrade="defer"`` as a normal session (fresh view, same seed —
+        the post-heal replay is bitwise the fault-free run). A replay
+        that degrades again re-parks itself, so draining while the
+        oracle is still down converges to the same queue. Wire this to
+        a ``ResilientOracle(on_half_open=...)`` callback to re-drain
+        the moment a breaker lets a probe through."""
+        out: List[QuerySession] = []
+        for ticket in self.engine.take_repairs():
+            try:
+                out.append(self.submit(
+                    ticket.predicate,
+                    accuracy_target=ticket.accuracy_target,
+                    ground_truth=ticket.ground_truth, seed=ticket.seed,
+                    name=ticket.name, block=block, timeout=timeout))
+            except (ServerSaturated, ServerClosed):
+                self.engine.repark(ticket)
+                break
+        if out:
+            self.counters.inc("repairs_drained", len(out))
+        return out
+
+    def oracle_health(self) -> Dict:
+        """Aggregate circuit-breaker state across the engine's oracle
+        lanes: worst state wins (open > half_open > closed), plus the
+        longest advisory retry-after. Lanes without a resilience layer
+        count as closed."""
+        with self.engine._lock:
+            oracles = list(self.engine._oracles.values())
+        rank = {"closed": 0, "half_open": 1, "open": 2}
+        worst, retry_after, lanes = "closed", 0.0, 0
+        for o in oracles:
+            breaker = getattr(o, "breaker", None)
+            if breaker is None:
+                continue
+            lanes += 1
+            state = breaker.status()["state"]
+            if rank[state] > rank[worst]:
+                worst = state
+            retry_after = max(retry_after, breaker.retry_after())
+        return {"state": worst, "retry_after": retry_after,
+                "breaker_lanes": lanes,
+                "repair_queue": self.engine.repair_count}
 
     # -- introspection -----------------------------------------------------
 
@@ -550,6 +627,16 @@ class PredicateServer:
         }
         snap["queue"] = {"depth": self._queue.qsize(),
                          "capacity": self._queue.maxsize}
+        # resilience: per-lane retry/breaker counters (lanes wrapped in
+        # a ResilientOracle) plus the aggregate health the gateway maps
+        # to /readyz and 503 + Retry-After
+        lanes = [o.resilience_stats() for o in oracles
+                 if hasattr(o, "resilience_stats")]
+        snap["resilience"] = {
+            "degrade": self.degrade,
+            "lanes": lanes,
+            "health": self.oracle_health(),
+        }
         with self._lock:
             standing = list(self._standing)
         snap["standing"] = {

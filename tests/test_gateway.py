@@ -463,7 +463,8 @@ def test_ops_surface(corpus, cfgs):
         with PredicateGateway(server, oracles) as gw:
             client = GatewayClient(gw.url)
             assert client.health() == {"ok": True}
-            assert client.ready() == {"ready": True, "docs": N_DOCS}
+            assert client.ready() == {"ready": True, "docs": N_DOCS,
+                                      "state": "ready"}
 
             subs = [client.submit(w, seed=i)
                     for i, w in enumerate(wires)]

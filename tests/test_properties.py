@@ -233,3 +233,71 @@ def test_scores_bounded(seed, n):
     s = decision_scores(params, e_q, docs)
     assert s.shape == (n,)
     assert bool(jnp.all(s >= 0.0) and jnp.all(s <= 1.0))
+
+
+# -- resilient oracle plane ---------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       base=st.floats(1e-4, 0.5),
+       spread=st.floats(0.0, 10.0),
+       prev=st.floats(0.0, 100.0))
+def test_decorrelated_jitter_stays_within_bounds(seed, base, spread, prev):
+    """For any cap >= base and any previous delay, the next backoff
+    delay lands in [base, cap]."""
+    from repro.serve.resilience import decorrelated_jitter
+    cap = base + spread
+    rng = np.random.default_rng(seed)
+    d = prev
+    for _ in range(20):
+        d = decorrelated_jitter(rng, d, base, cap)
+        assert base <= d <= cap
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.sampled_from(["ask_ok", "ask_fail", "tick"]),
+                    min_size=1, max_size=60),
+       threshold=st.integers(1, 5))
+def test_circuit_breaker_state_machine_invariants(ops, threshold):
+    """Under any success/fail/clock-advance sequence: the state is one
+    of the three named ones; open always rejects inside the cooldown
+    and admits exactly one probe after it; `failures` is the length of
+    the current zero-success streak while closed; a success from any
+    state closes."""
+    from repro.serve.resilience import BreakerConfig, CircuitBreaker
+    clock = {"t": 0.0}
+    cfg = BreakerConfig(failure_threshold=threshold, cooldown_s=10.0)
+    breaker = CircuitBreaker(cfg, clock=lambda: clock["t"])
+    streak = 0
+    for op in ops:
+        state = breaker.status()["state"]
+        assert state in ("closed", "open", "half_open")
+        if op == "tick":
+            clock["t"] += 4.0           # < cooldown: open must hold
+            if state == "open" and \
+                    clock["t"] - breaker.opened_at < cfg.cooldown_s:
+                admitted, retry_after = breaker.allow()
+                assert not admitted and retry_after > 0
+            continue
+        admitted, retry_after = breaker.allow()
+        if not admitted:
+            assert retry_after > 0      # advisory horizon, never zero
+            continue
+        if op == "ask_ok":
+            breaker.record_success()
+            streak = 0
+            assert breaker.status() == {"state": "closed", "failures": 0,
+                                        "opens": breaker.opens}
+        else:
+            breaker.record_failure()
+            streak += 1
+            st_now = breaker.status()
+            if st_now["state"] == "closed":
+                assert st_now["failures"] < cfg.failure_threshold
+    # a closed breaker is always reachable again: heal via one success
+    clock["t"] += cfg.cooldown_s + 1.0
+    admitted, _ = breaker.allow()
+    assert admitted
+    breaker.record_success()
+    assert breaker.status()["state"] == "closed"

@@ -1,0 +1,590 @@
+"""Resilient oracle plane under injected LLM faults.
+
+The chaos acceptance gate (ISSUE 8): with ``degrade="defer"``,
+post-heal decisions are bitwise identical to a fault-free run, and no
+label is ever purchased twice across retries — pinned over all four
+paths (engine, server with concurrent clients, gateway over HTTP, live
+standing). With zero faults injected the policy layer is
+bit-transparent: identical decisions *and* identical purchase counts.
+"""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import SimulatedOracle
+from repro.core.oracle import CachedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import (DriftConfig, InMemoryStore, LiveEngine,
+                          MemmapStore, ScaleDocEngine, SemanticPredicate,
+                          StoreWriter, standing_filter)
+from repro.gateway import (GatewayClient, GatewayUnavailable,
+                           PredicateGateway)
+from repro.serve import (BreakerConfig, ChaosConfig, ChaosOracle,
+                         CircuitBreaker, OracleFault, OracleTimeout,
+                         OracleUnavailable, PredicateServer,
+                         ResilientOracle, RetryPolicy)
+
+N_DOCS, DIM = 512, 32
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(5, n_docs=N_DOCS, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    pcfg = ProxyConfig(embed_dim=DIM, hidden_dim=32, latent_dim=16,
+                       proj_dim=8, phase1_steps=10, phase2_steps=10,
+                       batch_size=32)
+    return pcfg, CascadeConfig(accuracy_target=0.85)
+
+
+def _engine(corpus, cfgs, **kw):
+    pcfg, ccfg = cfgs
+    return ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg, **kw)
+
+
+class CountingOracle:
+    """Per-doc purchase ledger around a raw oracle — the witness for
+    the no-double-purchase invariant."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.per_doc = {}
+        self._lock = threading.Lock()
+
+    @property
+    def calls(self):
+        return self.inner.calls
+
+    def label(self, indices):
+        indices = np.asarray(indices, np.int64)
+        with self._lock:
+            for i in indices:
+                self.per_doc[int(i)] = self.per_doc.get(int(i), 0) + 1
+        return self.inner.label(indices)
+
+
+FAST_RETRY = RetryPolicy(max_attempts=3, base_delay_s=0.0005,
+                         max_delay_s=0.002, deadline_s=10.0)
+FAST_BREAKER = BreakerConfig(failure_threshold=3, cooldown_s=0.05,
+                             probe_retry_after_s=0.01)
+
+
+def _resilient(truth, chaos=None, *, retry=FAST_RETRY,
+               breaker=FAST_BREAKER, seed=0, **kw):
+    """(resilient, chaos_oracle, counting) stack over a SimulatedOracle."""
+    counting = CountingOracle(SimulatedOracle(truth))
+    chaos_o = ChaosOracle(counting, chaos or ChaosConfig())
+    res = ResilientOracle(CachedOracle(chaos_o), retry=retry,
+                          breaker=breaker, seed=seed, **kw)
+    return res, chaos_o, counting
+
+
+# -- ChaosOracle -------------------------------------------------------------
+
+
+def test_chaos_schedule_is_seeded_and_interleaving_independent():
+    """The fault an invocation sees depends only on (seed, k) — two
+    replays (and a healed pass-through) agree invocation by invocation."""
+    truth = np.arange(64) % 2 == 0
+    cfg = ChaosConfig(seed=7, fail_rate=0.3, timeout_rate=0.2)
+
+    def schedule(chaos):
+        out = []
+        for _ in range(40):
+            try:
+                chaos.label([1, 2, 3])
+                out.append("ok")
+            except OracleTimeout:
+                out.append("timeout")
+            except OracleFault:
+                out.append("drop")
+        return out
+
+    a = schedule(ChaosOracle(SimulatedOracle(truth), cfg))
+    b = schedule(ChaosOracle(SimulatedOracle(truth), cfg))
+    assert a == b
+    assert "timeout" in a and "drop" in a and "ok" in a
+    # different seed, different schedule
+    c = schedule(ChaosOracle(SimulatedOracle(truth),
+                             dataclasses.replace(cfg, seed=8)))
+    assert c != a
+
+
+def test_chaos_faults_never_purchase():
+    """Faults are raised before the inner oracle runs: a failed
+    invocation buys nothing (what makes retries free of double-pay)."""
+    truth = np.ones(32, bool)
+    counting = CountingOracle(SimulatedOracle(truth))
+    chaos = ChaosOracle(counting, ChaosConfig(seed=1, fail_rate=1.0))
+    for _ in range(5):
+        with pytest.raises(OracleFault):
+            chaos.label([0, 1, 2])
+    assert counting.per_doc == {} and chaos.inner.calls == 0
+    assert chaos.faults["drop"] == 5 and chaos.invocations == 5
+    chaos.heal()
+    np.testing.assert_array_equal(chaos.label([0, 1, 2]), truth[:3])
+    assert chaos.faults["drop"] == 5    # healing stops the injection
+
+
+# -- ResilientOracle ---------------------------------------------------------
+
+
+def test_retry_rides_through_transients_without_double_purchase():
+    truth = np.arange(128) % 3 == 0
+    res, chaos, counting = _resilient(
+        truth, ChaosConfig(seed=3, fail_rate=0.35, timeout_rate=0.1))
+    for lo in range(0, 128, 16):
+        np.testing.assert_array_equal(res.label(np.arange(lo, lo + 16)),
+                                      truth[lo:lo + 16])
+    stats = res.resilience_stats()
+    assert stats["retries"] + stats["faults"] + stats["timeouts"] > 0
+    assert stats["breaker"]["state"] == "closed"
+    # every doc purchased exactly once despite the retries
+    assert set(counting.per_doc) == set(range(128))
+    assert all(v == 1 for v in counting.per_doc.values())
+    assert res.docs_purchased == 128
+
+
+def test_bisect_isolates_poison_doc():
+    """One poison doc in a 16-doc batch: the other 15 get labeled, the
+    poison id is surfaced in OracleUnavailable.docs, the lane counts as
+    alive (breaker stays closed), and the cost is O(log B)."""
+    truth = np.ones(32, bool)
+    res, chaos, counting = _resilient(
+        truth, ChaosConfig(seed=2, poison_docs=(13,)))
+    with pytest.raises(OracleUnavailable) as info:
+        res.label(np.arange(16))
+    assert list(info.value.docs) == [13]
+    assert not info.value.breaker_open
+    assert res.breaker.status()["state"] == "closed"
+    healthy = sorted(set(range(16)) - {13})
+    assert sorted(counting.per_doc) == healthy
+    assert all(v == 1 for v in counting.per_doc.values())
+    # retries at the root + one probe per bisect level, nowhere near O(B)
+    assert chaos.invocations <= 3 + 2 * 5
+    assert res.resilience_stats()["bisects"] >= 1
+    # the healthy docs are cached: relabeling them is a pure read
+    before = chaos.invocations
+    np.testing.assert_array_equal(res.label(healthy), truth[healthy])
+    assert chaos.invocations == before
+
+
+def test_blackout_fails_whole_batch_in_logarithmic_invocations():
+    truth = np.ones(64, bool)
+    res, chaos, _ = _resilient(
+        truth, ChaosConfig(seed=0, blackouts=((0, 10_000),)))
+    with pytest.raises(OracleUnavailable) as info:
+        res.label(np.arange(64))
+    assert len(info.value.docs) == 64 and info.value.retry_after > 0
+    # a fully-failing half short-circuits its sibling: the whole-batch
+    # outage costs max_attempts + O(log B) probes, not O(B)
+    assert chaos.invocations <= FAST_RETRY.max_attempts + 2 * 6 + 2
+    assert res.breaker.status()["failures"] == 1
+
+
+def test_breaker_opens_rejects_fast_probes_and_recloses():
+    clock = {"t": 0.0}
+    truth = np.ones(16, bool)
+    probes = []
+    res, chaos, counting = _resilient(
+        truth, ChaosConfig(seed=0, blackouts=((0, 10_000),)),
+        clock=lambda: clock["t"], sleep=lambda s: None,
+        on_half_open=lambda: probes.append(clock["t"]))
+    for k in range(FAST_BREAKER.failure_threshold):
+        with pytest.raises(OracleUnavailable):
+            res.label([k])
+    assert res.breaker.status() == {"state": "open", "failures": 3,
+                                    "opens": 1}
+    # open: instant reject, no invocation reaches the chaos layer
+    before = chaos.invocations
+    with pytest.raises(OracleUnavailable) as info:
+        res.label([9])
+    assert info.value.breaker_open and info.value.retry_after > 0
+    assert chaos.invocations == before
+    assert res.resilience_stats()["breaker_rejects"] == 1
+    # cooldown elapses -> half-open admits exactly one probe purchase
+    clock["t"] += FAST_BREAKER.cooldown_s + 0.01
+    chaos.heal()
+    np.testing.assert_array_equal(res.label([9]), truth[[9]])
+    assert probes == [clock["t"]]          # on_half_open fired once
+    assert res.breaker.status()["state"] == "closed"
+    assert counting.per_doc == {9: 1}
+
+
+def test_half_open_probe_failure_reopens():
+    clock = {"t": 0.0}
+    truth = np.ones(8, bool)
+    res, chaos, _ = _resilient(
+        truth, ChaosConfig(seed=0, blackouts=((0, 10_000),)),
+        clock=lambda: clock["t"], sleep=lambda s: None)
+    for k in range(3):
+        with pytest.raises(OracleUnavailable):
+            res.label([k])
+    clock["t"] += FAST_BREAKER.cooldown_s + 0.01
+    with pytest.raises(OracleUnavailable):   # probe admitted, still down
+        res.label([5])
+    assert res.breaker.status()["state"] == "open"
+    assert res.breaker.status()["opens"] == 2
+
+
+def test_cache_reads_work_while_breaker_open():
+    clock = {"t": 0.0}
+    truth = np.arange(16) % 2 == 0
+    res, chaos, _ = _resilient(truth, ChaosConfig(),
+                               clock=lambda: clock["t"],
+                               sleep=lambda s: None)
+    np.testing.assert_array_equal(res.label(np.arange(8)), truth[:8])
+    chaos.chaos = ChaosConfig(blackouts=((chaos.invocations, 10_000),))
+    for k in range(8, 11):
+        with pytest.raises(OracleUnavailable):
+            res.label([k])
+    assert res.breaker.status()["state"] == "open"
+    # already-purchased labels replay fine during the outage
+    np.testing.assert_array_equal(res.label(np.arange(8)), truth[:8])
+
+
+# -- engine degrade policies -------------------------------------------------
+
+
+def test_zero_faults_is_bit_transparent(corpus, cfgs):
+    """No injected faults: the full resilience stack produces the same
+    mask, the same purchase counts, and zero policy activity."""
+    q = make_query(corpus, 40, selectivity=0.3)
+    plain = CachedOracle(SimulatedOracle(q.truth))
+    base = _engine(corpus, cfgs).filter(
+        SemanticPredicate(q.embed, plain, name="p"), seed=4)
+
+    res, chaos, counting = _resilient(q.truth)
+    got = _engine(corpus, cfgs).filter(
+        SemanticPredicate(q.embed, res, name="p"), seed=4)
+
+    np.testing.assert_array_equal(got.mask, base.mask)
+    assert not got.degraded and got.error is None
+    assert res.purchases == plain.purchases
+    assert res.docs_purchased == plain.docs_purchased
+    assert chaos.inner.calls == plain.calls
+    stats = res.resilience_stats()
+    assert all(stats[k] == 0 for k in ("retries", "bisects", "timeouts",
+                                       "faults", "breaker_rejects",
+                                       "gave_up_docs"))
+    assert chaos.invocations == plain.purchases   # zero extra invocations
+
+
+def test_engine_defer_then_repair_matches_fault_free_run(corpus, cfgs):
+    """The acceptance gate on the engine path: a blackout mid-query
+    defers the session; after heal, repair_pending() replays it and the
+    decisions are bitwise the fault-free run — with no doc ever
+    purchased twice."""
+    q = make_query(corpus, 41, selectivity=0.3)
+    baseline = _engine(corpus, cfgs).filter(
+        SemanticPredicate(q.embed, CachedOracle(SimulatedOracle(q.truth)),
+                          name="p"), seed=6)
+
+    res, chaos, counting = _resilient(q.truth)
+    engine = _engine(corpus, cfgs, degrade="defer")
+    pred = SemanticPredicate(q.embed, res, name="p")
+    # let a few invocations through, then pull the plug until heal
+    chaos.chaos = ChaosConfig(blackouts=((2, 10_000),))
+    degraded = engine.filter(pred, seed=6)
+    assert degraded.degraded and degraded.degrade_mode == "defer"
+    assert len(degraded.unresolved) > 0
+    assert engine.repair_count == 1
+    # UNKNOWN docs are excluded from the partial mask, not accepted
+    assert not degraded.mask[degraded.unresolved].any()
+
+    chaos.heal()
+    time.sleep(FAST_BREAKER.cooldown_s + 0.02)   # let the breaker probe
+    repaired = engine.repair_pending()
+    assert len(repaired) == 1 and engine.repair_count == 0
+    healed = repaired[0]
+    assert not healed.degraded
+    np.testing.assert_array_equal(healed.mask, baseline.mask)
+    assert all(v == 1 for v in counting.per_doc.values())
+
+
+def test_repair_while_still_down_reparks(corpus, cfgs):
+    q = make_query(corpus, 42, selectivity=0.3)
+    res, chaos, _ = _resilient(
+        q.truth, ChaosConfig(blackouts=((0, 10_000),)))
+    engine = _engine(corpus, cfgs, degrade="defer")
+    pred = SemanticPredicate(q.embed, res, name="p")
+    degraded = engine.filter(pred, seed=1)
+    assert degraded.degraded and engine.repair_count == 1
+    out = engine.repair_pending()            # oracle still dark
+    assert out[0].degraded and engine.repair_count == 1   # re-parked
+
+
+def test_engine_proxy_fallback_decides_everything(corpus, cfgs):
+    q = make_query(corpus, 43, selectivity=0.3)
+    res, chaos, _ = _resilient(q.truth, ChaosConfig(blackouts=((2, 10_000),)))
+    engine = _engine(corpus, cfgs)
+    got = engine.filter(SemanticPredicate(q.embed, res, name="p"),
+                        seed=2, degrade="proxy_fallback")
+    assert got.degraded and got.degrade_mode == "proxy_fallback"
+    assert got.fallback_docs > 0 and len(got.unresolved) == 0
+    assert got.mask.dtype == bool and got.mask.shape == (N_DOCS,)
+    assert 0.0 < got.est_accuracy_debit <= 1.0
+    # proxy-only decisions still beat coin-flips on an easy query
+    agree = float(np.mean(got.mask == q.truth))
+    assert agree > 0.6
+
+
+# -- server path -------------------------------------------------------------
+
+
+def test_server_defer_concurrent_clients_then_drain_parity(corpus, cfgs):
+    """4 concurrent sessions over a chaotic oracle plane on a
+    degrade="defer" server: every session finishes (some degraded),
+    drain_repairs() replays the parked ones after heal, and every final
+    mask is bitwise the fault-free baseline."""
+    qs = [make_query(corpus, 60 + i, selectivity=0.3) for i in range(4)]
+    baselines = []
+    for i, q in enumerate(qs):
+        baselines.append(_engine(corpus, cfgs).filter(
+            SemanticPredicate(q.embed, CachedOracle(
+                SimulatedOracle(q.truth)), name=f"p{i}"), seed=i).mask)
+
+    stacks = [_resilient(q.truth, ChaosConfig(
+        seed=9 + i, blackouts=((2, 10_000),))) for i, q in enumerate(qs)]
+    preds = [SemanticPredicate(qs[i].embed, stacks[i][0], name=f"p{i}")
+             for i in range(4)]
+    engine = _engine(corpus, cfgs)
+    with PredicateServer(engine, workers=4, degrade="defer") as server:
+        sessions = [server.submit(p, seed=i) for i, p in enumerate(preds)]
+        results = {s.id: s.result(timeout=300) for s in sessions}
+        degraded_ids = [s.id for s in sessions if results[s.id].degraded]
+        assert degraded_ids, "chaos schedule produced no degradation"
+        snap = server.metrics_snapshot()
+        assert snap["counters"]["sessions_degraded"] == len(degraded_ids)
+        assert snap["resilience"]["degrade"] == "defer"
+        assert snap["resilience"]["health"]["repair_queue"] == \
+            len(degraded_ids)
+
+        for _, chaos, _ in stacks:
+            chaos.heal()
+        time.sleep(FAST_BREAKER.cooldown_s + 0.02)
+        repairs = server.drain_repairs(block=True, timeout=60)
+        assert len(repairs) == len(degraded_ids)
+        for s in repairs:
+            res = s.result(timeout=300)
+            assert not res.degraded
+            results[s.id] = res
+        assert engine.repair_count == 0
+        assert server.metrics_snapshot()["counters"][
+            "repairs_drained"] == len(degraded_ids)
+
+    # parity: whichever session decided a predicate last, bit for bit
+    final = {preds[i]: results[sessions[i].id] for i in range(4)}
+    for s in repairs:
+        final[s.request.predicate] = results[s.id]
+    for i in range(4):
+        np.testing.assert_array_equal(final[preds[i]].mask, baselines[i])
+        _, _, counting = stacks[i]
+        assert all(v == 1 for v in counting.per_doc.values())
+
+
+# -- gateway path ------------------------------------------------------------
+
+
+def test_gateway_maps_breaker_open_to_503_and_degraded_readyz(corpus, cfgs):
+    q = make_query(corpus, 70, selectivity=0.3)
+    res, chaos, _ = _resilient(
+        q.truth, ChaosConfig(blackouts=((0, 10_000),)),
+        breaker=BreakerConfig(failure_threshold=1, cooldown_s=30.0))
+    oracles = {"o": res}
+    pred = SemanticPredicate(q.embed, res, name="p")
+    wire = pred.to_wire(oracles)
+    engine = _engine(corpus, cfgs)
+    with PredicateServer(engine, workers=2) as server:     # degrade=fail
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            assert client.ready()["state"] == "ready"
+            # first query runs, fails, and opens the breaker
+            first = client.submit(wire, seed=0)
+            with pytest.raises(Exception):
+                client.wait(first["id"], timeout=300)
+            assert server.oracle_health()["state"] == "open"
+            # now the gateway sheds at the front door: 503 + Retry-After
+            with pytest.raises(GatewayUnavailable) as info:
+                client.submit(wire, seed=1)
+            assert info.value.retry_after > 0
+            ready = client.ready()
+            assert ready["ready"] and ready["state"] == "degraded"
+            assert ready["oracle"]["state"] == "open"
+            snap = client.metrics()
+            lanes = snap["resilience"]["lanes"]
+            assert lanes and lanes[0]["breaker"]["state"] == "open"
+            assert snap["counters"][
+                "tenant.public.rejected_oracle_down"] >= 1
+
+
+def test_gateway_defer_reports_degraded_result_payload(corpus, cfgs):
+    q = make_query(corpus, 71, selectivity=0.3)
+    res, chaos, _ = _resilient(q.truth, ChaosConfig(blackouts=((2, 10_000),)))
+    oracles = {"o": res}
+    wire = SemanticPredicate(q.embed, res, name="p").to_wire(oracles)
+    engine = _engine(corpus, cfgs)
+    with PredicateServer(engine, workers=2, degrade="defer") as server:
+        with PredicateGateway(server, oracles) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.submit(wire, seed=0)
+            out = client.wait(sub["id"], timeout=300)
+            assert out["degraded"] and out["degrade_mode"] == "defer"
+            assert out["unresolved"] and out["fallback_docs"] == 0
+            # a deferred server stays in rotation but reports degraded
+            assert client.ready()["state"] == "degraded"
+            assert client.ready()["oracle"]["repair_queue"] == 1
+
+
+def _read_sse_until(resp, marker: bytes, deadline: float):
+    buf = b""
+    while time.monotonic() < deadline:
+        chunk = resp.read1(4096)
+        if not chunk:
+            break
+        buf += chunk
+        if marker in buf:
+            return buf
+    return buf
+
+
+def test_standing_sse_keepalive_and_reap(corpus, cfgs, tmp_path):
+    """A quiet standing stream emits ': keep-alive' comment frames, and
+    a vanished subscriber is reaped: its queue closes and (with
+    reap_on_disconnect) its session is cancelled, freeing the slot."""
+    import http.client as http_client
+    pcfg, ccfg = cfgs
+    writer = StoreWriter.open(str(tmp_path), dim=DIM,
+                              fingerprint={"model": "chaos-live"})
+    writer.append(corpus.embeds[:400])
+    writer.commit()
+    store = MemmapStore.open(str(tmp_path))
+    q = make_query(corpus, 72, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    pred = SemanticPredicate(q.embed, cached, name="st")
+    engine = ScaleDocEngine(store, pcfg, ccfg, chunk=128)
+    with PredicateServer(engine, workers=2) as server:
+        server.enable_live(drift=DriftConfig(auto=False))
+        with PredicateGateway(server, oracles,
+                              keepalive_interval=0.05) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.subscribe_standing(pred, oracles=oracles, seed=0)
+            conn = http_client.HTTPConnection(gw.host, gw.port,
+                                              timeout=30)
+            conn.request("GET", f"/v1/standing/{sub['id']}/deltas")
+            resp = conn.getresponse()
+            assert resp.status == 200
+            buf = _read_sse_until(resp, b": keep-alive",
+                                  time.monotonic() + 5.0)
+            assert b": keep-alive" in buf     # idle stream stays warm
+            # hard-close the socket; the reaper notices on a failed write
+            resp.close()
+            conn.close()
+            session = server.get_session(sub["id"])
+            deadline = time.monotonic() + 10.0
+            while not session.done() and time.monotonic() < deadline:
+                time.sleep(0.05)
+            assert session.done()             # reaped -> cancelled
+            snap = client.metrics()["counters"]
+            assert snap["gateway_sse_keepalives"] >= 1
+            assert snap["tenant.public.standing_reaped"] == 1
+    writer.close()
+
+
+def test_query_sse_emits_keepalives_on_slow_session(corpus, cfgs):
+    """The per-query SSE stream also stays warm: with a short keepalive
+    interval, an oracle slower than the interval yields comment frames
+    between real deltas."""
+    import http.client as http_client
+
+    q = make_query(corpus, 73, selectivity=0.3)
+
+    class Slow:
+        calls = 0
+
+        def __init__(self, truth):
+            self._truth = np.asarray(truth, bool)
+
+        def label(self, idx):
+            time.sleep(0.15)
+            idx = np.asarray(idx, np.int64)
+            self.calls += len(idx)
+            return self._truth[idx]
+
+    cached = CachedOracle(Slow(q.truth))
+    oracles = {"o": cached}
+    wire = SemanticPredicate(q.embed, cached, name="p").to_wire(oracles)
+    with PredicateServer(_engine(corpus, cfgs), workers=2) as server:
+        with PredicateGateway(server, oracles,
+                              keepalive_interval=0.05) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.submit(wire, seed=0)
+            conn = http_client.HTTPConnection(gw.host, gw.port,
+                                              timeout=120)
+            conn.request("GET", f"/v1/queries/{sub['id']}/deltas")
+            resp = conn.getresponse()
+            buf = _read_sse_until(resp, b"event: done",
+                                  time.monotonic() + 300.0)
+            conn.close()
+            assert b"event: done" in buf
+            assert b": keep-alive" in buf
+            # comment frames are invisible to the SSE client parser
+            deltas = list(client.iter_deltas(sub["id"], timeout=60))
+            assert deltas[-1]["final"]
+
+
+# -- live standing path ------------------------------------------------------
+
+
+def test_live_pump_stalls_without_advancing_then_heals(corpus, cfgs,
+                                                       tmp_path):
+    """An oracle outage makes pump() a non-advancing no-op: watermark
+    unmoved, nothing published, pumps_stalled counts. After heal the
+    same rows land and decisions are bitwise the one-shot reference."""
+    pcfg, ccfg = cfgs
+    w0 = 256
+    writer = StoreWriter.open(str(tmp_path), dim=DIM,
+                              fingerprint={"model": "chaos-live2"})
+    writer.append(corpus.embeds[:w0])
+    writer.commit()
+    q = make_query(corpus, 74, selectivity=0.3)
+    res, chaos, counting = _resilient(q.truth)
+    pred = SemanticPredicate(q.embed, res, name="st")
+    live = LiveEngine(MemmapStore.open(str(tmp_path)), pcfg, ccfg,
+                      chunk=64, drift=DriftConfig(auto=False))
+    sp = live.register(pred, seed=3)
+    assert sp.watermark == w0
+    sub = sp.subscribe()
+
+    writer.append(corpus.embeds[w0:384])
+    writer.commit()
+    chaos.chaos = ChaosConfig(blackouts=((chaos.invocations, 10_000),))
+    for _ in range(4):                    # outage: every pump stalls
+        live.pump()
+        assert sp.watermark == w0         # non-advancing: rows re-tried
+    assert sp.pumps_stalled == 4
+    assert sub._q.empty()                 # no partial batch escaped
+
+    chaos.heal()
+    time.sleep(FAST_BREAKER.cooldown_s + 0.02)
+    live.pump()
+    assert sp.watermark == 384            # the stalled rows landed
+    writer.append(corpus.embeds[384:])
+    writer.commit()
+    live.pump()
+    writer.close()
+    assert sp.watermark == N_DOCS
+
+    ref = standing_filter(MemmapStore.open(str(tmp_path)), SemanticPredicate(
+        q.embed, CachedOracle(SimulatedOracle(q.truth)), name="st"),
+        seed=3, calib_rows=w0, proxy_cfg=pcfg, cascade_cfg=ccfg, chunk=64)
+    np.testing.assert_array_equal(sp.decisions, ref.decisions)
+    assert all(v == 1 for v in counting.per_doc.values())

@@ -14,9 +14,9 @@ from repro.data import make_corpus, make_query
 from repro.engine import (DriftConfig, InMemoryStore, MemmapStore,
                           ScaleDocEngine, SemanticPredicate, StoreWriter)
 from repro.runtime.metrics import CounterSet
-from repro.serve import (OracleBroker, PredicateServer, ServerClosed,
-                         ServerSaturated, SessionState, StandingSession,
-                         StandingState)
+from repro.serve import (OracleBroker, OracleUnavailable, PredicateServer,
+                         ServerClosed, ServerSaturated, SessionState,
+                         StandingSession, StandingState)
 
 N_DOCS, DIM = 800, 32
 
@@ -160,8 +160,61 @@ def test_broker_propagates_oracle_errors():
 
     broker = OracleBroker(max_batch=4, max_delay=0.001)
     handle = broker.wrap_for()(CachedOracle(Boom()))
-    with pytest.raises(RuntimeError, match="oracle down"):
+    with pytest.raises(OracleUnavailable) as info:
         handle.label([0, 1, 2, 3])
+    # the waiter gets its own exception, chained to the lane's root cause
+    assert "oracle down" in str(info.value.__cause__)
+    assert sorted(info.value.docs) == [0, 1, 2, 3]
+
+
+def test_broker_isolates_failures_per_waiter():
+    """Two sessions coalesced into one failing ask each get their *own*
+    OracleUnavailable (distinct objects, distinct tracebacks) chained to
+    the root cause, and the lane stays usable afterwards."""
+    class Flaky:
+        calls = 0
+        fail = True
+
+        def __init__(self, truth):
+            self._truth = np.asarray(truth, bool)
+
+        def label(self, idx):
+            if self.fail:
+                raise RuntimeError("transient lane fault")
+            idx = np.asarray(idx, np.int64)
+            self.calls += len(idx)
+            return self._truth[idx]
+
+    truth = np.arange(16) % 2 == 0
+    flaky = Flaky(truth)
+    cached = CachedOracle(flaky)
+    broker = OracleBroker(max_batch=16, max_delay=0.05)
+    h1, h2 = broker.wrap_for()(cached), broker.wrap_for()(cached)
+    errors, lock = [], threading.Lock()
+
+    def ask(handle, idx):
+        try:
+            handle.label(idx)
+        except OracleUnavailable as exc:
+            with lock:
+                errors.append(exc)
+
+    threads = [threading.Thread(target=ask, args=(h1, [0, 1, 2, 3])),
+               threading.Thread(target=ask, args=(h2, [2, 3, 4, 5]))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(errors) == 2
+    assert errors[0] is not errors[1]          # never a shared object
+    for exc in errors:
+        assert isinstance(exc.__cause__, RuntimeError)
+        assert "transient lane fault" in str(exc.__cause__)
+    # no stranded pending docs, and the lane serves the next ask fine
+    assert not broker.lane(cached)._pending
+    flaky.fail = False
+    np.testing.assert_array_equal(h1.label([0, 1, 2, 3]), truth[:4])
+    assert broker.counters.snapshot()["counters"]["oracle_asks_failed"] >= 1
 
 
 # -- server lifecycle --------------------------------------------------------
@@ -245,8 +298,10 @@ def test_failed_session_reports_and_server_survives(corpus, cfgs):
     engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
     with PredicateServer(engine, workers=1) as server:
         bad = server.submit(SemanticPredicate(q.embed, BadOracle()), seed=0)
-        with pytest.raises(ValueError, match="labeler exploded"):
+        with pytest.raises(OracleUnavailable) as info:
             bad.result(timeout=300)
+        assert isinstance(info.value.__cause__, ValueError)
+        assert "labeler exploded" in str(info.value.__cause__)
         assert bad.state == SessionState.FAILED
         # the worker survives a failed session and serves the next one
         good = server.submit(
