@@ -387,7 +387,7 @@ class ScaleDocEngine:
             out.append(view.filter(
                 ticket.predicate, accuracy_target=ticket.accuracy_target,
                 ground_truth=ticket.ground_truth, seed=ticket.seed,
-                degrade="defer"))
+                degrade="defer", name=ticket.name))
         return out
 
     def clear_caches(self) -> None:
@@ -674,7 +674,8 @@ class ScaleDocEngine:
                accuracy_target: Optional[float] = None,
                ground_truth: Optional[np.ndarray] = None,
                seed: int = 0,
-               degrade: Optional[str] = None) -> FilterResult:
+               degrade: Optional[str] = None,
+               name: Optional[str] = None) -> FilterResult:
         """Evaluate a (possibly composed) predicate over the collection.
 
         Returns a boolean mask over all documents plus full per-leaf
@@ -688,6 +689,8 @@ class ScaleDocEngine:
         ``RepairTicket`` parked for post-heal replay), and
         ``"proxy_fallback"`` decides the remaining docs by proxy score
         alone (flagged via ``fallback_docs``/``est_accuracy_debit``).
+        ``name`` carries the caller's query/session identity onto any
+        parked ``RepairTicket`` so post-heal replays stay traceable.
         """
         if not isinstance(predicate, Predicate):
             raise TypeError("predicate must be a repro.engine Predicate; "
@@ -777,7 +780,8 @@ class ScaleDocEngine:
                         predicate=predicate,
                         accuracy_target=accuracy_target,
                         ground_truth=ground_truth, seed=seed,
-                        unresolved=unresolved, error=str(exc)))
+                        unresolved=unresolved, error=str(exc),
+                        name=name))
             else:  # proxy_fallback
                 root, fallback_docs = self._proxy_fallback(
                     predicate, order, leaves, leaf_values, local_params,

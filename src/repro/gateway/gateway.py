@@ -263,6 +263,12 @@ class PredicateGateway:
         return out
 
 
+# degraded defer results can leave most of a large collection
+# unresolved; the JSON payload carries a count plus a bounded sample of
+# ids, never the full O(n_docs) list (the repair queue holds the truth)
+UNRESOLVED_SAMPLE_CAP = 64
+
+
 def _result_payload(session: QuerySession) -> Dict:
     res = session._result
     mask = res.mask
@@ -280,8 +286,10 @@ def _result_payload(session: QuerySession) -> Dict:
             "achieved_exact": res.achieved_exact,
             "degraded": res.degraded,
             **({"degrade_mode": res.degrade_mode,
-                "unresolved": np.asarray(res.unresolved,
-                                         np.int64).tolist(),
+                "unresolved_count": int(len(res.unresolved)),
+                "unresolved_sample": np.asarray(
+                    res.unresolved,
+                    np.int64)[:UNRESOLVED_SAMPLE_CAP].tolist(),
                 "fallback_docs": int(res.fallback_docs),
                 "est_accuracy_debit": float(res.est_accuracy_debit),
                 "error": res.error} if res.degraded else {})}
@@ -667,10 +675,12 @@ class _Handler(BaseHTTPRequestHandler):
         name = tenant.tenant.name
         # standing streams are long-lived and mostly idle between commit
         # groups: emit keep-alive comment frames on idle waits, and when
-        # a *write* to the client fails, reap the subscriber — close the
-        # subscription queue (so the pump stops accumulating batches for
-        # a dead socket) and, with reap_on_disconnect, cancel the
-        # session so its max_in_flight slot frees immediately
+        # a write shows the client is *gone* (broken pipe / reset), reap
+        # the subscriber — close the subscription queue (so the pump
+        # stops accumulating batches for a dead socket) and, with
+        # reap_on_disconnect, cancel the session so its max_in_flight
+        # slot frees immediately. Stream deadlines and transient write
+        # errors end only this stream; the subscription survives them
         deadline = time.monotonic() + self.gw.stream_timeout
         poll = max(self.gw.keepalive_interval, 0.010)
         try:
@@ -707,14 +717,29 @@ class _Handler(BaseHTTPRequestHandler):
                 counters.inc("gateway_sse_events")
                 if batch.final:
                     return
-        except (BrokenPipeError, ConnectionResetError, OSError):
+        except TimeoutError as exc:
+            # stream deadline: the subscriber is healthy, just quiet —
+            # tell it and let it reconnect; never reap (TimeoutError IS
+            # an OSError, so this arm must precede the disconnect arms)
+            try:
+                self._event("error", {"error": f"{type(exc).__name__}: "
+                                               f"{exc}",
+                                      "state": session.state.value})
+            except OSError:
+                pass
+        except (BrokenPipeError, ConnectionResetError):
             # client socket is gone — reap so the dead subscriber can't
             # leak its queue or hold a tenant concurrency slot
             session.subscription.close()
             if self.gw.reap_on_disconnect:
                 session.cancel()
             fold(counters, name, "standing_reaped")
-        except BaseException as exc:  # cancelled / stream timed out
+        except OSError:
+            # transient write failure (e.g. EAGAIN on a slow client):
+            # end this stream but keep the subscription and session
+            # alive so the client can reconnect and resume
+            pass
+        except BaseException as exc:  # cancelled / session failed
             try:
                 self._event("error", {"error": f"{type(exc).__name__}: "
                                                f"{exc}",

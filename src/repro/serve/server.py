@@ -517,7 +517,7 @@ class PredicateServer:
                 result = view.filter(
                     req.predicate, accuracy_target=req.accuracy_target,
                     ground_truth=req.ground_truth, seed=req.seed,
-                    degrade=self.degrade)
+                    degrade=self.degrade, name=session.name)
                 session._finish(result)
                 self.counters.inc("sessions_done")
                 if result.degraded:
@@ -552,7 +552,8 @@ class PredicateServer:
         a ``ResilientOracle(on_half_open=...)`` callback to re-drain
         the moment a breaker lets a probe through."""
         out: List[QuerySession] = []
-        for ticket in self.engine.take_repairs():
+        tickets = self.engine.take_repairs()
+        for i, ticket in enumerate(tickets):
             try:
                 out.append(self.submit(
                     ticket.predicate,
@@ -560,7 +561,11 @@ class PredicateServer:
                     ground_truth=ticket.ground_truth, seed=ticket.seed,
                     name=ticket.name, block=block, timeout=timeout))
             except (ServerSaturated, ServerClosed):
-                self.engine.repark(ticket)
+                # take_repairs() popped every ticket: repark the one
+                # that failed admission AND all still-unsubmitted ones,
+                # or the defer contract's replay promise is broken
+                for unsubmitted in tickets[i:]:
+                    self.engine.repark(unsubmitted)
                 break
         if out:
             self.counters.inc("repairs_drained", len(out))

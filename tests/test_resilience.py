@@ -19,8 +19,8 @@ from repro.core import SimulatedOracle
 from repro.core.oracle import CachedOracle
 from repro.data import make_corpus, make_query
 from repro.engine import (DriftConfig, InMemoryStore, LiveEngine,
-                          MemmapStore, ScaleDocEngine, SemanticPredicate,
-                          StoreWriter, standing_filter)
+                          MemmapStore, RepairTicket, ScaleDocEngine,
+                          SemanticPredicate, StoreWriter, standing_filter)
 from repro.gateway import (GatewayClient, GatewayUnavailable,
                            PredicateGateway)
 from repro.serve import (BreakerConfig, ChaosConfig, ChaosOracle,
@@ -315,10 +315,15 @@ def test_repair_while_still_down_reparks(corpus, cfgs):
         q.truth, ChaosConfig(blackouts=((0, 10_000),)))
     engine = _engine(corpus, cfgs, degrade="defer")
     pred = SemanticPredicate(q.embed, res, name="p")
-    degraded = engine.filter(pred, seed=1)
+    degraded = engine.filter(pred, seed=1, name="sticky")
     assert degraded.degraded and engine.repair_count == 1
     out = engine.repair_pending()            # oracle still dark
     assert out[0].degraded and engine.repair_count == 1   # re-parked
+    # the caller's query name rides the ticket through re-park cycles
+    ticket = engine.take_repairs()[0]
+    assert ticket.name == "sticky"
+    engine.repark(ticket)
+    assert engine.repair_count == 1
 
 
 def test_engine_proxy_fallback_decides_everything(corpus, cfgs):
@@ -372,6 +377,9 @@ def test_server_defer_concurrent_clients_then_drain_parity(corpus, cfgs):
         time.sleep(FAST_BREAKER.cooldown_s + 0.02)
         repairs = server.drain_repairs(block=True, timeout=60)
         assert len(repairs) == len(degraded_ids)
+        # replays keep the original sessions' identity (ticket.name)
+        assert ({s.name for s in repairs}
+                == {s.name for s in sessions if s.id in degraded_ids})
         for s in repairs:
             res = s.result(timeout=300)
             assert not res.degraded
@@ -388,6 +396,57 @@ def test_server_defer_concurrent_clients_then_drain_parity(corpus, cfgs):
         np.testing.assert_array_equal(final[preds[i]].mask, baselines[i])
         _, _, counting = stacks[i]
         assert all(v == 1 for v in counting.per_doc.values())
+
+
+def test_drain_repairs_saturated_reparks_every_popped_ticket(corpus, cfgs):
+    """take_repairs() pops the whole queue, so a drain that hits
+    admission limits must repark the failed ticket AND every
+    still-unsubmitted one — none may be silently dropped."""
+    qs = [make_query(corpus, 80 + i, selectivity=0.3) for i in range(3)]
+    engine = _engine(corpus, cfgs, degrade="defer")
+    for i, q in enumerate(qs):
+        engine.repark(RepairTicket(
+            predicate=SemanticPredicate(
+                q.embed, CachedOracle(SimulatedOracle(q.truth)),
+                name=f"r{i}"),
+            accuracy_target=None, ground_truth=None, seed=i,
+            unresolved=np.zeros(0, np.int64), error="injected",
+            name=f"r{i}"))
+    assert engine.repair_count == 3
+
+    gate = threading.Event()
+    started = threading.Event()
+
+    class Blocking:
+        calls = 0
+
+        def label(self, idx):
+            started.set()
+            gate.wait()
+            idx = np.asarray(idx, np.int64)
+            self.calls += len(idx)
+            return np.zeros(len(idx), bool)
+
+    blocker = SemanticPredicate(qs[0].embed, CachedOracle(Blocking()),
+                                name="blocker")
+    with PredicateServer(engine, workers=1, queue_depth=1,
+                         degrade="defer") as server:
+        running = server.submit(blocker, seed=99)   # pins the worker
+        assert started.wait(timeout=60)
+        filler = server.submit(blocker, seed=98)    # fills the queue
+        drained = server.drain_repairs()            # ServerSaturated
+        assert drained == []
+        assert engine.repair_count == 3             # nothing dropped
+        assert {t.name for t in engine._repairs} == {"r0", "r1", "r2"}
+        gate.set()
+        running.result(timeout=300)
+        filler.result(timeout=300)
+        # with the queue free again the same tickets all drain
+        repairs = server.drain_repairs(block=True, timeout=60)
+        assert {s.name for s in repairs} == {"r0", "r1", "r2"}
+        for s in repairs:
+            assert not s.result(timeout=300).degraded
+        assert engine.repair_count == 0
 
 
 # -- gateway path ------------------------------------------------------------
@@ -437,7 +496,13 @@ def test_gateway_defer_reports_degraded_result_payload(corpus, cfgs):
             sub = client.submit(wire, seed=0)
             out = client.wait(sub["id"], timeout=300)
             assert out["degraded"] and out["degrade_mode"] == "defer"
-            assert out["unresolved"] and out["fallback_docs"] == 0
+            # the payload carries a count + bounded sample, never the
+            # full O(n_docs) unresolved id list
+            assert out["unresolved_count"] > 0
+            assert out["fallback_docs"] == 0
+            assert 0 < len(out["unresolved_sample"]) <= 64
+            assert len(out["unresolved_sample"]) == min(
+                out["unresolved_count"], 64)
             # a deferred server stays in rotation but reports degraded
             assert client.ready()["state"] == "degraded"
             assert client.ready()["oracle"]["repair_queue"] == 1
@@ -496,6 +561,60 @@ def test_standing_sse_keepalive_and_reap(corpus, cfgs, tmp_path):
             snap = client.metrics()["counters"]
             assert snap["gateway_sse_keepalives"] >= 1
             assert snap["tenant.public.standing_reaped"] == 1
+    writer.close()
+
+
+def test_standing_sse_timeout_errors_without_reaping(corpus, cfgs,
+                                                     tmp_path):
+    """A stream deadline on a healthy-but-quiet standing subscriber
+    emits an 'error' SSE event and ends only that stream: the session
+    must NOT be cancelled or counted standing_reaped (TimeoutError is
+    an OSError, so it must not fall into the disconnect-reap arm), and
+    the client can reconnect to the same subscription."""
+    import http.client as http_client
+    pcfg, ccfg = cfgs
+    writer = StoreWriter.open(str(tmp_path), dim=DIM,
+                              fingerprint={"model": "quiet-live"})
+    writer.append(corpus.embeds[:400])
+    writer.commit()
+    store = MemmapStore.open(str(tmp_path))
+    q = make_query(corpus, 74, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    oracles = {"o": cached}
+    pred = SemanticPredicate(q.embed, cached, name="qt")
+    engine = ScaleDocEngine(store, pcfg, ccfg, chunk=128)
+    with PredicateServer(engine, workers=2) as server:
+        server.enable_live(drift=DriftConfig(auto=False))
+        with PredicateGateway(server, oracles,
+                              keepalive_interval=0.05,
+                              stream_timeout=0.4) as gw:
+            client = GatewayClient(gw.url)
+            sub = client.subscribe_standing(pred, oracles=oracles, seed=0)
+            conn = http_client.HTTPConnection(gw.host, gw.port,
+                                              timeout=30)
+            conn.request("GET", f"/v1/standing/{sub['id']}/deltas")
+            resp = conn.getresponse()
+            assert resp.status == 200
+            buf = _read_sse_until(resp, b"event: error",
+                                  time.monotonic() + 10.0)
+            assert b"event: error" in buf
+            assert b"TimeoutError" in buf
+            conn.close()
+            session = server.get_session(sub["id"])
+            assert not session.done()          # alive, never cancelled
+            snap = client.metrics()["counters"]
+            assert snap.get("tenant.public.standing_reaped", 0) == 0
+            # the subscription survived the timed-out stream: a
+            # reconnect streams (and stays warm) from the same queue
+            conn2 = http_client.HTTPConnection(gw.host, gw.port,
+                                               timeout=30)
+            conn2.request("GET", f"/v1/standing/{sub['id']}/deltas")
+            resp2 = conn2.getresponse()
+            assert resp2.status == 200
+            buf2 = _read_sse_until(resp2, b": keep-alive",
+                                   time.monotonic() + 5.0)
+            assert b": keep-alive" in buf2
+            conn2.close()
     writer.close()
 
 
