@@ -1,0 +1,184 @@
+"""Cross-query optimizer benchmark: shared-leaf CSE + semantic top-k.
+
+Concurrent predicate workloads share structure — different compound
+queries referencing the *same* semantic leaf. Per-session execution
+pays each leaf's proxy training and full-collection scoring once per
+session; the ``QueryOptimizer`` pays once per unique leaf, fleet-wide,
+without changing a single decision. This suite drives an identical
+shared-leaf workload through ``PredicateServer`` twice per concurrency
+level — once with CSE on, once through the counting-only
+``QueryOptimizer(cse=False)`` arm — and runs ``SemanticTopK`` against
+its filter-then-sort baseline. Reported rows:
+
+  optimizer/train_passes_c{1,4,8}  proxy train passes CSE vs isolated
+  optimizer/oracle_docs_c{1,4,8}   oracle docs purchased CSE vs isolated
+  optimizer/cse_parity             gate: CSE masks bitwise == isolated
+                                   at every level AND docs <= isolated
+                                   AND fewer train passes at c >= 4
+  optimizer/topk_oracle_docs       top-k walk vs full filter purchase
+  optimizer/topk_parity            gate: top-k winners are a subset of
+                                   the filter's accepted set, |set| == k
+
+``--smoke`` shrinks the workload for CI; ``--json PATH`` writes rows +
+derived metrics (default BENCH_optimizer.json).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core.oracle import CachedOracle, SimulatedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import (InMemoryStore, QueryOptimizer, ScaleDocEngine,
+                          SemanticPredicate, SemanticTopK)
+from repro.serve import PredicateServer
+
+
+def _workload(smoke: bool):
+    if smoke:
+        n_docs, dim = 1200, 32
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=64, latent_dim=32,
+                           proj_dim=16, phase1_steps=30, phase2_steps=30)
+    else:
+        n_docs, dim = 4000, 64
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=128, latent_dim=64,
+                           proj_dim=32, phase1_steps=60, phase2_steps=60)
+    corpus = make_corpus(0, n_docs=n_docs, dim=dim)
+    queries = [make_query(corpus, 100 + j, selectivity=s)
+               for j, s in enumerate((0.25, 0.35, 0.45))]
+    return corpus, queries, pcfg, CascadeConfig(accuracy_target=0.9)
+
+
+def _shared_requests(queries, n):
+    """n concurrent compound requests over 3 unique leaves — every
+    request beyond the first shares at least one leaf with another.
+    Oracles are rebuilt per call so every arm pays from scratch."""
+    oracles = [SimulatedOracle(q.truth) for q in queries]
+    a, b, c = [SemanticPredicate(q.embed, CachedOracle(o), name=f"L{j}")
+               for j, (q, o) in enumerate(zip(queries, oracles))]
+    menu = [a, a & ~b, a | b, b & c, a & c, b, c | a, ~c]
+    return oracles, menu[:n]
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    corpus, queries, pcfg, ccfg = _workload(smoke)
+    embeds = corpus.embeds
+
+    # warmup: compile the train/score programs outside every count
+    w_oracles, w_preds = _shared_requests(queries, 1)
+    ScaleDocEngine(InMemoryStore(embeds), pcfg, ccfg).filter(
+        w_preds[0], seed=0)
+
+    derived = {"smoke": smoke, "n_docs": len(embeds)}
+    parity_ok, savings_ok = True, True
+    for clients in (1, 4, 8):
+        arms = {}
+        for label, opt in (("cse", QueryOptimizer()),
+                           ("iso", QueryOptimizer(cse=False))):
+            oracles, preds = _shared_requests(queries, clients)
+            engine = ScaleDocEngine(InMemoryStore(embeds), pcfg, ccfg)
+            with PredicateServer(engine, workers=min(clients, 4),
+                                 queue_depth=clients,
+                                 optimizer=opt) as server:
+                results = server.run(preds, seeds=[0] * clients)
+            snap = server.metrics_snapshot()["optimizer"]
+            arms[label] = {
+                "masks": [r.mask for r in results],
+                "docs": sum(o.calls for o in oracles),
+                "trained": snap["proxies_trained"],
+                "hits": snap["artifact_hits"] + snap["proxy_hits"],
+            }
+        cse, iso = arms["cse"], arms["iso"]
+        level_parity = all(np.array_equal(m, n)
+                           for m, n in zip(cse["masks"], iso["masks"]))
+        parity_ok &= level_parity
+        savings_ok &= cse["docs"] <= iso["docs"]
+        if clients >= 4:
+            savings_ok &= cse["trained"] < iso["trained"]
+        rows.add(f"optimizer/train_passes_c{clients}", 0.0,
+                 f"cse={cse['trained']};iso={iso['trained']};"
+                 f"saved={iso['trained'] - cse['trained']};"
+                 f"hits={cse['hits']}")
+        rows.add(f"optimizer/oracle_docs_c{clients}", 0.0,
+                 f"cse={cse['docs']};iso={iso['docs']};"
+                 f"saved={iso['docs'] - cse['docs']};"
+                 f"parity={level_parity}")
+        derived[f"train_passes_cse_c{clients}"] = cse["trained"]
+        derived[f"train_passes_iso_c{clients}"] = iso["trained"]
+        derived[f"oracle_docs_cse_c{clients}"] = cse["docs"]
+        derived[f"oracle_docs_iso_c{clients}"] = iso["docs"]
+        derived[f"parity_c{clients}"] = level_parity
+
+    rows.add("optimizer/cse_parity",
+             0.0 if (parity_ok and savings_ok) else 1.0,
+             f"bitwise={parity_ok};savings={savings_ok}")
+    if not parity_ok:
+        raise AssertionError("CSE masks diverged from the isolated arm")
+    if not savings_ok:
+        raise AssertionError("CSE bought more labels or failed to save "
+                             "train passes on the shared-leaf workload")
+
+    # -- top-k vs filter-then-sort ---------------------------------------
+    k = 10 if smoke else 25
+    q1, q2 = queries[0], queries[1]
+
+    def _child(name_prefix):
+        o1, o2 = SimulatedOracle(q1.truth), SimulatedOracle(q2.truth)
+        pred = (SemanticPredicate(q1.embed, CachedOracle(o1),
+                                  name=f"{name_prefix}a")
+                & ~SemanticPredicate(q2.embed, CachedOracle(o2),
+                                     name=f"{name_prefix}b"))
+        return (o1, o2), pred
+
+    f_oracles, f_pred = _child("f")
+    full = ScaleDocEngine(InMemoryStore(embeds), pcfg, ccfg).filter(
+        f_pred, seed=0)
+    filter_docs = sum(o.calls for o in f_oracles)
+
+    t_oracles, t_pred = _child("t")
+    topk = ScaleDocEngine(InMemoryStore(embeds), pcfg, ccfg).filter(
+        SemanticTopK(t_pred, k=k), seed=0)
+    topk_docs = sum(o.calls for o in t_oracles)
+
+    winners = np.flatnonzero(topk.mask)
+    topk_parity = bool(full.mask[winners].all()) and len(winners) <= k
+    topk_saved = filter_docs - topk_docs
+    rows.add("optimizer/topk_oracle_docs", 0.0,
+             f"topk={topk_docs};filter={filter_docs};"
+             f"saved={topk_saved};k={k};winners={len(winners)}")
+    rows.add("optimizer/topk_parity",
+             0.0 if (topk_parity and topk_saved >= 0) else 1.0,
+             f"subset={topk_parity};saved={topk_saved}")
+    derived.update(topk_k=k, topk_oracle_docs=topk_docs,
+                   filter_oracle_docs=filter_docs,
+                   topk_docs_saved=topk_saved, topk_parity=topk_parity)
+    if not topk_parity:
+        raise AssertionError("top-k winners are not a subset of the "
+                             "filter's accepted set")
+    if topk_saved < 0:
+        raise AssertionError("top-k purchased more oracle docs than the "
+                             "filter-then-sort baseline")
+    return derived
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="small workload (the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_optimizer.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,9 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablation, bench_calibration, bench_cascade,
                             bench_compound, bench_gateway, bench_ingest,
-                            bench_kernels, bench_live, bench_resilience,
-                            bench_serve, bench_thresholds, bench_tradeoff,
-                            bench_training)
+                            bench_kernels, bench_live, bench_optimizer,
+                            bench_resilience, bench_serve, bench_thresholds,
+                            bench_tradeoff, bench_training)
     from benchmarks.common import Rows
 
     parser = argparse.ArgumentParser()
@@ -36,6 +36,7 @@ def main() -> None:
         ("gateway (HTTP/SSE service plane)", bench_gateway.run),
         ("live (standing predicates, delta vs rescan)", bench_live.run),
         ("resilience (faulty oracle plane)", bench_resilience.run),
+        ("optimizer (shared-leaf CSE + top-k)", bench_optimizer.run),
     ]
     rows = Rows()
     timings = {}

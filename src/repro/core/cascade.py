@@ -33,6 +33,24 @@ class CascadeResult:
     certified: Optional[bool] = None
 
 
+@dataclasses.dataclass
+class ThresholdSpec:
+    """The calibration half of a threshold cascade: everything needed to
+    decide any document later — thresholds, the labeled calibration
+    sample (whose purchased labels the band resolution reuses), and the
+    selection's quality estimates. Splitting this out of ``run_cascade``
+    lets the engine calibrate a leaf once over the full collection and
+    resolve only the ambiguous-band documents each query actually
+    needs (repro.engine.optimizer shares the spec across sessions)."""
+    l: float
+    r: float
+    sample_idx: np.ndarray
+    sample_labels: np.ndarray
+    est_accuracy: float
+    oracle_calls_calib: int
+    certified: Optional[bool] = None
+
+
 def f1_score(pred: np.ndarray, truth: np.ndarray) -> float:
     pred = pred.astype(bool)
     truth = truth.astype(bool)
@@ -69,15 +87,16 @@ def resolve_ambiguous_band(scores: np.ndarray, l: float, r: float, oracle,
     return labels, ambiguous, len(need)
 
 
-def run_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
-                ground_truth: Optional[np.ndarray] = None,
-                rng: Optional[np.random.Generator] = None) -> CascadeResult:
-    """scores: (N,) proxy decision scores in [0, 1]; ``oracle.label(idx)``
-    returns binary labels (and counts its own invocations)."""
+def calibrate_thresholds(scores: np.ndarray, oracle, cfg: CascadeConfig,
+                         rng: Optional[np.random.Generator] = None
+                         ) -> ThresholdSpec:
+    """Calibrate + select thresholds over the full score vector — the
+    oracle-sampling half of ``run_cascade``, with the band resolution
+    left to the caller. Consumes ``rng`` in exactly the order
+    ``run_cascade`` does, so composing it with
+    ``resolve_ambiguous_band`` reproduces ``run_cascade`` bitwise."""
     rng = rng or np.random.default_rng(cfg.seed)
-    n = len(scores)
     calls_before = oracle.calls
-
     calib = calib_mod.calibrate(scores, oracle.label, cfg, rng)
     calib_calls = oracle.calls - calls_before
 
@@ -95,21 +114,36 @@ def run_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
         sel = thr_mod.select_thresholds(calib, cfg.accuracy_target,
                                         metric=cfg.metric, margin=margin)
 
-    labels, ambiguous, online_calls = resolve_ambiguous_band(
-        scores, sel.l, sel.r, oracle, calib.sample_idx, calib.sample_labels)
-
     guarantee = check_guarantee(scores[calib.sample_idx],
                                 calib.sample_labels, sel.l, sel.r,
                                 cfg.accuracy_target, cfg.delta)
+    return ThresholdSpec(
+        l=sel.l, r=sel.r, sample_idx=calib.sample_idx,
+        sample_labels=calib.sample_labels, est_accuracy=sel.est_accuracy,
+        oracle_calls_calib=calib_calls, certified=guarantee.certified)
+
+
+def run_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
+                ground_truth: Optional[np.ndarray] = None,
+                rng: Optional[np.random.Generator] = None) -> CascadeResult:
+    """scores: (N,) proxy decision scores in [0, 1]; ``oracle.label(idx)``
+    returns binary labels (and counts its own invocations)."""
+    n = len(scores)
+    spec = calibrate_thresholds(scores, oracle, cfg, rng)
+
+    labels, ambiguous, online_calls = resolve_ambiguous_band(
+        scores, spec.l, spec.r, oracle, spec.sample_idx,
+        spec.sample_labels)
 
     result = CascadeResult(
-        labels=labels, l=sel.l, r=sel.r,
+        labels=labels, l=spec.l, r=spec.r,
         unfiltered_rate=float(ambiguous.mean()),
         oracle_calls_online=online_calls,
-        oracle_calls_calib=calib_calls,
-        est_accuracy=sel.est_accuracy,
-        data_reduction=1.0 - (online_calls + calib_calls) / max(n, 1),
-        certified=guarantee.certified,
+        oracle_calls_calib=spec.oracle_calls_calib,
+        est_accuracy=spec.est_accuracy,
+        data_reduction=1.0 - (online_calls + spec.oracle_calls_calib)
+        / max(n, 1),
+        certified=spec.certified,
     )
     if ground_truth is not None:
         truth = np.asarray(ground_truth).astype(bool)
@@ -120,11 +154,11 @@ def run_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
 
 # -- baseline cascade strategies for §6.5 ------------------------------------
 
-def naive_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
-                  ground_truth=None) -> CascadeResult:
-    """'Naive': thresholds straight from the raw sampled empirical
-    distributions (no jitter / smoothing / stratification)."""
-    rng = np.random.default_rng(cfg.seed)
+def naive_thresholds(scores: np.ndarray, oracle, cfg: CascadeConfig,
+                     rng: Optional[np.random.Generator] = None
+                     ) -> ThresholdSpec:
+    """Calibration half of ``naive_cascade`` (raw empirical densities)."""
+    rng = rng or np.random.default_rng(cfg.seed)
     n = len(scores)
     idx = rng.choice(n, size=max(int(cfg.calib_fraction * n), 8),
                      replace=False)
@@ -139,8 +173,19 @@ def naive_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
                                   sample_labels=labels_s)
     sel = thr_mod.select_thresholds(calib, cfg.accuracy_target,
                                     metric=cfg.metric)
-    return _finish(scores, oracle, sel, calib_calls, idx, labels_s,
-                   ground_truth)
+    return ThresholdSpec(l=sel.l, r=sel.r, sample_idx=idx,
+                         sample_labels=labels_s,
+                         est_accuracy=sel.est_accuracy,
+                         oracle_calls_calib=calib_calls)
+
+
+def naive_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
+                  ground_truth=None) -> CascadeResult:
+    """'Naive': thresholds straight from the raw sampled empirical
+    distributions (no jitter / smoothing / stratification)."""
+    spec = naive_thresholds(scores, oracle, cfg)
+    return _finish(scores, oracle, spec, spec.oracle_calls_calib,
+                   spec.sample_idx, spec.sample_labels, ground_truth)
 
 
 def probe_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
@@ -185,12 +230,11 @@ def probe_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
     return result
 
 
-def supg_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
-                 ground_truth=None) -> CascadeResult:
-    """SUPG-style (importance-sampled) threshold selection [Kang'20],
-    approximated: importance sample ∝ sqrt(score) for recall-target-like
-    behaviour, then select thresholds on the weighted empirical CDF."""
-    rng = np.random.default_rng(cfg.seed)
+def supg_thresholds(scores: np.ndarray, oracle, cfg: CascadeConfig,
+                    rng: Optional[np.random.Generator] = None
+                    ) -> ThresholdSpec:
+    """Calibration half of ``supg_cascade`` (importance-weighted CDF)."""
+    rng = rng or np.random.default_rng(cfg.seed)
     n = len(scores)
     m = max(int(cfg.calib_fraction * n), 8)
     w = np.sqrt(np.clip(scores, 1e-3, None))
@@ -210,7 +254,20 @@ def supg_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
                                   sample_idx=idx, sample_labels=labels_s)
     sel = thr_mod.select_thresholds(calib, cfg.accuracy_target,
                                     metric=cfg.metric)
-    return _finish(scores, oracle, sel, m, idx, labels_s, ground_truth)
+    return ThresholdSpec(l=sel.l, r=sel.r, sample_idx=idx,
+                         sample_labels=labels_s,
+                         est_accuracy=sel.est_accuracy,
+                         oracle_calls_calib=m)
+
+
+def supg_cascade(scores: np.ndarray, oracle, cfg: CascadeConfig,
+                 ground_truth=None) -> CascadeResult:
+    """SUPG-style (importance-sampled) threshold selection [Kang'20],
+    approximated: importance sample ∝ sqrt(score) for recall-target-like
+    behaviour, then select thresholds on the weighted empirical CDF."""
+    spec = supg_thresholds(scores, oracle, cfg)
+    return _finish(scores, oracle, spec, spec.oracle_calls_calib,
+                   spec.sample_idx, spec.sample_labels, ground_truth)
 
 
 def _finish(scores, oracle, sel, calib_calls, sample_idx, sample_labels,

@@ -7,6 +7,9 @@
 #   * ScoringExecutor — sharded, double-buffered scoring hot path
 #   * LiveEngine / StandingPredicate — continuous queries over an open
 #     store: delta-only scoring per commit group + drift re-validation
+#   * QueryOptimizer / SelectivityStats — cross-session shared-leaf CSE
+#     and measured-beats-estimated plan ordering
+#   * SemanticTopK — k best-scoring documents satisfying a predicate
 #   * cascade-strategy registry — scaledoc | naive | probe | supg
 from repro.engine.engine import (  # noqa: F401
     FilterResult,
@@ -37,6 +40,11 @@ from repro.engine.live import (  # noqa: F401
     StandingPredicate,
     Subscription,
 )
+from repro.engine.optimizer import (  # noqa: F401
+    LeafArtifact,
+    QueryOptimizer,
+    SelectivityStats,
+)
 from repro.engine.predicate import (  # noqa: F401
     And,
     from_wire,
@@ -44,11 +52,14 @@ from repro.engine.predicate import (  # noqa: F401
     Or,
     Predicate,
     SemanticPredicate,
+    SemanticTopK,
     WireFormatError,
 )
 from repro.engine.registry import (  # noqa: F401
     available_strategies,
+    get_calibrator,
     get_strategy,
+    register_calibrator,
     register_strategy,
 )
 from repro.engine.store import (  # noqa: F401

@@ -18,15 +18,17 @@ state across queries:
     (QUEST-style compound-predicate optimization);
   * proxy training is collect-then-batch: every leaf that still needs a
     proxy gets its labeled sample drawn from the full collection up
-    front, and all of them train in ONE compiled device program
+    front, and groups of them train per compiled device program
     (``train_proxy_multi``: the scanned trainer vmapped over leaves —
-    mirroring ``score_collection_multi`` on the scoring side). Training
-    on full-collection samples also makes every trained proxy
-    unconditioned, hence safe to reuse across queries (PR-2 could only
-    cache the first leaf's). ``batch_training=False`` falls back to
-    sequential per-leaf ``train_proxy`` calls over the same samples and
-    keys, which produces identical decisions — batching is purely a
-    performance transform;
+    mirroring ``score_collection_multi`` on the scoring side). Every
+    dispatch is padded to the fixed ``TRAIN_BATCH_PAD`` shape, which
+    makes trained params a pure function of ``(leaf, seed)`` — the
+    property cross-session proxy sharing (repro.engine.optimizer) and
+    batched-vs-sequential parity both rest on. Training on
+    full-collection samples also makes every trained proxy
+    unconditioned, hence safe to reuse across queries.
+    ``batch_training=False`` dispatches one leaf per (still padded)
+    program — bitwise-identical params, just more dispatches;
   * the planning pass scores *all* leaves' query vectors in one
     streaming pass over the store (one fused multi-query pass via the
     executor).
@@ -58,16 +60,34 @@ from repro.config.base import CascadeConfig, ProxyConfig, replace
 from repro.core import oracle as oracle_mod
 from repro.core.cascade import CascadeResult, f1_score
 from repro.core.oracle import CachedOracle, OracleError
-from repro.core.trainer import train_proxy, train_proxy_multi, unstack_params
+from repro.core.trainer import train_proxy_multi, unstack_params
 from repro.engine.executor import ScoringExecutor, ScoringStats
-from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, Not, Predicate,
-                                    SemanticPredicate)
-from repro.engine.registry import get_strategy
+from repro.engine.optimizer import (LeafArtifact, QueryOptimizer,
+                                    SelectivityStats)
+from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, And, Not, Or,
+                                    Predicate, SemanticPredicate,
+                                    SemanticTopK)
+from repro.engine.registry import get_calibrator, get_strategy
 from repro.engine.store import DocumentStore, InMemoryStore, as_store
 
-# below this many pending documents the cascade machinery (calibration
-# sample, threshold selection) costs more than it saves — label directly
+# below this many documents in the COLLECTION the cascade machinery
+# (calibration sample, threshold selection) costs more than it saves —
+# label pending docs directly. Keyed to the collection size, not the
+# pending-set size, so a document's decision stays a pure function of
+# (leaf, strategy, config, seed) regardless of plan position — the
+# canonical-evaluation property cross-session CSE relies on
+# (docs/optimizer.md).
 DIRECT_LABEL_CUTOFF = 64
+
+# every leaf-proxy training dispatch is padded to this batch shape.
+# vmapped training is bitwise invariant to sibling VALUES and batch
+# POSITION but not to batch SIZE (XLA tiles differently per shape), so
+# one fixed shape is what makes trained params a pure function of
+# (leaf, seed) — independent of which leaves happened to co-train.
+# Cross-session proxy sharing (repro.engine.optimizer) and the
+# batched-vs-sequential parity contract both rest on this; a bonus is
+# that every training call ever compiles exactly one program.
+TRAIN_BATCH_PAD = 4
 
 
 class _PendingView:
@@ -199,7 +219,8 @@ class ScaleDocEngine:
                  chunk: int = 8192, mesh=None,
                  executor: Optional[ScoringExecutor] = None,
                  batch_training: bool = True,
-                 degrade: str = "fail"):
+                 degrade: str = "fail",
+                 optimizer: Optional[QueryOptimizer] = None):
         self.store: DocumentStore = as_store(store)
         proxy_cfg = proxy_cfg or ProxyConfig()
         self.proxy_cfg = replace(proxy_cfg, embed_dim=self.store.dim)
@@ -226,11 +247,17 @@ class ScaleDocEngine:
         self._repairs: List[RepairTicket] = []
         self._oracles: Dict[int, CachedOracle] = {}
         self._proxies: Dict[str, Dict] = {}      # leaf.key -> params
-        self._sel_est: Dict[str, float] = {}     # measured selectivity
-        # full-collection leaf decisions, keyed by
+        # cross-query optimizer (shared caches + single-flight): None =
+        # this engine/session evaluates every leaf itself
+        self._optimizer = optimizer
+        # per-leaf selectivity table feeding plan ordering; with an
+        # optimizer attached it is the server-owned shared instance
+        self._selstats: SelectivityStats = (
+            optimizer.stats if optimizer is not None else SelectivityStats())
+        # canonical full-collection leaf artifacts, keyed by
         # (leaf.key, strategy, cascade cfg, seed): repeating a predicate
         # under identical settings re-buys nothing
-        self._decisions: Dict[tuple, tuple] = {}
+        self._decisions: Dict[tuple, LeafArtifact] = {}
         # cache mutations are lock-scoped so concurrent filter() calls
         # (or concurrent session views sharing _oracles) stay safe;
         # session views copy the reference, so one lock guards them all
@@ -278,8 +305,9 @@ class ScaleDocEngine:
     # -- session views (online serving) ----------------------------------
 
     def session_view(self, *, oracle_wrap: Optional[Callable] = None,
-                     observer=None,
-                     share_caches: bool = False) -> "ScaleDocEngine":
+                     observer=None, share_caches: bool = False,
+                     optimizer: Optional[QueryOptimizer] = None
+                     ) -> "ScaleDocEngine":
         """A lightweight per-session view over this engine.
 
         The view shares the resident store, executor, configs, lock and
@@ -298,14 +326,25 @@ class ScaleDocEngine:
         there). ``observer`` receives ``on_phase(name)`` and
         ``on_partial(accepted_ids, rejected_ids)`` callbacks from
         ``filter()``.
+
+        ``optimizer`` attaches a server-owned ``QueryOptimizer``: the
+        view resolves trained proxies and leaf artifacts through its
+        shared single-flight caches (cross-session CSE) and reads/writes
+        the shared ``SelectivityStats``. Because every shared value is a
+        pure function of its key, attaching an optimizer changes cost,
+        never decisions (docs/optimizer.md).
         """
         view = copy.copy(self)
         view._oracle_wrap = oracle_wrap
         view._observer = observer
+        if optimizer is not None:
+            view._optimizer = optimizer
         if not share_caches:
             view._proxies = {}
-            view._sel_est = {}
             view._decisions = {}
+            view._selstats = (view._optimizer.stats
+                              if view._optimizer is not None
+                              else SelectivityStats())
         return view
 
     def _notify(self, phase: str) -> None:
@@ -400,8 +439,8 @@ class ScaleDocEngine:
         with self._lock:
             self._oracles.clear()
             self._proxies.clear()
-            self._sel_est.clear()
             self._decisions.clear()
+        self._selstats.clear()
 
     # -- planning -------------------------------------------------------
 
@@ -409,21 +448,26 @@ class ScaleDocEngine:
                                 stats: ScoringStats) -> Dict[str, float]:
         """Per-leaf positive-rate estimates for plan ordering only.
 
-        Leaves executed before (this or any past query) use their
-        measured selectivity. The rest are estimated oracle-free in one
-        streaming pass over the store: trained cached proxies give
-        calibrated bipolar scores (count > 0.5); untrained leaves fall
-        back to min-max-normalized raw cosine mass — a skew heuristic,
-        not a calibrated rate, but ordering is all it feeds.
+        Leaves with a *measured* selectivity in the stats table (their
+        leaf artifact completed — this session or, with a shared
+        optimizer, any session) use it; measured always beats estimated.
+        The rest are estimated oracle-free in one streaming pass over
+        the store: trained cached proxies give calibrated bipolar scores
+        (count > 0.5); untrained leaves fall back to min-max-normalized
+        raw cosine mass — a skew heuristic, not a calibrated rate, but
+        ordering is all it feeds. Heuristic estimates are published to
+        the stats table at the ``estimated`` level for observability;
+        planning never reads them back (each planner recomputes its
+        own), so plan order depends only on measured values.
         """
         est: Dict[str, float] = {}
         jobs, job_leaves = [], []
         with self._lock:
-            sel_snapshot = dict(self._sel_est)
             proxies_snapshot = dict(self._proxies)
         for leaf in leaves:
-            if leaf.key in sel_snapshot:
-                est[leaf.key] = sel_snapshot[leaf.key]
+            measured = self._selstats.get(leaf.key, measured_only=True)
+            if measured is not None:
+                est[leaf.key] = measured
             else:
                 jobs.append((proxies_snapshot.get(leaf.key), leaf.e_q))
                 job_leaves.append(leaf)
@@ -438,41 +482,74 @@ class ScaleDocEngine:
                     span = float(s.max() - s.min())
                     est[leaf.key] = (float(np.mean((s - s.min()) / span))
                                      if span > 0 else 0.5)
+                self._selstats.observe(leaf.key, est[leaf.key],
+                                       measured=False, name=leaf.name)
         return est
+
+    # -- per-leaf determinism (canonical evaluation) ---------------------
+
+    @staticmethod
+    def _leaf_fingerprint(leaf: SemanticPredicate) -> int:
+        """Integer fingerprint of the leaf's *query embedding* — the
+        sha1 half of ``leaf.key`` only. The ``id(oracle)`` half is
+        excluded on purpose: two runs evaluating the same embedding
+        against freshly constructed oracle objects must derive the same
+        RNG streams, or decisions could not be compared across runs."""
+        return int(leaf.key.split(":")[0], 16)
+
+    def _train_rng(self, seed: int, leaf: SemanticPredicate
+                   ) -> np.random.Generator:
+        """Training-sample stream: a pure function of (seed, embedding),
+        independent of plan position and of every other leaf."""
+        return np.random.default_rng((seed, self._leaf_fingerprint(leaf)))
+
+    def _calib_rng(self, seed: int, leaf: SemanticPredicate
+                   ) -> np.random.Generator:
+        """Calibration stream — derived separately from the training
+        stream (trailing 1) so a cached-proxy hit, which skips the
+        training draw, cannot shift calibration sampling."""
+        return np.random.default_rng(
+            (seed, self._leaf_fingerprint(leaf), 1))
+
+    def _train_key(self, seed: int, leaf: SemanticPredicate):
+        fp = self._leaf_fingerprint(leaf) & 0x7FFFFFFF
+        return jax.random.fold_in(jax.random.PRNGKey(seed), fp)
 
     # -- proxy training (collect-then-batch) ----------------------------
 
-    @staticmethod
-    def _train_key(seed: int, ordinal: int):
-        key = jax.random.PRNGKey(seed)
-        return jax.random.fold_in(key, ordinal) if ordinal else key
-
     def _train_pending_leaves(self, order: List[SemanticPredicate],
                               ccfg: CascadeConfig,
-                              rng: np.random.Generator,
                               seed: int) -> Dict[str, tuple]:
         """Train every leaf of the plan that still needs a proxy — in ONE
         compiled program when more than one does.
 
-        Labeled samples are drawn from the full collection (in plan
-        order, so the rng stream is identical whether training is batched
-        or sequential), then handed to ``train_proxy_multi``. Returns
-        ``(info, local_params)``: ``info`` maps ``leaf.key ->
+        Each leaf's labeled sample and jax key derive purely from
+        ``(seed, leaf fingerprint)``, so the trained params are a pure
+        function of ``(leaf, seed)`` — independent of plan position,
+        batching, and which session trains them. That is what lets the
+        ``QueryOptimizer`` share one train pass across sessions without
+        changing any session's decisions: single-flight claims are taken
+        per missing proxy, this call batch-trains the leaves it owns,
+        publishes them, and only then joins foreign flights (publishing
+        before waiting is what makes the flights deadlock-free).
+
+        Returns ``(info, local_params)``: ``info`` maps ``leaf.key ->
         (oracle_calls_train, proxy_reused)`` for leaf reports, and
         ``local_params`` pins the exact params this filter() call will
-        score with — concurrent sessions may overwrite the shared proxy
-        cache mid-flight, but never what *this* call already resolved.
-        Leaves with a cached proxy or cached decisions, and tiny
-        collections that direct-label, skip training entirely.
+        score with. Leaves with a cached proxy, a cached artifact, and
+        tiny collections that direct-label, skip training entirely.
         """
         n = len(self.store)
         info: Dict[str, tuple] = {}
         local_params: Dict[str, Dict] = {}
-        jobs = []
+        opt = self._optimizer
+        jobs: List[SemanticPredicate] = []
+        waits: List[tuple] = []             # (leaf, foreign flight)
+        claimed: List[SemanticPredicate] = []
         with self._lock:
             proxies_snapshot = dict(self._proxies)
             decision_keys = set(self._decisions)
-        for ordinal, leaf in enumerate(order):
+        for leaf in order:
             reused = leaf.key in proxies_snapshot
             dkey = (leaf.key, self.strategy, ccfg, seed)
             if reused:
@@ -481,68 +558,129 @@ class ScaleDocEngine:
                     or n <= DIRECT_LABEL_CUTOFF):
                 info[leaf.key] = (0, reused)
                 continue
-            jobs.append((ordinal, leaf))
+            if opt is not None:
+                if opt.has_artifact(dkey):
+                    # the full leaf evaluation already exists — scoring
+                    # params are never needed
+                    info[leaf.key] = (0, True)
+                    continue
+                kind, val = opt.claim_proxy(leaf.key, seed)
+                if kind == "hit":
+                    local_params[leaf.key] = val
+                    info[leaf.key] = (0, True)
+                    continue
+                if kind == "wait":
+                    waits.append((leaf, val))
+                    continue
+                claimed.append(leaf)
+            jobs.append(leaf)
         keys, samples, labels = [], [], []
-        for ordinal, leaf in jobs:
-            oracle = self._session_oracle(leaf.oracle)
-            calls0 = oracle.calls
-            n_train = min(max(int(self.proxy_cfg.train_fraction * n), 16),
-                          n)
-            train_idx = rng.choice(n, size=n_train, replace=False)
-            keys.append(self._train_key(seed, ordinal))
-            samples.append(self.store.get(train_idx))
-            labels.append(oracle.label(train_idx))
-            info[leaf.key] = (oracle.calls - calls0, False)
-        if len(jobs) > 1 and self.batch_training:
-            res = train_proxy_multi(
-                keys, np.stack([leaf.e_q for _, leaf in jobs]), samples,
-                labels, self.proxy_cfg)
-            trained = list(zip(jobs, unstack_params(res.params)))
-        else:
-            trained = [((ordinal, leaf),
-                        train_proxy(key, leaf.e_q, sample, y,
-                                    self.proxy_cfg).params)
-                       for (ordinal, leaf), key, sample, y
-                       in zip(jobs, keys, samples, labels)]
+        try:
+            for leaf in jobs:
+                oracle = self._session_oracle(leaf.oracle)
+                calls0 = oracle.calls
+                n_train = min(max(int(self.proxy_cfg.train_fraction * n),
+                                  16), n)
+                train_idx = self._train_rng(seed, leaf).choice(
+                    n, size=n_train, replace=False)
+                keys.append(self._train_key(seed, leaf))
+                samples.append(self.store.get(train_idx))
+                labels.append(oracle.label(train_idx))
+                info[leaf.key] = (oracle.calls - calls0, False)
+            # batched mode groups up to TRAIN_BATCH_PAD leaves per
+            # dispatch; sequential mode dispatches one leaf at a time.
+            # Both run the SAME padded program shape, so the resulting
+            # params are bitwise identical either way.
+            step = (min(len(jobs), TRAIN_BATCH_PAD)
+                    if self.batch_training else 1) or 1
+            trained = []
+            for i in range(0, len(jobs), step):
+                chunk = jobs[i:i + step]
+                params_list = self._train_padded(
+                    keys[i:i + step], [lf.e_q for lf in chunk],
+                    samples[i:i + step], labels[i:i + step])
+                trained.extend(zip(chunk, params_list))
+        except BaseException as exc:
+            if opt is not None:
+                for leaf in claimed:
+                    opt.abort_proxy(leaf.key, seed, exc)
+            raise
         with self._lock:
-            for (_, leaf), params in trained:
+            for leaf, params in trained:
                 local_params[leaf.key] = params
                 self._proxies[leaf.key] = params
+        if opt is not None:
+            for leaf, params in trained:
+                opt.publish_proxy(leaf.key, seed, params)
+            for leaf, flight in waits:
+                params = opt.wait(flight)
+                if params is None:
+                    # owner aborted or timed out: compute locally — the
+                    # result is the same pure function of (leaf, seed)
+                    params = self._train_leaf_local(leaf, seed, n, info)
+                    opt.publish_proxy(leaf.key, seed, params)
+                else:
+                    info[leaf.key] = (0, True)
+                with self._lock:
+                    local_params[leaf.key] = params
+                    self._proxies[leaf.key] = params
         return info, local_params
 
-    # -- leaf execution --------------------------------------------------
+    def _train_padded(self, keys, e_qs, samples, labels) -> List[Dict]:
+        """Train up to TRAIN_BATCH_PAD leaves through the one canonical
+        program shape: real jobs padded with inert dummies so every
+        dispatch compiles (and tiles) identically. Dummy slots cost
+        device FLOPs, never oracle labels, and are sliced off."""
+        k = len(keys)
+        if k > TRAIN_BATCH_PAD:
+            raise ValueError(f"at most {TRAIN_BATCH_PAD} jobs per "
+                             f"training dispatch, got {k}")
+        n_train, dim = samples[0].shape
+        npad = TRAIN_BATCH_PAD - k
+        keys = list(keys) + [jax.random.PRNGKey(0)] * npad
+        e_qs = list(e_qs) + [np.zeros(dim, np.float32)] * npad
+        samples = list(samples) + [np.zeros((n_train, dim),
+                                            np.float32)] * npad
+        # mixed dummy labels keep the padded slots' loss well-posed
+        labels = list(labels) + [np.arange(n_train) % 2 == 0] * npad
+        res = train_proxy_multi(keys, np.stack(e_qs), samples, labels,
+                                self.proxy_cfg)
+        return unstack_params(res.params)[:k]
+
+    def _train_leaf_local(self, leaf: SemanticPredicate, seed: int,
+                          n: int, info: Dict[str, tuple]) -> Dict:
+        """Single-leaf training — the waiter fallback when a foreign
+        proxy flight dies. Same sample, same key, same padded program,
+        hence bitwise the same params the dead owner would have built."""
+        oracle = self._session_oracle(leaf.oracle)
+        calls0 = oracle.calls
+        n_train = min(max(int(self.proxy_cfg.train_fraction * n), 16), n)
+        idx = self._train_rng(seed, leaf).choice(n, size=n_train,
+                                                 replace=False)
+        y = oracle.label(idx)
+        params = self._train_padded(
+            [self._train_key(seed, leaf)], [leaf.e_q],
+            [self.store.get(idx)], [y])[0]
+        info[leaf.key] = (oracle.calls - calls0, False)
+        return params
+
+    # -- leaf execution (canonical artifacts + lazy resolution) -----------
 
     def _execute_leaf(self, leaf: SemanticPredicate, pending: np.ndarray,
-                      ccfg: CascadeConfig, rng: np.random.Generator,
+                      ccfg: CascadeConfig,
                       train_info: Dict[str, tuple],
                       local_params: Dict[str, Dict],
                       truth_local: Optional[np.ndarray],
                       seed: int, stats: ScoringStats) -> LeafReport:
         oracle = self._session_oracle(leaf.oracle)
-        calls0 = oracle.calls
         n = len(self.store)
         train_calls, reused = train_info.get(
             leaf.key, (0, leaf.key in local_params))
 
-        dkey = (leaf.key, self.strategy, ccfg, seed)
-        with self._lock:
-            hit = self._decisions.get(dkey)
-        if hit is not None:
-            labels_full, scores_full, cres = hit
-            cascade = cres if len(pending) == n else None
-            if cascade is not None and truth_local is not None:
-                truth = np.asarray(truth_local).astype(bool)
-                cascade = dataclasses.replace(
-                    cascade, achieved_f1=f1_score(labels_full, truth),
-                    achieved_exact=float(np.mean(labels_full == truth)))
-            return LeafReport(
-                name=leaf.name, key=leaf.key, n_pending=len(pending),
-                oracle_calls_train=0, oracle_calls_calib=0,
-                oracle_calls_online=0, proxy_reused=True, cascade=cascade,
-                pending=pending, scores=scores_full[pending],
-                labels=labels_full[pending])
-
-        if len(pending) <= DIRECT_LABEL_CUTOFF:
+        if n <= DIRECT_LABEL_CUTOFF:
+            # tiny collection: a document's decision IS its oracle label
+            # (canonical per doc, so plan position cannot change it)
+            calls0 = oracle.calls
             labels = oracle.label(pending)
             return LeafReport(
                 name=leaf.name, key=leaf.key, n_pending=len(pending),
@@ -551,37 +689,173 @@ class ScaleDocEngine:
                 proxy_reused=reused, cascade=None,
                 pending=pending, scores=None, labels=labels)
 
-        # in-memory stores materialize the pending rows (cheap, enables
-        # the fused kernel); out-of-core stores get a streaming view so
-        # only one chunk of embeddings is ever resident
-        if isinstance(self.store, InMemoryStore):
-            embeds_view = self.store.get(pending)
-        else:
-            embeds_view = _PendingView(self.store, pending, self.chunk)
+        dkey = (leaf.key, self.strategy, ccfg, seed)
+        art, calib_calls, online_build = self._leaf_artifact(
+            leaf, dkey, ccfg, seed, local_params, stats)
+
+        scores = art.scores[pending]
+        labels, ambiguous, online_calls = self._decide_pending(
+            art, oracle, pending)
+        online_calls += online_build
+        cres = CascadeResult(
+            labels=labels, l=art.l, r=art.r,
+            unfiltered_rate=(float(ambiguous.mean()) if len(pending)
+                             else 0.0),
+            oracle_calls_online=online_calls,
+            oracle_calls_calib=calib_calls,
+            est_accuracy=art.est_accuracy,
+            data_reduction=1.0 - (online_calls + calib_calls)
+            / max(len(pending), 1),
+            certified=art.certified)
+        if truth_local is not None:
+            truth = np.asarray(truth_local).astype(bool)
+            cres.achieved_f1 = f1_score(labels, truth)
+            cres.achieved_exact = float(np.mean(labels == truth))
+
+        return LeafReport(
+            name=leaf.name, key=leaf.key, n_pending=len(pending),
+            oracle_calls_train=train_calls,
+            oracle_calls_calib=calib_calls,
+            oracle_calls_online=online_calls,
+            proxy_reused=reused, cascade=cres, pending=pending,
+            scores=scores, labels=labels)
+
+    def _leaf_artifact(self, leaf: SemanticPredicate, dkey: tuple,
+                       ccfg: CascadeConfig, seed: int,
+                       local_params: Dict[str, Dict],
+                       stats: ScoringStats):
+        """The canonical full-collection evaluation of one leaf: local
+        cache, then the shared optimizer (hit / join flight / own the
+        build), then a local build. Returns ``(artifact,
+        calib_calls_paid, online_calls_paid)`` — both zero when the
+        artifact came from a cache or another session's flight."""
+        with self._lock:
+            art = self._decisions.get(dkey)
+        if art is not None:
+            return art, 0, 0
+        opt = self._optimizer
+        if opt is not None:
+            kind, val = opt.claim_artifact(dkey)
+            if kind == "owner":
+                try:
+                    art, calib, online = self._build_artifact(
+                        leaf, ccfg, seed, local_params, stats)
+                except BaseException as exc:
+                    opt.abort_artifact(dkey, exc)
+                    raise
+                opt.publish_artifact(dkey, art)
+                with self._lock:
+                    self._decisions[dkey] = art
+                return art, calib, online
+            art = val if kind == "hit" else opt.wait(val)
+            if art is not None:
+                with self._lock:
+                    self._decisions[dkey] = art
+                self._selstats.observe(art.key, art.measured_sel,
+                                       measured=True, name=leaf.name)
+                return art, 0, 0
+            # foreign flight died: fall through to a local build
+        art, calib, online = self._build_artifact(leaf, ccfg, seed,
+                                                  local_params, stats)
+        with self._lock:
+            self._decisions[dkey] = art
+        self._selstats.observe(art.key, art.measured_sel, measured=True,
+                               name=leaf.name)
+        return art, calib, online
+
+    def _build_artifact(self, leaf: SemanticPredicate, ccfg: CascadeConfig,
+                        seed: int, local_params: Dict[str, Dict],
+                        stats: ScoringStats):
+        """Score the full collection and calibrate — every input derives
+        from ``(leaf, strategy, ccfg, seed)`` plus the oracle's labels,
+        so the artifact is the same whichever session builds it."""
         params = local_params.get(leaf.key)
         if params is None:
             raise RuntimeError(
                 f"no trained proxy for leaf {leaf.name!r}; "
                 "_train_pending_leaves must run before leaf execution")
-
+        oracle = self._session_oracle(leaf.oracle)
         scores, pass_stats = self.executor.score(params, leaf.e_q,
-                                                 embeds_view)
+                                                 self.store)
         stats.merge(pass_stats)
-        cres = get_strategy(self.strategy)(
-            scores, _SubsetOracle(oracle, pending), ccfg,
-            ground_truth=truth_local, rng=rng)
-        if len(pending) == n:
-            with self._lock:
-                self._sel_est[leaf.key] = float(cres.labels.mean())
-                self._decisions[dkey] = (cres.labels, scores, cres)
+        rng = self._calib_rng(seed, leaf)
+        calls0 = oracle.calls
+        calibrator = get_calibrator(self.strategy)
+        if calibrator is not None:
+            spec = calibrator(scores, oracle, ccfg, rng)
+            art = LeafArtifact(
+                key=leaf.key, name=leaf.name, scores=scores,
+                params=params, l=spec.l, r=spec.r,
+                sample_idx=np.asarray(spec.sample_idx, np.int64),
+                sample_labels=np.asarray(spec.sample_labels, bool),
+                est_accuracy=spec.est_accuracy, certified=spec.certified,
+                calib_calls=oracle.calls - calls0,
+                measured_sel=self._measured_selectivity(scores, spec),
+                trained=True)
+            return art, art.calib_calls, 0
+        # whole strategy (probe, ad-hoc registrations): no threshold
+        # split to defer, so decisions materialize eagerly over the full
+        # collection; any pending subset resolves as a slice
+        cres = get_strategy(self.strategy)(scores, oracle, ccfg,
+                                           ground_truth=None, rng=rng)
+        labels_full = np.asarray(cres.labels, bool)
+        art = LeafArtifact(
+            key=leaf.key, name=leaf.name, scores=scores, params=params,
+            l=cres.l, r=cres.r, est_accuracy=cres.est_accuracy,
+            certified=cres.certified,
+            calib_calls=cres.oracle_calls_calib,
+            labels_full=labels_full,
+            online_calls_full=cres.oracle_calls_online,
+            measured_sel=float(labels_full.mean()), trained=True)
+        return art, cres.oracle_calls_calib, cres.oracle_calls_online
 
-        return LeafReport(
-            name=leaf.name, key=leaf.key, n_pending=len(pending),
-            oracle_calls_train=train_calls,
-            oracle_calls_calib=cres.oracle_calls_calib,
-            oracle_calls_online=cres.oracle_calls_online,
-            proxy_reused=reused, cascade=cres, pending=pending,
-            scores=scores, labels=cres.labels)
+    @staticmethod
+    def _measured_selectivity(scores: np.ndarray, spec) -> float:
+        """Analytic positive rate of a calibrated leaf — computable at
+        artifact creation without resolving the band: P(s > r) plus the
+        band mass weighted by the calibration sample's positive rate
+        inside the band."""
+        auto_pos = scores > spec.r
+        band = ~(auto_pos | (scores < spec.l))
+        pos = float(np.mean(auto_pos))
+        band_frac = float(np.mean(band))
+        if band_frac == 0.0:
+            return pos
+        band_rate = 0.5
+        if len(spec.sample_idx):
+            s_samp = scores[spec.sample_idx]
+            samp_band = ~((s_samp > spec.r) | (s_samp < spec.l))
+            y = np.asarray(spec.sample_labels, bool)
+            band_rate = (float(np.mean(y[samp_band])) if samp_band.any()
+                         else float(np.mean(y)))
+        return float(min(max(pos + band_frac * band_rate, 0.0), 1.0))
+
+    def _decide_pending(self, art: LeafArtifact, oracle,
+                        pending: np.ndarray):
+        """Resolve a pending subset against a leaf artifact: accept
+        above ``r``, reject below ``l``, oracle the ambiguous remainder
+        (reusing calibration labels already purchased). Per-doc
+        decisions are pure functions of the artifact plus the shared
+        label cache, so any partition of documents across sessions or
+        plan positions yields the same values."""
+        if art.labels_full is not None:
+            return (art.labels_full[pending],
+                    np.zeros(len(pending), bool), 0)
+        s = art.scores[pending]
+        labels = s > art.r
+        ambiguous = ~(labels | (s < art.l))
+        known = {int(i): bool(y) for i, y in zip(art.sample_idx,
+                                                 art.sample_labels)}
+        amb_local = np.nonzero(ambiguous)[0]
+        need = np.array([i for i in amb_local
+                         if int(pending[i]) not in known], np.int64)
+        if len(need):
+            labels[need] = np.asarray(oracle.label(pending[need]), bool)
+        for i in amb_local:
+            g = int(pending[i])
+            if g in known:
+                labels[i] = known[g]
+        return labels, ambiguous, int(len(need))
 
     # -- degraded-mode resolution ----------------------------------------
 
@@ -605,8 +879,6 @@ class ScaleDocEngine:
         decisions carry no accuracy contract."""
         n = len(self.store)
         before = int(np.sum(root == UNKNOWN))
-        with self._lock:
-            sel_snapshot = dict(self._sel_est)
         for leaf in order:
             pending = np.nonzero(root == UNKNOWN)[0]
             if not len(pending):
@@ -628,7 +900,7 @@ class ScaleDocEngine:
                     span = float(s.max() - s.min())
                     s = ((s - s.min()) / span if span > 0
                          else np.full(len(s), 0.5, np.float32))
-                alpha = sel_snapshot.get(leaf.key)
+                alpha = self._selstats.get(leaf.key, measured_only=True)
                 if alpha is None:
                     cached = self._cached_oracle(leaf.oracle)
                     rate = getattr(cached, "cached_positive_rate",
@@ -702,8 +974,11 @@ class ScaleDocEngine:
         ccfg = self.cascade_cfg
         if accuracy_target is not None:
             ccfg = replace(ccfg, accuracy_target=accuracy_target)
+        if isinstance(predicate, SemanticTopK):
+            return self._filter_topk(
+                predicate, ccfg=ccfg, ground_truth=ground_truth,
+                seed=seed, mode=mode, name=name, t0=t0)
         n = len(self.store)
-        rng = np.random.default_rng(seed)
 
         leaves = predicate.leaves()
         scoring_stats = ScoringStats()
@@ -735,7 +1010,7 @@ class ScaleDocEngine:
         try:
             self._notify("training")
             train_info, local_params = self._train_pending_leaves(
-                order, ccfg, rng, seed)
+                order, ccfg, seed)
 
             self._notify("scoring")
             for leaf in order:
@@ -745,7 +1020,7 @@ class ScaleDocEngine:
                 truth_local = leaf_truth.get(leaf.key)
                 if truth_local is not None:
                     truth_local = truth_local[pending]
-                report = self._execute_leaf(leaf, pending, ccfg, rng,
+                report = self._execute_leaf(leaf, pending, ccfg,
                                             train_info, local_params,
                                             truth_local, seed,
                                             scoring_stats)
@@ -805,6 +1080,232 @@ class ScaleDocEngine:
             est_accuracy_debit=self._fallback_debit(reports, fallback_docs,
                                                     n),
             error=str(degrade_error) if degrade_error is not None else None)
+        if ground_truth is not None:
+            truth = np.asarray(ground_truth).astype(bool)
+            result.achieved_f1 = f1_score(result.mask, truth)
+            result.achieved_exact = float(np.mean(result.mask == truth))
+        self._notify("done")
+        return result
+
+    # -- semantic top-k ----------------------------------------------------
+
+    def _fuzzy_rank(self, pred: Predicate,
+                    scores_by_key: Dict[str, np.ndarray]) -> np.ndarray:
+        """Top-k ranking signal: fuzzy-logic combination of the per-leaf
+        proxy scores (AND -> min, OR -> max, NOT -> 1 - s). Pure
+        ordering heuristic — membership is still decided by the cascade,
+        so ranking quality affects oracle cost, never correctness."""
+        if isinstance(pred, SemanticPredicate):
+            return scores_by_key[pred.key]
+        if isinstance(pred, Not):
+            return 1.0 - self._fuzzy_rank(pred.child, scores_by_key)
+        if isinstance(pred, (And, Or)):
+            vals = [self._fuzzy_rank(c, scores_by_key)
+                    for c in pred.children]
+            combine = np.minimum if isinstance(pred, And) else np.maximum
+            out = vals[0]
+            for v in vals[1:]:
+                out = combine(out, v)
+            return out
+        raise TypeError(f"cannot rank over {type(pred).__name__}")
+
+    def _filter_topk(self, predicate: SemanticTopK, *,
+                     ccfg: CascadeConfig,
+                     ground_truth: Optional[np.ndarray],
+                     seed: int, mode: str, name: Optional[str],
+                     t0: float) -> FilterResult:
+        """Execute ``SemanticTopK(child, k)`` as a cascade over ranks:
+        walk candidates in stable descending fuzzy-rank order, decide
+        each batch's child membership through the canonical leaf
+        artifacts (thresholds free, oracle only in the ambiguous band),
+        and stop once ``k`` members are confirmed. Documents never
+        walked are excluded without any oracle spend — that is the
+        saving over filter-then-sort, which resolves the whole
+        collection first."""
+        n = len(self.store)
+        child = predicate.child
+        k = min(predicate.k, n)
+        opt = self._optimizer
+        if opt is not None:
+            with opt._lock:
+                opt.topk_queries += 1
+        leaves = child.leaves()
+        scoring_stats = ScoringStats()
+        self._notify("planning")
+        sel = (self._estimate_selectivities(leaves, scoring_stats)
+               if len(leaves) > 1 else {})
+        order, _ = child.plan(sel)
+
+        calls_before = {}
+        for leaf in leaves:
+            o = self._session_oracle(leaf.oracle)
+            calls_before.setdefault(id(self._cached_oracle(leaf.oracle)),
+                                    (o, o.calls))
+
+        leaf_vals = {leaf.key: np.full(n, UNKNOWN, np.int8)
+                     for leaf in leaves}
+        online_by_key = {leaf.key: 0 for leaf in leaves}
+        build_calib = {leaf.key: 0 for leaf in leaves}
+        arts: Dict[str, LeafArtifact] = {}
+        train_info: Dict[str, tuple] = {}
+        accepted: List[int] = []
+        walked = 0
+        order_idx: Optional[np.ndarray] = None
+        degrade_error: Optional[OracleError] = None
+        fallback_docs = 0
+        unresolved = np.zeros(0, np.int64)
+        try:
+            self._notify("training")
+            train_info, local_params = self._train_pending_leaves(
+                order, ccfg, seed)
+            self._notify("scoring")
+            if n <= DIRECT_LABEL_CUTOFF:
+                # tiny collection: label everything, keep the k lowest
+                # doc ids among members (stable, canonical)
+                for leaf in order:
+                    oracle = self._session_oracle(leaf.oracle)
+                    calls0 = oracle.calls
+                    leaf_vals[leaf.key][:] = np.asarray(
+                        oracle.label(np.arange(n)), bool).astype(np.int8)
+                    online_by_key[leaf.key] += oracle.calls - calls0
+                order_idx = np.arange(n)
+                walked = n
+                member = child.evaluate(leaf_vals) == TRUE
+                accepted = [int(d) for d in np.nonzero(member)[0][:k]]
+            else:
+                for leaf in order:
+                    dkey = (leaf.key, self.strategy, ccfg, seed)
+                    art, calib, online = self._leaf_artifact(
+                        leaf, dkey, ccfg, seed, local_params,
+                        scoring_stats)
+                    arts[leaf.key] = art
+                    build_calib[leaf.key] = calib
+                    online_by_key[leaf.key] += online
+                rank = self._fuzzy_rank(
+                    child, {key: a.scores for key, a in arts.items()})
+                # stable argsort on -rank: ties break by ascending doc
+                # id, so the walk order is bitwise reproducible
+                order_idx = np.argsort(-rank, kind="stable")
+                batch = max(2 * k, 128)
+                while len(accepted) < k and walked < n:
+                    cand = order_idx[walked:walked + batch]
+                    walked += len(cand)
+                    for leaf in order:
+                        root_vals = child.evaluate(leaf_vals)
+                        pend = cand[root_vals[cand] == UNKNOWN]
+                        if not len(pend):
+                            break
+                        vals = leaf_vals[leaf.key]
+                        need = pend[vals[pend] == UNKNOWN]
+                        if not len(need):
+                            continue
+                        oracle = self._session_oracle(leaf.oracle)
+                        dec, _, online = self._decide_pending(
+                            arts[leaf.key], oracle, need)
+                        vals[need] = np.asarray(dec, bool).astype(np.int8)
+                        online_by_key[leaf.key] += online
+                    member = child.evaluate(leaf_vals)[cand] == TRUE
+                    newly = []
+                    for doc in cand[member]:
+                        if len(accepted) < k:
+                            accepted.append(int(doc))
+                            newly.append(int(doc))
+                    rejected_now = np.setdiff1d(cand, np.asarray(
+                        newly, np.int64), assume_unique=True)
+                    self._partial(np.asarray(newly, np.int64),
+                                  rejected_now)
+        except OracleError as exc:
+            if mode == "fail":
+                raise
+            degrade_error = exc
+            self._notify("degraded")
+            if mode == "defer":
+                if order_idx is None:
+                    unresolved = np.arange(n, dtype=np.int64)
+                else:
+                    rest = order_idx[walked:]
+                    done_vals = child.evaluate(leaf_vals)
+                    undecided = np.nonzero(done_vals == UNKNOWN)[0]
+                    unresolved = np.union1d(rest, undecided).astype(
+                        np.int64)
+                with self._lock:
+                    self._repairs.append(RepairTicket(
+                        predicate=predicate,
+                        accuracy_target=ccfg.accuracy_target,
+                        ground_truth=ground_truth, seed=seed,
+                        unresolved=unresolved, error=str(exc),
+                        name=name))
+            else:  # proxy_fallback: 0.5-cut membership, rank cut on top
+                filled_any = np.zeros(n, bool)
+                for leaf in order:
+                    art = arts.get(leaf.key)
+                    if art is None:
+                        continue
+                    vals = leaf_vals[leaf.key]
+                    unk = np.nonzero(vals == UNKNOWN)[0]
+                    vals[unk] = (art.scores[unk] > 0.5).astype(np.int8)
+                    filled_any[unk] = True
+                if order_idx is not None and len(arts) == len(leaves):
+                    member_vals = child.evaluate(leaf_vals)
+                    in_order = order_idx[
+                        member_vals[order_idx] == TRUE]
+                    accepted = [int(d) for d in in_order[:k]]
+                    fallback_docs = int(filled_any.sum())
+
+        mask = np.zeros(n, bool)
+        if accepted:
+            mask[np.asarray(accepted, np.int64)] = True
+
+        walked_docs = (order_idx[:walked] if order_idx is not None
+                       else np.zeros(0, np.int64))
+        reports: List[LeafReport] = []
+        for leaf in order:
+            art = arts.get(leaf.key)
+            vals = leaf_vals[leaf.key]
+            decided = (walked_docs[vals[walked_docs] != UNKNOWN]
+                       if len(walked_docs) else walked_docs)
+            tc, reused = train_info.get(leaf.key, (0, False))
+            cres = None
+            if art is not None:
+                labels_dec = vals[decided] == TRUE
+                cres = CascadeResult(
+                    labels=labels_dec, l=art.l, r=art.r,
+                    unfiltered_rate=(online_by_key[leaf.key]
+                                     / max(len(decided), 1)),
+                    oracle_calls_online=online_by_key[leaf.key],
+                    oracle_calls_calib=build_calib[leaf.key],
+                    est_accuracy=art.est_accuracy,
+                    certified=art.certified)
+            reports.append(LeafReport(
+                name=leaf.name, key=leaf.key, n_pending=int(len(decided)),
+                oracle_calls_train=tc,
+                oracle_calls_calib=build_calib[leaf.key],
+                oracle_calls_online=online_by_key[leaf.key],
+                proxy_reused=reused, cascade=cres,
+                pending=np.asarray(decided, np.int64),
+                scores=(art.scores[decided] if art is not None else None),
+                labels=(vals[decided] == TRUE)))
+
+        total = sum(o.calls - before
+                    for o, before in calls_before.values())
+        result = FilterResult(
+            mask=mask,
+            oracle_calls_total=total,
+            oracle_calls_train=sum(c for c, _ in train_info.values()),
+            leaf_reports=reports,
+            plan=(f"topk[k={k}]: "
+                  + (" -> ".join(r.name for r in reports) or "(decided)")),
+            wall_seconds=time.time() - t0,
+            n_docs=n,
+            scoring_stats=scoring_stats,
+            degraded=degrade_error is not None,
+            degrade_mode=mode if degrade_error is not None else None,
+            unresolved=unresolved,
+            fallback_docs=fallback_docs,
+            est_accuracy_debit=self._fallback_debit(reports,
+                                                    fallback_docs, n),
+            error=str(degrade_error) if degrade_error is not None
+            else None)
         if ground_truth is not None:
             truth = np.asarray(ground_truth).astype(bool)
             result.achieved_f1 = f1_score(result.mask, truth)

@@ -59,7 +59,8 @@ from repro.config.base import CascadeConfig, ProxyConfig
 from repro.core.oracle import OracleError
 from repro.engine.engine import FilterResult, ScaleDocEngine
 from repro.engine.executor import ScoringStats
-from repro.engine.predicate import FALSE, TRUE, UNKNOWN, Predicate
+from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, Predicate,
+                                    SemanticTopK)
 from repro.engine.store import DEFAULT_CHUNK, DocumentStore
 
 
@@ -428,6 +429,11 @@ class LiveEngine:
         """
         if not isinstance(predicate, Predicate):
             raise TypeError("predicate must be a repro.engine Predicate")
+        if isinstance(predicate, SemanticTopK):
+            # a global top-k changes membership retroactively as rows
+            # arrive — there is no delta-only evaluation for it
+            raise TypeError("SemanticTopK cannot be a standing "
+                            "predicate; filter() it over a snapshot")
         with self._lock:
             if self._closed:
                 raise LiveEngineClosed("LiveEngine is closed")

@@ -33,11 +33,14 @@ TRUE = np.int8(1)
 FALSE = np.int8(0)
 UNKNOWN = np.int8(-1)
 
-WIRE_VERSION = 1
+# version 2 added the "topk" root operator (SemanticTopK)
+WIRE_VERSION = 2
 # bombs a client could mail in: a deeply right-nested AST recurses the
 # decoder, a wide one explodes the plan — both are rejected up front
 MAX_WIRE_DEPTH = 32
 MAX_WIRE_NODES = 512
+# k is bounded on the wire: a mask over N docs can never need more
+MAX_WIRE_TOPK = 1_000_000_000
 
 
 class WireFormatError(ValueError):
@@ -180,6 +183,9 @@ class SemanticPredicate(Predicate):
 
 class Not(Predicate):
     def __init__(self, child: Predicate):
+        if isinstance(child, SemanticTopK):
+            raise TypeError("SemanticTopK is a root-only operator and "
+                            "cannot be composed with & / | / ~")
         self.child = child
 
     def _collect(self, seen):
@@ -207,6 +213,9 @@ class _NaryOp(Predicate):
     def __init__(self, *children: Predicate):
         if len(children) < 2:
             raise ValueError("need at least two operands")
+        if any(isinstance(c, SemanticTopK) for c in children):
+            raise TypeError("SemanticTopK is a root-only operator and "
+                            "cannot be composed with & / | / ~")
         self.children = tuple(children)
 
     def _collect(self, seen):
@@ -267,6 +276,68 @@ class Or(_NaryOp):
         for s in sels:
             out *= (1.0 - s)
         return 1.0 - out
+
+
+class SemanticTopK(Predicate):
+    """Root-only semantic operator: the ``k`` best-matching documents
+    among those satisfying ``child`` — the algebra's first non-filter
+    member.
+
+    Ranking uses a fuzzy combination of the child's per-leaf proxy
+    scores (AND -> min, OR -> max, NOT -> 1 - s); membership of each
+    candidate is decided by the ordinary cascade machinery, walking
+    candidates in descending rank and buying oracle labels only inside
+    the ambiguous band until ``k`` members are confirmed (docs/
+    optimizer.md). The result mask has at most ``k`` bits set — exactly
+    ``k`` unless fewer documents satisfy the child.
+
+    Top-k does not compose: ``(topk & p)`` has no Kleene semantics, so
+    ``&``/``|``/``~`` over it raise. On the wire it is the outermost
+    node only (op ``"topk"``, wire version >= 2).
+    """
+
+    def __init__(self, child: Predicate, k: int):
+        if not isinstance(child, Predicate):
+            raise TypeError("SemanticTopK child must be a Predicate")
+        if isinstance(child, SemanticTopK):
+            raise TypeError("SemanticTopK cannot nest")
+        if isinstance(k, bool) or not isinstance(k, (int, np.integer)):
+            raise TypeError(f"k must be an int, got {type(k).__name__}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.child = child
+        self.k = int(k)
+
+    def __and__(self, other):
+        raise TypeError("SemanticTopK is a root-only operator and cannot "
+                        "be composed with & / | / ~")
+
+    __rand__ = __and__
+    __or__ = __and__
+    __ror__ = __and__
+
+    def __invert__(self):
+        raise TypeError("SemanticTopK is a root-only operator and cannot "
+                        "be composed with & / | / ~")
+
+    def _collect(self, seen):
+        self.child._collect(seen)
+
+    def evaluate(self, leaf_values):
+        # membership of the underlying filter; the engine applies the
+        # rank cut on top of this (it never decides top-k from here)
+        return self.child.evaluate(leaf_values)
+
+    def plan(self, selectivity):
+        order, sel = self.child.plan(selectivity)
+        return order, sel
+
+    def _to_wire(self, reverse):
+        return {"op": "topk", "k": self.k,
+                "child": self.child._to_wire(reverse)}
+
+    def __repr__(self):
+        return f"topk({self.child!r}, k={self.k})"
 
 
 # -- wire decoding ------------------------------------------------------------
@@ -346,6 +417,22 @@ def _from_wire(node, oracles: Mapping[str, object],
         built = [_from_wire(c, oracles, embedder, depth + 1, budget)
                  for c in children]
         return (And if op == "and" else Or)(*built)
+    if op == "topk":
+        if depth != 1:
+            raise WireFormatError("topk: root-only operator (wire "
+                                  "version >= 2)")
+        k = node.get("k")
+        if isinstance(k, bool) or not isinstance(k, int):
+            raise WireFormatError(f"topk: k must be an integer, got "
+                                  f"{type(k).__name__}")
+        if not 1 <= k <= MAX_WIRE_TOPK:
+            raise WireFormatError(
+                f"topk: k must be in [1, {MAX_WIRE_TOPK}], got {k}")
+        if "child" not in node:
+            raise WireFormatError("topk: missing child")
+        child = _from_wire(node["child"], oracles, embedder,
+                           depth + 1, budget)
+        return SemanticTopK(child, k)
     raise WireFormatError(f"unknown op {op!r}")
 
 

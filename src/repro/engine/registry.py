@@ -24,8 +24,16 @@ from repro.core.cascade import CascadeResult
 
 # strategy(scores, oracle, cfg, ground_truth=None, rng=None) -> CascadeResult
 Strategy = Callable[..., CascadeResult]
+# calibrator(scores, oracle, cfg, rng=None) -> ThresholdSpec — the
+# calibration half of a *threshold* strategy. Strategies with a
+# calibrator get canonical lazy execution inside the engine: thresholds
+# computed once over the full collection, the ambiguous band resolved
+# per pending set (repro.engine.engine / repro.engine.optimizer).
+# Strategies without one (probe, ad-hoc registrations) run whole.
+Calibrator = Callable[..., cascade_mod.ThresholdSpec]
 
 _STRATEGIES: Dict[str, Strategy] = {}
+_CALIBRATORS: Dict[str, Calibrator] = {}
 
 
 def register_strategy(name: str) -> Callable[[Strategy], Strategy]:
@@ -37,12 +45,27 @@ def register_strategy(name: str) -> Callable[[Strategy], Strategy]:
     return deco
 
 
+def register_calibrator(name: str) -> Callable[[Calibrator], Calibrator]:
+    def deco(fn: Calibrator) -> Calibrator:
+        if name in _CALIBRATORS:
+            raise ValueError(f"calibrator {name!r} already registered")
+        _CALIBRATORS[name] = fn
+        return fn
+    return deco
+
+
 def get_strategy(name: str) -> Strategy:
     try:
         return _STRATEGIES[name]
     except KeyError:
         raise KeyError(f"unknown cascade strategy {name!r}; "
                        f"available: {sorted(_STRATEGIES)}") from None
+
+
+def get_calibrator(name: str) -> Optional[Calibrator]:
+    """The threshold calibrator for ``name``, or None when the strategy
+    only exists whole (the engine then evaluates it full-collection)."""
+    return _CALIBRATORS.get(name)
 
 
 def available_strategies() -> list:
@@ -71,3 +94,20 @@ def _probe(scores, oracle, cfg, ground_truth=None, rng=None):
 def _supg(scores, oracle, cfg, ground_truth=None, rng=None):
     return cascade_mod.supg_cascade(scores, oracle, cfg,
                                     ground_truth=ground_truth)
+
+
+@register_calibrator("scaledoc")
+def _scaledoc_calibrator(scores, oracle, cfg, rng=None):
+    return cascade_mod.calibrate_thresholds(scores, oracle, cfg, rng)
+
+
+@register_calibrator("naive")
+def _naive_calibrator(scores, oracle, cfg, rng=None):
+    # naive calibration is seeded by cfg.seed alone (matches the whole-
+    # strategy behaviour); the leaf rng is accepted and ignored
+    return cascade_mod.naive_thresholds(scores, oracle, cfg)
+
+
+@register_calibrator("supg")
+def _supg_calibrator(scores, oracle, cfg, rng=None):
+    return cascade_mod.supg_thresholds(scores, oracle, cfg)

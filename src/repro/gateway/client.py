@@ -180,6 +180,25 @@ class GatewayClient:
                                 seed=seed, name=name)
         return self.wait(submitted["id"], timeout=timeout)
 
+    def topk(self, predicate, k: int, *,
+             oracles: Optional[Mapping[str, object]] = None,
+             accuracy_target: Optional[float] = None, seed: int = 0,
+             name: Optional[str] = None,
+             timeout: float = 600.0) -> Dict:
+        """The k best-scoring documents satisfying ``predicate``:
+        wraps it in a wire ``topk`` node (``SemanticTopK`` semantics —
+        root-only, cascade-decided membership) and runs filter().
+        ``predicate`` may be a ``Predicate`` or an already-encoded wire
+        dict; it must not already be a topk node."""
+        if isinstance(predicate, Predicate):
+            predicate = predicate.to_wire(oracles)
+        if predicate.get("op") == "topk":
+            raise ValueError("predicate is already a topk node; "
+                             "topk cannot nest")
+        node = {"op": "topk", "k": k, "child": predicate}
+        return self.filter(node, accuracy_target=accuracy_target,
+                           seed=seed, name=name, timeout=timeout)
+
     def cancel(self, session_id: str) -> Dict:
         _, data = self._request("DELETE", f"/v1/queries/{session_id}")
         return data

@@ -40,6 +40,7 @@ import numpy as np
 from repro.engine.engine import FilterResult, ScaleDocEngine
 from repro.engine.live import (DeltaBatch, DriftConfig, LiveEngine,
                                StandingPredicate, Subscription)
+from repro.engine.optimizer import QueryOptimizer
 from repro.engine.predicate import Predicate
 from repro.runtime.metrics import CounterSet
 from repro.serve.broker import OracleBroker
@@ -362,7 +363,9 @@ class PredicateServer:
                  counters: Optional[CounterSet] = None,
                  keep_sessions: int = 1024,
                  live: Optional[LiveEngine] = None,
-                 degrade: Optional[str] = None):
+                 degrade: Optional[str] = None,
+                 optimize: bool = False,
+                 optimizer: Optional[QueryOptimizer] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         if degrade is not None and degrade not in ("fail", "defer",
@@ -379,6 +382,13 @@ class PredicateServer:
         # engine (pass one in, or call enable_live()); None = subscribe()
         # is refused
         self.live = live
+        # cross-query optimizer: shared-leaf CSE + cross-session
+        # selectivity stats (repro.engine.optimizer). Off by default —
+        # sessions then evaluate every leaf themselves, the pre-PR-9
+        # behavior. Decisions are identical either way (every shared
+        # value is a pure function of its key); only cost changes.
+        self.optimizer = optimizer or (QueryOptimizer() if optimize
+                                       else None)
         self.counters = counters if counters is not None else CounterSet()
         self.broker = broker or OracleBroker(max_batch=max_batch,
                                              max_delay=max_delay,
@@ -511,7 +521,7 @@ class PredicateServer:
             session._mark_started()
             view = self.engine.session_view(
                 oracle_wrap=self.broker.wrap_for(session),
-                observer=session)
+                observer=session, optimizer=self.optimizer)
             req = session.request
             try:
                 result = view.filter(
@@ -642,6 +652,9 @@ class PredicateServer:
             "lanes": lanes,
             "health": self.oracle_health(),
         }
+        snap["optimizer"] = (self.optimizer.snapshot()
+                             if self.optimizer is not None
+                             else {"enabled": False})
         with self._lock:
             standing = list(self._standing)
         snap["standing"] = {

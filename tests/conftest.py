@@ -12,5 +12,6 @@ if importlib.util.find_spec("hypothesis") is None:
     collect_ignore += [
         "test_calibration_thresholds.py",
         "test_core_losses.py",
+        "test_optimizer_properties.py",
         "test_properties.py",
     ]

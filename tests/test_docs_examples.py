@@ -27,7 +27,8 @@ def test_doc_files_exist():
     names = {p.name for p in DOC_FILES}
     assert {"README.md", "index.md", "architecture.md", "offline.md",
             "engine.md", "serving.md", "gateway.md", "live.md",
-            "training.md", "kernels.md", "resilience.md"} <= names
+            "training.md", "kernels.md", "resilience.md",
+            "optimizer.md"} <= names
 
 
 @pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)

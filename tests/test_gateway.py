@@ -147,6 +147,128 @@ def test_wire_rejects_depth_and_node_bombs():
         from_wire(wide, oracles=oracles)
 
 
+# -- wire-codec fuzz ----------------------------------------------------------
+
+
+def _fuzz_shape(rng, n_leaves, depth):
+    if depth <= 0 or rng.random() < 0.3:
+        return ("leaf", int(rng.integers(n_leaves)))
+    r = float(rng.random())
+    if r < 0.25:
+        return ("not", _fuzz_shape(rng, n_leaves, depth - 1))
+    return ("and" if r < 0.65 else "or",
+            _fuzz_shape(rng, n_leaves, depth - 1),
+            _fuzz_shape(rng, n_leaves, depth - 1))
+
+
+def _fuzz_build(shape, leaves):
+    op = shape[0]
+    if op == "leaf":
+        return leaves[shape[1]]
+    if op == "not":
+        return ~_fuzz_build(shape[1], leaves)
+    a, b = _fuzz_build(shape[1], leaves), _fuzz_build(shape[2], leaves)
+    return a & b if op == "and" else a | b
+
+
+def test_wire_fuzz_random_asts_roundtrip(corpus):
+    """Seeded fuzz: 40 random ASTs (depth <= 5, ~30% wrapped in a
+    topk root) survive JSON serialization with identical leaf keys and
+    identical Kleene evaluation on random valuations."""
+    from repro.engine import SemanticTopK
+    from repro.engine.predicate import FALSE, TRUE, UNKNOWN
+    rng = np.random.default_rng(1234)
+    qs = [make_query(corpus, 120 + j, selectivity=0.3) for j in range(3)]
+    cached = [CachedOracle(SimulatedOracle(q.truth)) for q in qs]
+    leaves = [SemanticPredicate(qs[j].embed, cached[j], name=f"f{j}")
+              for j in range(3)]
+    oracles = {f"o{j}": cached[j] for j in range(3)}
+    for _ in range(40):
+        pred = _fuzz_build(_fuzz_shape(rng, 3, 4), leaves)
+        is_topk = rng.random() < 0.3
+        if is_topk:
+            pred = SemanticTopK(pred, k=int(rng.integers(1, 50)))
+        back = from_wire(json.loads(json.dumps(pred.to_wire(oracles))),
+                         oracles=oracles)
+        assert isinstance(back, SemanticTopK) == is_topk
+        if is_topk:
+            assert back.k == pred.k
+        keys = [l.key for l in pred.leaves()]
+        assert [l.key for l in back.leaves()] == keys
+        vals = {key: rng.choice(
+            np.array([TRUE, FALSE, UNKNOWN], np.int8), size=32)
+            for key in keys}
+        np.testing.assert_array_equal(back.evaluate(vals),
+                                      pred.evaluate(vals))
+
+
+def test_wire_topk_roundtrip_decision_parity(corpus, cfgs):
+    """A topk node rebuilt from its wire form filters bitwise
+    identically to the original."""
+    from repro.engine import SemanticTopK
+    q = make_query(corpus, 7, selectivity=0.3)
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    pred = SemanticTopK(
+        SemanticPredicate(q.embed, cached, name="leaf"), k=12)
+    oracles = {"the-oracle": cached}
+    rebuilt = from_wire(json.loads(json.dumps(pred.to_wire(oracles))),
+                        oracles=oracles)
+    base = _engine(corpus, cfgs).filter(pred, seed=3).mask
+    again = _engine(corpus, cfgs).filter(rebuilt, seed=3).mask
+    np.testing.assert_array_equal(base, again)
+    assert base.sum() == 12
+
+
+@pytest.mark.parametrize("mangle, match", [
+    (lambda n: {**n, "k": 0}, r"k must be in"),
+    (lambda n: {**n, "k": -3}, r"k must be in"),
+    (lambda n: {**n, "k": 10**18}, r"k must be in"),
+    (lambda n: {**n, "k": True}, "k must be an integer"),
+    (lambda n: {**n, "k": "5"}, "k must be an integer"),
+    (lambda n: {**n, "k": 2.5}, "k must be an integer"),
+    (lambda n: {k: v for k, v in n.items() if k != "child"},
+     "missing child"),
+    (lambda n: {**n, "child": {"op": "topk", "k": 1, "child": n["child"]}},
+     "root-only"),
+    (lambda n: {"op": "not", "child": n}, "root-only"),
+    (lambda n: {"op": "and", "children": [n, n]}, "root-only"),
+])
+def test_wire_rejects_malformed_topk(mangle, match):
+    leaf = {"op": "leaf", "name": "l", "oracle": "o",
+            "embed": {"b64": "AAAAAA==", "shape": [1]}}
+    node = {"op": "topk", "k": 5, "child": leaf}
+    with pytest.raises(WireFormatError, match=match):
+        from_wire(mangle(node),
+                  oracles={"o": SimulatedOracle(np.ones(4, bool))})
+
+
+def test_client_topk_over_http_matches_engine(corpus, cfgs):
+    """GatewayClient.topk() threads the wire topk node end-to-end: the
+    remote accepted set equals the in-process SemanticTopK mask."""
+    from repro.engine import SemanticTopK
+    q = make_query(corpus, 9, selectivity=0.3)
+    local = _engine(corpus, cfgs).filter(
+        SemanticTopK(SemanticPredicate(
+            q.embed, CachedOracle(SimulatedOracle(q.truth)), name="t"),
+            k=15),
+        seed=0)
+
+    cached = CachedOracle(SimulatedOracle(q.truth))
+    pred = SemanticPredicate(q.embed, cached, name="t")
+    with PredicateServer(_engine(corpus, cfgs), workers=2,
+                         max_delay=0.003) as server:
+        with PredicateGateway(server, {"o": cached}) as gw:
+            client = GatewayClient(gw.url)
+            res = client.topk(pred, 15, oracles={"o": cached},
+                              timeout=300)
+            with pytest.raises(ValueError, match="cannot nest"):
+                client.topk({"op": "topk", "k": 2,
+                             "child": pred.to_wire({"o": cached})}, 3)
+    np.testing.assert_array_equal(np.sort(res["accepted"]),
+                                  np.flatnonzero(local.mask))
+    assert len(res["accepted"]) == 15
+
+
 # -- admission units ---------------------------------------------------------
 
 

@@ -369,6 +369,7 @@ def _check_stream(sp, batches, calib0, n_docs):
     assert sp.rows_scored_total == sum(b.rows_scored for b in deltas)
 
 
+@pytest.mark.soak
 @pytest.mark.parametrize("case", range(20))
 def test_interleaving_soak_parity(corpus, cfgs, tmp_path, case):
     """Acceptance gate: a seeded random schedule of {ingest batch,

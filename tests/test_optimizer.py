@@ -1,0 +1,315 @@
+"""Cross-query optimizer: SelectivityStats precedence, single-flight
+CSE machinery, selectivity-ordered plans, SemanticTopK execution, and
+the generative plan-equivalence harness.
+
+The harness is the PR's acceptance gate: over seeded random compound
+ASTs (depth <= 4, mixed ``&``/``|``/``~``, deliberate shared-leaf
+overlap across sessions), running every session through a shared
+``QueryOptimizer`` must produce decisions bitwise identical to the
+``cse=False`` arm (same stats, no cache sharing) while buying no more
+oracle labels and training each unique leaf's proxy exactly once.
+A hypothesis-powered wire/AST variant lives in
+``test_optimizer_properties.py`` behind the conftest gate.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import SimulatedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import (InMemoryStore, QueryOptimizer, ScaleDocEngine,
+                          SelectivityStats, SemanticPredicate, SemanticTopK)
+
+N_DOCS, DIM = 600, 32
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(11, n_docs=N_DOCS, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    pcfg = ProxyConfig(embed_dim=DIM, hidden_dim=64, latent_dim=32,
+                       proj_dim=16, phase1_steps=40, phase2_steps=40)
+    return pcfg, CascadeConfig(accuracy_target=0.9)
+
+
+def _engine(corpus, cfgs):
+    pcfg, ccfg = cfgs
+    return ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+
+
+# -- SelectivityStats ---------------------------------------------------------
+
+
+def test_selectivity_stats_precedence():
+    st = SelectivityStats()
+    assert st.get("a") is None and st.level("a") is None
+    st.observe("a", 0.4, measured=False, name="A")
+    assert st.get("a") == pytest.approx(0.4)
+    assert st.get("a", measured_only=True) is None   # estimated only
+    st.observe("a", 0.2, measured=True)
+    assert st.get("a", measured_only=True) == pytest.approx(0.2)
+    st.observe("a", 0.9, measured=False)             # must not demote
+    assert st.get("a") == pytest.approx(0.2)
+    assert st.level("a") == "measured"
+    snap = st.snapshot()
+    assert snap["leaves"] == 1 and snap["measured"] == 1
+    assert snap["observations"] == {"measured": 1, "estimated": 2}
+    assert snap["entries"]["a"]["name"] == "A"       # name survives updates
+    st.clear()
+    assert st.get("a") is None
+
+
+# -- single-flight CSE machinery ----------------------------------------------
+
+
+def test_single_flight_coalesces_and_caches():
+    opt = QueryOptimizer()
+    kind, _ = opt.claim_proxy("K", 0)
+    assert kind == "owner"
+    got = []
+
+    def waiter():
+        k2, fl = opt.claim_proxy("K", 0)
+        assert k2 == "wait"
+        got.append(QueryOptimizer.wait(fl))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    opt.publish_proxy("K", 0, {"w": 1})
+    t.join(timeout=10)
+    assert got == [{"w": 1}]
+    k3, val = opt.claim_proxy("K", 0)
+    assert k3 == "hit" and val == {"w": 1}
+    snap = opt.snapshot()
+    assert snap["flights_joined"] == 1
+    assert snap["proxies_trained"] == 1 and snap["proxy_hits"] == 1
+
+
+def test_aborted_flight_waiter_computes_locally():
+    opt = QueryOptimizer()
+    akey = ("K", "scaledoc", "ccfg", 0)
+    kind, _ = opt.claim_artifact(akey)
+    assert kind == "owner"
+    got = []
+
+    def waiter():
+        k2, fl = opt.claim_artifact(akey)
+        assert k2 == "wait"
+        got.append(QueryOptimizer.wait(fl))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    opt.abort_artifact(akey, RuntimeError("boom"))
+    t.join(timeout=10)
+    assert got == [None]                 # waiter falls back to computing
+    assert opt.snapshot()["flight_fallbacks"] == 1
+    assert not opt.has_artifact(akey)    # nothing was published
+
+
+def test_cse_off_disables_sharing_keeps_counters():
+    opt = QueryOptimizer(cse=False)
+    assert opt.claim_proxy("K", 0) == ("owner", None)
+    opt.publish_proxy("K", 0, {"w": 1})
+    assert opt.proxy("K", 0) is None                  # never cached
+    assert opt.claim_proxy("K", 0) == ("owner", None)  # never a hit
+    assert not opt.has_artifact(("K",))
+    snap = opt.snapshot()
+    assert snap["cse"] is False
+    assert snap["proxies_trained"] == 1 and snap["proxy_hits"] == 0
+
+
+# -- selectivity-ordered plans ------------------------------------------------
+
+
+def test_measured_stats_order_the_plan(corpus, cfgs):
+    """Server-held measured selectivities override the per-session
+    cosine heuristic: AND runs the most selective leaf first, OR the
+    least selective."""
+    qa = make_query(corpus, 60, selectivity=0.4)
+    qb = make_query(corpus, 61, selectivity=0.4)
+    A = SemanticPredicate(qa.embed, SimulatedOracle(qa.truth), name="A")
+    B = SemanticPredicate(qb.embed, SimulatedOracle(qb.truth), name="B")
+    engine = _engine(corpus, cfgs)
+    opt = QueryOptimizer()
+    opt.stats.observe(A.key, 0.9, measured=True)
+    opt.stats.observe(B.key, 0.1, measured=True)
+    res = engine.session_view(optimizer=opt).filter(A & B, seed=0)
+    assert res.plan.split(" -> ")[0] == "B"
+    res_or = engine.session_view(optimizer=opt).filter(A | B, seed=1)
+    assert res_or.plan.split(" -> ")[0] == "A"
+
+
+def test_filter_publishes_measured_selectivity(corpus, cfgs):
+    q = make_query(corpus, 62, selectivity=0.3)
+    leaf = SemanticPredicate(q.embed, SimulatedOracle(q.truth), name="L")
+    opt = QueryOptimizer()
+    _engine(corpus, cfgs).session_view(optimizer=opt).filter(leaf, seed=0)
+    assert opt.stats.level(leaf.key) == "measured"
+    got = opt.stats.get(leaf.key, measured_only=True)
+    assert got is not None and 0.0 <= got <= 1.0
+    sel = opt.snapshot()["selectivity"]
+    assert sel["measured"] >= 1
+    assert sel["entries"][leaf.key]["name"] == "L"
+
+
+# -- SemanticTopK -------------------------------------------------------------
+
+
+def test_topk_rejects_composition_and_bad_k(corpus):
+    q = make_query(corpus, 70, selectivity=0.3)
+    leaf = SemanticPredicate(q.embed, SimulatedOracle(q.truth), name="p")
+    tk = SemanticTopK(leaf, k=5)
+    for bad in (lambda: tk & leaf, lambda: leaf | tk, lambda: ~tk,
+                lambda: SemanticTopK(tk, k=3)):
+        with pytest.raises(TypeError):
+            bad()
+    with pytest.raises(ValueError):
+        SemanticTopK(leaf, k=0)
+    with pytest.raises(TypeError):
+        SemanticTopK(leaf, k=True)
+    with pytest.raises(TypeError):
+        SemanticTopK(leaf, k=2.5)
+
+
+def test_topk_members_are_canonical_filter_accepts(corpus, cfgs):
+    """Top-k membership is decided by the same canonical per-doc
+    decision function as filter(): the k winners must be accepted by an
+    independent plain filter of the child at the same seed, and the
+    rank walk must terminate early (fewer labels than the full run)."""
+    q = make_query(corpus, 70, selectivity=0.3)
+    o_full = SimulatedOracle(q.truth)
+    full = _engine(corpus, cfgs).filter(
+        SemanticPredicate(q.embed, o_full, name="p"), seed=0)
+
+    o_topk = SimulatedOracle(q.truth)
+    res = _engine(corpus, cfgs).filter(
+        SemanticTopK(SemanticPredicate(q.embed, o_topk, name="p"), k=10),
+        seed=0)
+    accepted = np.flatnonzero(res.mask)
+    assert len(accepted) == 10           # plenty of positives exist
+    assert full.mask[accepted].all()
+    assert res.plan.startswith("topk[k=10]: ")
+    assert o_topk.calls <= o_full.calls
+    assert res.oracle_calls_total < N_DOCS
+
+
+def test_topk_with_k_above_cardinality_equals_filter(corpus, cfgs):
+    """k >= |accepted| walks every candidate: the result degenerates to
+    the plain filter mask, bitwise."""
+    q = make_query(corpus, 71, selectivity=0.25)
+    full = _engine(corpus, cfgs).filter(
+        SemanticPredicate(q.embed, SimulatedOracle(q.truth), name="p"),
+        seed=0)
+    res = _engine(corpus, cfgs).filter(
+        SemanticTopK(SemanticPredicate(q.embed, SimulatedOracle(q.truth),
+                                       name="p"), k=N_DOCS),
+        seed=0)
+    np.testing.assert_array_equal(res.mask, full.mask)
+
+
+def test_topk_over_compound_child(corpus, cfgs):
+    qa = make_query(corpus, 72, selectivity=0.4)
+    qb = make_query(corpus, 73, selectivity=0.4)
+    pred = (SemanticPredicate(qa.embed, SimulatedOracle(qa.truth), name="a")
+            & ~SemanticPredicate(qb.embed, SimulatedOracle(qb.truth),
+                                 name="b"))
+    full = _engine(corpus, cfgs).filter(pred, seed=0)
+
+    pred2 = (SemanticPredicate(qa.embed, SimulatedOracle(qa.truth), name="a")
+             & ~SemanticPredicate(qb.embed, SimulatedOracle(qb.truth),
+                                  name="b"))
+    opt = QueryOptimizer()
+    engine = _engine(corpus, cfgs)
+    res = engine.session_view(optimizer=opt).filter(
+        SemanticTopK(pred2, k=8), seed=0)
+    accepted = np.flatnonzero(res.mask)
+    assert 0 < len(accepted) <= 8
+    assert full.mask[accepted].all()
+    assert opt.snapshot()["topk_queries"] == 1
+
+
+# -- the generative plan-equivalence harness ----------------------------------
+
+
+def _rand_shape(rng, n_leaves, depth):
+    """A random AST shape over leaf *indices* — instantiated per arm so
+    both arms get structurally identical trees over fresh oracles."""
+    if depth <= 0 or rng.random() < 0.35:
+        return ("leaf", int(rng.integers(n_leaves)))
+    r = float(rng.random())
+    if r < 0.25:
+        return ("not", _rand_shape(rng, n_leaves, depth - 1))
+    return ("and" if r < 0.65 else "or",
+            _rand_shape(rng, n_leaves, depth - 1),
+            _rand_shape(rng, n_leaves, depth - 1))
+
+
+def _instantiate(shape, leaves):
+    op = shape[0]
+    if op == "leaf":
+        return leaves[shape[1]]
+    if op == "not":
+        return ~_instantiate(shape[1], leaves)
+    a, b = _instantiate(shape[1], leaves), _instantiate(shape[2], leaves)
+    return a & b if op == "and" else a | b
+
+
+def _leaf_indices(shape):
+    if shape[0] == "leaf":
+        return {shape[1]}
+    return set().union(*(_leaf_indices(s) for s in shape[1:]))
+
+
+@pytest.mark.parametrize("scenario", range(3))
+def test_generative_plan_equivalence(corpus, cfgs, scenario):
+    """Acceptance gate. Four sessions run seeded random compound ASTs
+    (depth <= 4) with forced shared-leaf overlap, once through a shared
+    ``QueryOptimizer()`` and once through the ``cse=False`` arm
+    (identical stats evolution, no cache sharing). Per-session masks
+    must match bitwise; the CSE arm must buy no more oracle labels and
+    train each unique leaf exactly once while the isolated arm
+    re-trains shared leaves per session."""
+    pcfg, ccfg = cfgs
+    rng = np.random.default_rng(7000 + scenario)
+    sels = (0.2, 0.35, 0.5)
+    qs = [make_query(corpus, 100 * (scenario + 1) + j, selectivity=s)
+          for j, s in enumerate(sels)]
+
+    shapes = [_rand_shape(rng, len(qs), 3) for _ in range(4)]
+    # force cross-session sharing: sessions 2 and 3 both contain a
+    # designated shared leaf (total depth stays <= 4)
+    shared = int(rng.integers(len(qs)))
+    shapes[2] = ("and", ("leaf", shared), shapes[2])
+    shapes[3] = ("or", ("leaf", shared), shapes[3])
+    used = sorted(set().union(*map(_leaf_indices, shapes)))
+
+    def run_arm(cse):
+        leaves = [SemanticPredicate(q.embed, SimulatedOracle(q.truth),
+                                    name=f"L{j}")
+                  for j, q in enumerate(qs)]
+        engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+        opt = QueryOptimizer(cse=cse)
+        masks = []
+        for shape in shapes:
+            view = engine.session_view(optimizer=opt)
+            masks.append(view.filter(_instantiate(shape, leaves),
+                                     seed=0).mask.copy())
+        return masks, sum(lf.oracle.calls for lf in leaves), opt
+
+    on_masks, on_calls, opt_on = run_arm(True)
+    off_masks, off_calls, opt_off = run_arm(False)
+
+    for m_on, m_off in zip(on_masks, off_masks):
+        np.testing.assert_array_equal(m_on, m_off)
+    assert on_calls <= off_calls
+    assert opt_on.proxies_trained == len(used)
+    assert opt_off.proxies_trained > opt_on.proxies_trained
+    assert opt_on.artifact_hits + opt_on.proxy_hits > 0

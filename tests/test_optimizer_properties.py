@@ -1,0 +1,66 @@
+"""Property tests (hypothesis): the optimizer-facing algebra invariants
+— wire round-trips preserve leaf keys and Kleene semantics for random
+ASTs (including ``SemanticTopK`` roots), so shared-leaf CSE keys mean
+the same thing on both sides of the gateway. The always-on seeded
+harness lives in ``test_optimizer.py``; this module is gated by
+``conftest.py`` when hypothesis is absent."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, SemanticPredicate,
+                                    SemanticTopK, from_wire)
+
+_SHAPES = st.recursive(
+    st.tuples(st.just("leaf"), st.integers(0, 2)),
+    lambda ch: st.one_of(
+        st.tuples(st.just("not"), ch),
+        st.tuples(st.just("and"), ch, ch),
+        st.tuples(st.just("or"), ch, ch)),
+    max_leaves=8)
+
+
+class _NamedOracle:
+    def __init__(self, name):
+        self.wire_name = name
+
+
+_REGISTRY = {f"o{j}": _NamedOracle(f"o{j}") for j in range(3)}
+
+
+def _instantiate(shape, leaves):
+    op = shape[0]
+    if op == "leaf":
+        return leaves[shape[1]]
+    if op == "not":
+        return ~_instantiate(shape[1], leaves)
+    a, b = _instantiate(shape[1], leaves), _instantiate(shape[2], leaves)
+    return a & b if op == "and" else a | b
+
+
+def _leaves():
+    out = []
+    for j in range(3):
+        e_q = np.random.default_rng(j).normal(size=8).astype(np.float32)
+        out.append(SemanticPredicate(e_q, _REGISTRY[f"o{j}"], name=f"l{j}"))
+    return out
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=_SHAPES, seed=st.integers(0, 1000))
+def test_wire_roundtrip_preserves_keys_and_semantics(shape, seed):
+    pred = _instantiate(shape, _leaves())
+    back = from_wire(pred.to_wire(_REGISTRY), oracles=_REGISTRY)
+    assert [l.key for l in back.leaves()] == [l.key for l in pred.leaves()]
+    rng = np.random.default_rng(seed)
+    vals = {l.key: rng.choice([TRUE, FALSE, UNKNOWN], size=16).astype(np.int8)
+            for l in pred.leaves()}
+    np.testing.assert_array_equal(back.evaluate(vals), pred.evaluate(vals))
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=_SHAPES, k=st.integers(1, 10_000))
+def test_topk_wire_roundtrip(shape, k):
+    pred = SemanticTopK(_instantiate(shape, _leaves()), k=k)
+    back = from_wire(pred.to_wire(_REGISTRY), oracles=_REGISTRY)
+    assert isinstance(back, SemanticTopK) and back.k == k
+    assert [l.key for l in back.leaves()] == [l.key for l in pred.leaves()]

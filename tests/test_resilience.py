@@ -6,6 +6,11 @@ label is ever purchased twice across retries — pinned over all four
 paths (engine, server with concurrent clients, gateway over HTTP, live
 standing). With zero faults injected the policy layer is
 bit-transparent: identical decisions *and* identical purchase counts.
+
+The whole module is marked ``soak``: chaos injection and post-heal
+parity replays are the long tail of the suite, so tier-1
+(``pytest -x -q``) skips them by default and a dedicated CI job runs
+``pytest -m soak``.
 """
 import dataclasses
 import threading
@@ -27,6 +32,9 @@ from repro.serve import (BreakerConfig, ChaosConfig, ChaosOracle,
                          CircuitBreaker, OracleFault, OracleTimeout,
                          OracleUnavailable, PredicateServer,
                          ResilientOracle, RetryPolicy)
+
+# Chaos/soak suite: excluded from tier-1 by pytest.ini, run via `-m soak`.
+pytestmark = pytest.mark.soak
 
 N_DOCS, DIM = 512, 32
 

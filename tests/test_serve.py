@@ -460,3 +460,67 @@ def test_concurrent_filter_on_shared_engine_is_safe(corpus, cfgs):
     assert sorted(out) == [0, 1, 2]
     for mask in out.values():
         assert mask.dtype == bool and mask.shape == (N_DOCS,)
+
+
+# -- cross-query optimizer: shared-leaf CSE under concurrency ----------------
+
+
+def _shared_leaf_workload(corpus):
+    """4-client workload over exactly TWO unique leaves — every client
+    shares at least one leaf with another. Fresh oracle objects per
+    call so runs are independent."""
+    qa = make_query(corpus, 150, selectivity=0.3)
+    qb = make_query(corpus, 151, selectivity=0.4)
+    sims = [SimulatedOracle(qa.truth), SimulatedOracle(qb.truth)]
+    A = SemanticPredicate(qa.embed, CachedOracle(sims[0]), name="A")
+    B = SemanticPredicate(qb.embed, CachedOracle(sims[1]), name="B")
+    return sims, [A, B, A & ~B, A | B]
+
+
+@pytest.fixture(scope="module")
+def shared_leaf_serial(corpus, cfgs):
+    """Parity reference: each client's query on a fresh, optimizer-less
+    engine (sharing CachedOracles), all at seed 0."""
+    pcfg, ccfg = cfgs
+    sims, preds = _shared_leaf_workload(corpus)
+    masks = []
+    for pred in preds:
+        engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+        masks.append(engine.filter(pred, seed=0).mask)
+    return masks, sum(s.calls for s in sims)
+
+
+@pytest.mark.parametrize("case", range(10))
+def test_optimizer_concurrency_parity_and_single_training(
+        corpus, cfgs, shared_leaf_serial, case):
+    """Acceptance gate for shared-leaf CSE: under 10 seeded thread
+    interleavings of the 4-client shared-leaf workload, a
+    ``PredicateServer(optimize=True)`` must (i) reproduce the serial
+    optimizer-less masks bitwise and (ii) train each unique leaf's
+    proxy exactly once fleet-wide (pinned via server metrics) while
+    buying no more oracle labels than the serial runs."""
+    pcfg, ccfg = cfgs
+    serial_masks, serial_calls = shared_leaf_serial
+    rng = np.random.default_rng(4000 + case)
+
+    sims, preds = _shared_leaf_workload(corpus)
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=4, max_delay=0.003,
+                         optimize=True) as server:
+        order = rng.permutation(len(preds))
+        sessions = {}
+        for i in order:
+            sessions[i] = server.submit(preds[i], seed=0)
+            time.sleep(float(rng.uniform(0.0, 0.02)))
+        results = {i: s.result(timeout=300) for i, s in sessions.items()}
+        snap = server.metrics_snapshot()
+
+    for i, mask in enumerate(serial_masks):
+        np.testing.assert_array_equal(
+            mask, results[i].mask,
+            err_msg=f"case {case}: query {i} diverged from serial")
+    opt = snap["optimizer"]
+    assert opt["enabled"] and opt["cse"]
+    assert opt["proxies_trained"] == 2       # == n unique leaves
+    assert opt["artifact_hits"] + opt["flights_joined"] > 0
+    assert sum(s.calls for s in sims) <= serial_calls
