@@ -1,0 +1,171 @@
+"""Tracing overhead benchmark: the observability plane must be ~free.
+
+The span tree / provenance / ledger plane (repro.runtime.trace) rides
+the engine's hot path — every filter() opens plan/train/leaf/score/
+calibrate/decide spans and assembles a per-document provenance map —
+so its cost has to be bounded, and the disabled path has to vanish.
+This suite runs the same compound filter() workload three ways —
+untraced (NULL_TRACER, the engine default), traced (recording
+Tracer), and explicitly disabled (Tracer(enabled=False)) — plus a
+span open/close microbenchmark. Reported rows:
+
+  trace/filter_untraced      baseline compound filter, min over reps
+  trace/filter_traced        same workload with a recording tracer
+  trace/filter_disabled      same workload, Tracer(enabled=False)
+  trace/span_open_close      per-span cost, recording tracer (us)
+  trace/span_disabled        per-span cost, disabled path (us)
+  trace/overhead             gate row (0 = pass): traced overhead
+                             < 5%, disabled overhead < 2%, and masks
+                             bitwise identical across all three modes
+
+``--smoke`` shrinks the workload for CI; ``--json PATH`` writes rows +
+derived metrics (default BENCH_trace.json).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core.oracle import CachedOracle, SimulatedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+from repro.runtime import trace as trace_mod
+
+TRACED_LIMIT = 0.05      # traced overhead gate: < 5%
+DISABLED_LIMIT = 0.02    # disabled-path gate: indistinguishable (~0%)
+
+
+def _workload(smoke: bool):
+    if smoke:
+        n_docs, dim, reps = 1200, 32, 3
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=64, latent_dim=32,
+                           proj_dim=16, phase1_steps=30, phase2_steps=30)
+    else:
+        n_docs, dim, reps = 4000, 64, 5
+        pcfg = ProxyConfig(embed_dim=dim, hidden_dim=128, latent_dim=64,
+                           proj_dim=32, phase1_steps=60, phase2_steps=60)
+    corpus = make_corpus(0, n_docs=n_docs, dim=dim)
+    queries = [make_query(corpus, 100 + i, selectivity=0.3)
+               for i in range(2)]
+    return corpus, queries, pcfg, CascadeConfig(accuracy_target=0.9), reps
+
+
+def _one_filter(corpus, queries, pcfg, ccfg, tracer):
+    """One full compound filter on a fresh engine + fresh oracles (every
+    mode pays the identical train/score/calibrate/purchase work)."""
+    cached = [CachedOracle(SimulatedOracle(q.truth)) for q in queries]
+    p0 = SemanticPredicate(queries[0].embed, cached[0], name="p0")
+    p1 = SemanticPredicate(queries[1].embed, cached[1], name="p1")
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    engine._tracer = tracer
+    t0 = time.perf_counter()
+    result = engine.filter(p0 & ~p1, seed=0)
+    return time.perf_counter() - t0, result.mask
+
+
+def _span_cost_us(tracer, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tracer.span("bench", kind="micro"):
+            pass
+    return (time.perf_counter() - t0) * 1e6 / n
+
+
+def run(rows: Rows, *, smoke: bool = False) -> dict:
+    corpus, queries, pcfg, ccfg, reps = _workload(smoke)
+
+    modes = {
+        "untraced": lambda: trace_mod.NULL_TRACER,
+        # fresh recorder per rep so the ring never influences timing
+        "traced": lambda: trace_mod.Tracer(capacity=4096),
+        "disabled": lambda: trace_mod.Tracer(enabled=False),
+    }
+
+    # warmup compiles the train/score programs outside every timing
+    _one_filter(corpus, queries, pcfg, ccfg, trace_mod.NULL_TRACER)
+
+    # interleave modes across reps so drift (thermal, allocator) hits
+    # all three equally; min-over-reps is the noise-robust estimator
+    seconds = {m: [] for m in modes}
+    masks = {}
+    for _ in range(reps):
+        for mode, make in modes.items():
+            s, mask = _one_filter(corpus, queries, pcfg, ccfg, make())
+            seconds[mode].append(s)
+            prev = masks.setdefault(mode, mask)
+            assert np.array_equal(prev, mask)
+    best = {m: min(v) for m, v in seconds.items()}
+
+    overhead = {m: best[m] / best["untraced"] - 1.0
+                for m in ("traced", "disabled")}
+    for mode in modes:
+        rows.add(f"trace/filter_{mode}", best[mode] * 1e6,
+                 f"min_of={reps}" + (
+                     "" if mode == "untraced"
+                     else f";overhead={overhead[mode]:+.2%}"))
+
+    n_spans = 20_000 if smoke else 100_000
+    span_us = _span_cost_us(trace_mod.Tracer(capacity=4096), n_spans)
+    noop_us = _span_cost_us(trace_mod.Tracer(enabled=False), n_spans)
+    rows.add("trace/span_open_close", span_us, f"n={n_spans}")
+    rows.add("trace/span_disabled", noop_us,
+             f"n={n_spans};vs_enabled={noop_us / max(span_us, 1e-9):.1%}")
+
+    parity = (np.array_equal(masks["untraced"], masks["traced"])
+              and np.array_equal(masks["untraced"], masks["disabled"]))
+    gates_ok = (parity and overhead["traced"] < TRACED_LIMIT
+                and overhead["disabled"] < DISABLED_LIMIT)
+    rows.add("trace/overhead", 0.0 if gates_ok else 1.0,
+             f"traced={overhead['traced']:+.2%}(<{TRACED_LIMIT:.0%});"
+             f"disabled={overhead['disabled']:+.2%}"
+             f"(<{DISABLED_LIMIT:.0%});parity={'ok' if parity else 'FAIL'}")
+
+    derived = {"smoke": smoke, "reps": reps,
+               "filter_seconds": {m: best[m] for m in modes},
+               "overhead_traced": overhead["traced"],
+               "overhead_disabled": overhead["disabled"],
+               "span_open_close_us": span_us,
+               "span_disabled_us": noop_us,
+               "parity": parity}
+
+    if not parity:
+        raise AssertionError(
+            "tracing changed decisions: masks differ across "
+            "untraced/traced/disabled runs of the identical workload")
+    if overhead["traced"] >= TRACED_LIMIT:
+        raise AssertionError(
+            f"traced filter overhead {overhead['traced']:+.2%} exceeds "
+            f"the {TRACED_LIMIT:.0%} budget "
+            f"(untraced {best['untraced']:.3f}s vs "
+            f"traced {best['traced']:.3f}s)")
+    if overhead["disabled"] >= DISABLED_LIMIT:
+        raise AssertionError(
+            f"disabled-tracer overhead {overhead['disabled']:+.2%} "
+            f"exceeds {DISABLED_LIMIT:.0%} — the no-op path must be "
+            f"indistinguishable from the untraced baseline")
+    return derived
+
+
+def main() -> None:
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--smoke", action="store_true",
+                        help="small workload (the CI configuration)")
+    parser.add_argument("--json", nargs="?", const="BENCH_trace.json",
+                        default=None, metavar="PATH",
+                        help="write rows + derived metrics as JSON")
+    args = parser.parse_args()
+    rows = Rows()
+    derived = run(rows, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    rows.emit()
+    if args.json:
+        rows.to_json(args.json, extra={"derived": derived})
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

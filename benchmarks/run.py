@@ -13,7 +13,7 @@ def main() -> None:
                             bench_compound, bench_gateway, bench_ingest,
                             bench_kernels, bench_live, bench_optimizer,
                             bench_resilience, bench_serve, bench_thresholds,
-                            bench_tradeoff, bench_training)
+                            bench_trace, bench_tradeoff, bench_training)
     from benchmarks.common import Rows
 
     parser = argparse.ArgumentParser()
@@ -37,6 +37,7 @@ def main() -> None:
         ("live (standing predicates, delta vs rescan)", bench_live.run),
         ("resilience (faulty oracle plane)", bench_resilience.run),
         ("optimizer (shared-leaf CSE + top-k)", bench_optimizer.run),
+        ("trace (observability overhead)", bench_trace.run),
     ]
     rows = Rows()
     timings = {}

@@ -1,0 +1,98 @@
+"""Observability plane: span tree, decision provenance, cost ledger.
+
+    PYTHONPATH=src python examples/trace_demo.py
+
+Runs one *compound* query (q0 AND NOT q1) through the full serving
+stack — ``GatewayClient`` → ``PredicateGateway`` → ``PredicateServer``
+→ ``ScaleDocEngine`` → ``OracleBroker`` — with a caller-supplied trace
+context, then prints the three observability products the stack emits:
+
+* the rooted **span tree** for the session (gateway request → server
+  session → engine filter → plan/train/leaf/score/calibrate/decide →
+  broker requests), durations in ms;
+* the **decision provenance** from ``/v1/queries/<id>/explain`` —
+  which mechanism decided every document, and at which leaf;
+* the **cost ledger** — oracle documents and FLOP estimates attributed
+  to the tenant, reconciled against the oracle cache's purchase
+  counters — plus a taste of the Prometheus text exposition.
+"""
+import numpy as np
+
+from repro.config.base import CascadeConfig, ProxyConfig
+from repro.core import SimulatedOracle
+from repro.core.oracle import CachedOracle
+from repro.data import make_corpus, make_query
+from repro.engine import InMemoryStore, ScaleDocEngine, SemanticPredicate
+from repro.gateway import GatewayClient, PredicateGateway, Tenant
+from repro.runtime import trace as trace_mod
+from repro.serve import PredicateServer
+
+N_DOCS, DIM = 2000, 64
+
+
+def main():
+    corpus = make_corpus(0, n_docs=N_DOCS, dim=DIM)
+    pcfg = ProxyConfig(embed_dim=DIM, hidden_dim=64, latent_dim=32,
+                       proj_dim=16, phase1_steps=40, phase2_steps=40)
+    ccfg = CascadeConfig(accuracy_target=0.9)
+
+    qs = [make_query(corpus, 100 + i, selectivity=0.3) for i in range(2)]
+    cached = [CachedOracle(SimulatedOracle(q.truth)) for q in qs]
+    p0 = SemanticPredicate(qs[0].embed, cached[0], name="p0")
+    p1 = SemanticPredicate(qs[1].embed, cached[1], name="p1")
+    oracles = {"o0": cached[0], "o1": cached[1]}
+    wire = (p0 & ~p1).to_wire(oracles)
+
+    engine = ScaleDocEngine(InMemoryStore(corpus.embeds), pcfg, ccfg)
+    with PredicateServer(engine, workers=2) as server:
+        with PredicateGateway(server, oracles,
+                              tenants=[Tenant("acme", "k-acme")]) as gw:
+            client = GatewayClient(gw.url, api_key="k-acme")
+
+            # a caller-side root span: everything the stack does for
+            # this query parents onto it via the traceparent header
+            caller = server.tracer.span("client.query", kind="client",
+                                        predicate="p0 AND NOT p1")
+            with caller:
+                sub = client.submit(wire, seed=0, trace_ctx=caller)
+                client.wait(sub["id"], timeout=600, interval=0.2)
+            trace_id = sub["trace_id"]
+            print(f"session {sub['id']}  trace {trace_id}\n")
+
+            print("== span tree " + "=" * 50)
+            spans = client.traces(trace_id=trace_id)["spans"]
+            print(trace_mod.format_span_tree(spans))
+
+            print("\n== decision provenance (/explain) " + "=" * 29)
+            ex = client.explain(sub["id"], include_docs=False)
+            for cls, count in sorted(ex["counts"].items(),
+                                     key=lambda kv: -kv[1]):
+                print(f"  {cls:<16} {count:>6}  "
+                      f"({100.0 * count / ex['n_docs']:.1f}%)")
+            print(f"  {'total':<16} {ex['n_docs']:>6}  "
+                  f"(complete={ex['complete']})")
+
+            print("\n== cost ledger " + "=" * 48)
+            ledger = client.metrics()["cost_ledger"]
+            acme = ledger["tenants"]["acme"]
+            print(f"  tenant acme: {acme['oracle_docs']} oracle docs "
+                  f"(train {acme['oracle_docs_train']} / "
+                  f"calib {acme['oracle_docs_calib']} / "
+                  f"online {acme['oracle_docs_online']})")
+            print(f"  oracle FLOPs ~{acme['oracle_flops']:.3g}, "
+                  f"proxy FLOPs ~{acme['proxy_flops']:.3g}")
+            purchased = sum(o.stats()["docs_purchased"]
+                            for o in oracles.values())
+            print(f"  oracle-cache purchases: {purchased} "
+                  f"(ledger reconciles: "
+                  f"{acme['oracle_docs'] == purchased})")
+
+            print("\n== prometheus exposition (excerpt) " + "=" * 28)
+            text = client.metrics_prometheus()
+            for line in text.splitlines():
+                if "sessions_done" in line or "latency_seconds_c" in line:
+                    print(f"  {line}")
+
+
+if __name__ == "__main__":
+    main()

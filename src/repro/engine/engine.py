@@ -69,6 +69,7 @@ from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, And, Not, Or,
                                     SemanticTopK)
 from repro.engine.registry import get_calibrator, get_strategy
 from repro.engine.store import DocumentStore, InMemoryStore, as_store
+from repro.runtime import trace as trace_mod
 
 # below this many documents in the COLLECTION the cascade machinery
 # (calibration sample, threshold selection) costs more than it saves —
@@ -150,6 +151,20 @@ class LeafReport:
     pending: np.ndarray                 # global doc indices this leaf saw
     scores: Optional[np.ndarray]        # proxy scores over `pending`
     labels: Optional[np.ndarray] = None  # leaf decisions over `pending`
+    # per-pending-doc decision mechanism at THIS leaf (trace_mod codes:
+    # PROXY_ACCEPT/PROXY_REJECT for threshold auto-decisions, ORACLE for
+    # purchased band labels, CACHED_LABEL for band labels already in the
+    # shared cache) — the raw material of FilterResult.provenance
+    mech: Optional[np.ndarray] = None
+    # oracle docs this session was actually CHARGED for at this leaf
+    # beyond training (calibration + online band), measured as a
+    # session-handle ``calls`` delta. Cache hits and joins of another
+    # session's in-flight batch are free, so train + charged summed over
+    # a session's leaves reconciles exactly against the broker's
+    # purchase counters — the cost ledger's column. The ``oracle_calls_*``
+    # fields above keep ask-level accounting (docs the cascade *sent* to
+    # the oracle stage), the paper's data-reduction metric.
+    oracle_docs_charged: int = 0
 
     @property
     def oracle_calls(self) -> int:
@@ -187,6 +202,10 @@ class FilterResult:
     fallback_docs: int = 0
     est_accuracy_debit: float = 0.0
     error: Optional[str] = None
+    # decision provenance: for every doc, which mechanism decided it at
+    # the root and at which leaf (trace_mod.ProvenanceMap; None only on
+    # legacy constructions)
+    provenance: Optional[trace_mod.ProvenanceMap] = None
 
     @property
     def data_reduction(self) -> float:
@@ -268,6 +287,9 @@ class ScaleDocEngine:
         #   _observer receives phase / partial-result callbacks
         self._oracle_wrap: Optional[Callable] = None
         self._observer = None
+        # tracing: NULL_TRACER (disabled, allocation-free no-op spans)
+        # unless the serving layer attaches a live one via session_view
+        self._tracer: trace_mod.Tracer = trace_mod.NULL_TRACER
         # populated by from_corpus(): the offline phase's accounting
         self.ingest_result = None
 
@@ -306,7 +328,8 @@ class ScaleDocEngine:
 
     def session_view(self, *, oracle_wrap: Optional[Callable] = None,
                      observer=None, share_caches: bool = False,
-                     optimizer: Optional[QueryOptimizer] = None
+                     optimizer: Optional[QueryOptimizer] = None,
+                     tracer: Optional[trace_mod.Tracer] = None
                      ) -> "ScaleDocEngine":
         """A lightweight per-session view over this engine.
 
@@ -337,6 +360,11 @@ class ScaleDocEngine:
         view = copy.copy(self)
         view._oracle_wrap = oracle_wrap
         view._observer = observer
+        if tracer is not None:
+            # tracing is observability only: spans never touch an RNG
+            # stream or an oracle, so traced and untraced sessions make
+            # bitwise-identical decisions
+            view._tracer = tracer
         if optimizer is not None:
             view._optimizer = optimizer
         if not share_caches:
@@ -423,10 +451,14 @@ class ScaleDocEngine:
         out: List[FilterResult] = []
         for ticket in self.take_repairs():
             view = self.session_view()
-            out.append(view.filter(
-                ticket.predicate, accuracy_target=ticket.accuracy_target,
-                ground_truth=ticket.ground_truth, seed=ticket.seed,
-                degrade="defer", name=ticket.name))
+            with self._tracer.span("repair.replay", kind="repair",
+                                   query=ticket.name or "",
+                                   unresolved=len(ticket.unresolved)):
+                out.append(view.filter(
+                    ticket.predicate,
+                    accuracy_target=ticket.accuracy_target,
+                    ground_truth=ticket.ground_truth, seed=ticket.seed,
+                    degrade="defer", name=ticket.name))
         return out
 
     def clear_caches(self) -> None:
@@ -562,9 +594,15 @@ class ScaleDocEngine:
                 if opt.has_artifact(dkey):
                     # the full leaf evaluation already exists — scoring
                     # params are never needed
+                    trace_mod.add_event("cse.artifact_hit",
+                                        leaf=leaf.name)
                     info[leaf.key] = (0, True)
                     continue
                 kind, val = opt.claim_proxy(leaf.key, seed)
+                # single-flight visibility: "owner" paid for the train
+                # pass, "hit"/"wait" reused it (CSE credit in the ledger)
+                trace_mod.add_event("cse.proxy_claim", leaf=leaf.name,
+                                    outcome=kind)
                 if kind == "hit":
                     local_params[leaf.key] = val
                     info[leaf.key] = (0, True)
@@ -680,6 +718,7 @@ class ScaleDocEngine:
         if n <= DIRECT_LABEL_CUTOFF:
             # tiny collection: a document's decision IS its oracle label
             # (canonical per doc, so plan position cannot change it)
+            mech = self._peek_mech(oracle, pending)
             calls0 = oracle.calls
             labels = oracle.label(pending)
             return LeafReport(
@@ -687,15 +726,21 @@ class ScaleDocEngine:
                 oracle_calls_train=train_calls, oracle_calls_calib=0,
                 oracle_calls_online=oracle.calls - calls0,
                 proxy_reused=reused, cascade=None,
-                pending=pending, scores=None, labels=labels)
+                pending=pending, scores=None, labels=labels, mech=mech,
+                oracle_docs_charged=oracle.calls - calls0)
 
         dkey = (leaf.key, self.strategy, ccfg, seed)
+        charged0 = oracle.calls
         art, calib_calls, online_build = self._leaf_artifact(
             leaf, dkey, ccfg, seed, local_params, stats)
 
         scores = art.scores[pending]
-        labels, ambiguous, online_calls = self._decide_pending(
-            art, oracle, pending)
+        with self._tracer.span("decide", kind="cascade", leaf=leaf.name,
+                               pending=len(pending)) as dspan:
+            labels, ambiguous, online_calls, mech = self._decide_pending(
+                art, oracle, pending)
+            dspan.set(oracle_calls=online_calls,
+                      band=int(ambiguous.sum()))
         online_calls += online_build
         cres = CascadeResult(
             labels=labels, l=art.l, r=art.r,
@@ -718,7 +763,8 @@ class ScaleDocEngine:
             oracle_calls_calib=calib_calls,
             oracle_calls_online=online_calls,
             proxy_reused=reused, cascade=cres, pending=pending,
-            scores=scores, labels=labels)
+            scores=scores, labels=labels, mech=mech,
+            oracle_docs_charged=oracle.calls - charged0)
 
     def _leaf_artifact(self, leaf: SemanticPredicate, dkey: tuple,
                        ccfg: CascadeConfig, seed: int,
@@ -736,6 +782,10 @@ class ScaleDocEngine:
         opt = self._optimizer
         if opt is not None:
             kind, val = opt.claim_artifact(dkey)
+            # who paid vs who reused: "owner" builds (train/score/
+            # calibrate on its dime), "hit"/"wait" ride for free
+            trace_mod.add_event("cse.artifact_claim", leaf=leaf.name,
+                                outcome=kind)
             if kind == "owner":
                 try:
                     art, calib, online = self._build_artifact(
@@ -775,14 +825,21 @@ class ScaleDocEngine:
                 f"no trained proxy for leaf {leaf.name!r}; "
                 "_train_pending_leaves must run before leaf execution")
         oracle = self._session_oracle(leaf.oracle)
-        scores, pass_stats = self.executor.score(params, leaf.e_q,
-                                                 self.store)
+        with self._tracer.span("score", kind="executor",
+                               leaf=leaf.name) as sspan:
+            scores, pass_stats = self.executor.score(params, leaf.e_q,
+                                                     self.store)
+            sspan.set(docs=int(pass_stats.docs_scored))
         stats.merge(pass_stats)
         rng = self._calib_rng(seed, leaf)
         calls0 = oracle.calls
         calibrator = get_calibrator(self.strategy)
         if calibrator is not None:
-            spec = calibrator(scores, oracle, ccfg, rng)
+            with self._tracer.span("calibrate", kind="cascade",
+                                   leaf=leaf.name) as cspan:
+                spec = calibrator(scores, oracle, ccfg, rng)
+                cspan.set(oracle_calls=oracle.calls - calls0,
+                          l=float(spec.l), r=float(spec.r))
             art = LeafArtifact(
                 key=leaf.key, name=leaf.name, scores=scores,
                 params=params, l=spec.l, r=spec.r,
@@ -830,6 +887,24 @@ class ScaleDocEngine:
                          else float(np.mean(y)))
         return float(min(max(pos + band_frac * band_rate, 0.0), 1.0))
 
+    @staticmethod
+    def _peek_mech(oracle, docs: np.ndarray) -> np.ndarray:
+        """Mechanism codes for docs about to be direct-labeled: ORACLE
+        for labels the cache doesn't hold yet (a purchase), CACHED_LABEL
+        for the rest. Must run *before* ``oracle.label`` (which fills
+        the cache). ``peek`` never mutates, so this is parity-safe."""
+        mech = np.full(len(docs), trace_mod.CACHED_LABEL, np.int8)
+        peek = getattr(oracle, "peek", None)
+        if peek is None:
+            mech[:] = trace_mod.ORACLE
+            return mech
+        uncached = set(int(g) for g in peek(docs))
+        if uncached:
+            fresh = np.array([j for j, g in enumerate(docs)
+                              if int(g) in uncached], np.int64)
+            mech[fresh] = trace_mod.ORACLE
+        return mech
+
     def _decide_pending(self, art: LeafArtifact, oracle,
                         pending: np.ndarray):
         """Resolve a pending subset against a leaf artifact: accept
@@ -837,25 +912,42 @@ class ScaleDocEngine:
         (reusing calibration labels already purchased). Per-doc
         decisions are pure functions of the artifact plus the shared
         label cache, so any partition of documents across sessions or
-        plan positions yields the same values."""
+        plan positions yields the same values.
+
+        Returns ``(labels, ambiguous, purchased, mech)`` where ``mech``
+        carries the per-doc decision mechanism (PROXY_ACCEPT /
+        PROXY_REJECT for threshold auto-decisions, ORACLE for band
+        labels bought now, CACHED_LABEL for band labels resolved from
+        calibration samples or the shared label cache)."""
         if art.labels_full is not None:
+            # whole-strategy artifact: decisions were materialized
+            # eagerly at build time — to this session they are cache
+            # reads, whoever originally paid for them
             return (art.labels_full[pending],
-                    np.zeros(len(pending), bool), 0)
+                    np.zeros(len(pending), bool), 0,
+                    np.full(len(pending), trace_mod.CACHED_LABEL,
+                            np.int8))
         s = art.scores[pending]
         labels = s > art.r
         ambiguous = ~(labels | (s < art.l))
+        mech = np.where(labels, trace_mod.PROXY_ACCEPT,
+                        trace_mod.PROXY_REJECT).astype(np.int8)
+        mech[ambiguous] = trace_mod.CACHED_LABEL
         known = {int(i): bool(y) for i, y in zip(art.sample_idx,
                                                  art.sample_labels)}
         amb_local = np.nonzero(ambiguous)[0]
         need = np.array([i for i in amb_local
                          if int(pending[i]) not in known], np.int64)
         if len(need):
+            # classify before labeling: label() fills the cache, so the
+            # oracle-vs-cached split must be observed first
+            mech[need] = self._peek_mech(oracle, pending[need])
             labels[need] = np.asarray(oracle.label(pending[need]), bool)
         for i in amb_local:
             g = int(pending[i])
             if g in known:
                 labels[i] = known[g]
-        return labels, ambiguous, int(len(need))
+        return labels, ambiguous, int(len(need)), mech
 
     # -- degraded-mode resolution ----------------------------------------
 
@@ -864,7 +956,9 @@ class ScaleDocEngine:
                         leaves: List[SemanticPredicate],
                         leaf_values: Dict[str, np.ndarray],
                         local_params: Dict[str, Dict],
-                        root: np.ndarray, stats: ScoringStats):
+                        root: np.ndarray, stats: ScoringStats,
+                        last_mech: Optional[np.ndarray] = None,
+                        last_writer: Optional[np.ndarray] = None):
         """Decide every still-UNKNOWN document by proxy score alone.
 
         The cut placement uses the best oracle-free selectivity signal
@@ -879,7 +973,7 @@ class ScaleDocEngine:
         decisions carry no accuracy contract."""
         n = len(self.store)
         before = int(np.sum(root == UNKNOWN))
-        for leaf in order:
+        for oi, leaf in enumerate(order):
             pending = np.nonzero(root == UNKNOWN)[0]
             if not len(pending):
                 break
@@ -914,6 +1008,12 @@ class ScaleDocEngine:
                 vals = vals.copy()
                 vals[need] = (s > cut).astype(np.int8)
                 leaf_values[leaf.key] = vals
+                if last_mech is not None:
+                    # every doc the outage stranded receives at least
+                    # one fallback write before its root decides, so
+                    # last-writer-wins marks exactly the fallback set
+                    last_mech[need] = trace_mod.PROXY_FALLBACK
+                    last_writer[need] = oi
             full = {lf.key: leaf_values.get(
                 lf.key, np.full(n, UNKNOWN, np.int8)) for lf in leaves}
             prev_root = root
@@ -974,10 +1074,30 @@ class ScaleDocEngine:
         ccfg = self.cascade_cfg
         if accuracy_target is not None:
             ccfg = replace(ccfg, accuracy_target=accuracy_target)
-        if isinstance(predicate, SemanticTopK):
-            return self._filter_topk(
-                predicate, ccfg=ccfg, ground_truth=ground_truth,
-                seed=seed, mode=mode, name=name, t0=t0)
+        op = "topk" if isinstance(predicate, SemanticTopK) else "filter"
+        with self._tracer.span("engine.filter", kind="engine", op=op,
+                               seed=seed, degrade=mode,
+                               query=name or "") as fspan:
+            if isinstance(predicate, SemanticTopK):
+                res = self._filter_topk(
+                    predicate, ccfg=ccfg, ground_truth=ground_truth,
+                    seed=seed, mode=mode, name=name, t0=t0)
+            else:
+                res = self._filter_compound(
+                    predicate, ccfg=ccfg,
+                    accuracy_target=accuracy_target,
+                    ground_truth=ground_truth, seed=seed, mode=mode,
+                    name=name, t0=t0)
+            fspan.set(oracle_calls=res.oracle_calls_total,
+                      degraded=res.degraded, plan=res.plan)
+            return res
+
+    def _filter_compound(self, predicate: Predicate, *,
+                         ccfg: CascadeConfig,
+                         accuracy_target: Optional[float],
+                         ground_truth: Optional[np.ndarray], seed: int,
+                         mode: str, name: Optional[str],
+                         t0: float) -> FilterResult:
         n = len(self.store)
 
         leaves = predicate.leaves()
@@ -985,9 +1105,12 @@ class ScaleDocEngine:
         # single-leaf predicates have nothing to reorder — skip the
         # estimation pass over the collection
         self._notify("planning")
-        sel = (self._estimate_selectivities(leaves, scoring_stats)
-               if len(leaves) > 1 else {})
-        order, _ = predicate.plan(sel)
+        with self._tracer.span("plan", kind="engine",
+                               leaves=len(leaves)) as pspan:
+            sel = (self._estimate_selectivities(leaves, scoring_stats)
+                   if len(leaves) > 1 else {})
+            order, _ = predicate.plan(sel)
+            pspan.set(order=" -> ".join(lf.name for lf in order))
         leaf_truth = _derivable_leaf_truth(predicate, ground_truth)
 
         calls_before = {}
@@ -1007,10 +1130,20 @@ class ScaleDocEngine:
         degrade_error: Optional[OracleError] = None
         fallback_docs = 0
         unresolved = np.zeros(0, np.int64)
+        # decision provenance, last-writer-wins: once the root decides a
+        # doc it leaves every later leaf's pending set, so the last leaf
+        # to write a doc's mechanism/index is its deciding leaf
+        last_mech = np.full(n, -1, np.int8)
+        last_writer = np.full(n, -1, np.int16)
+        order_pos = {lf.key: i for i, lf in enumerate(order)}
         try:
             self._notify("training")
-            train_info, local_params = self._train_pending_leaves(
-                order, ccfg, seed)
+            with self._tracer.span("train", kind="engine",
+                                   leaves=len(order)) as tspan:
+                train_info, local_params = self._train_pending_leaves(
+                    order, ccfg, seed)
+                tspan.set(oracle_calls=sum(
+                    c for c, _ in train_info.values()))
 
             self._notify("scoring")
             for leaf in order:
@@ -1020,11 +1153,18 @@ class ScaleDocEngine:
                 truth_local = leaf_truth.get(leaf.key)
                 if truth_local is not None:
                     truth_local = truth_local[pending]
-                report = self._execute_leaf(leaf, pending, ccfg,
-                                            train_info, local_params,
-                                            truth_local, seed,
-                                            scoring_stats)
+                with self._tracer.span(f"leaf:{leaf.name}", kind="leaf",
+                                       pending=len(pending)) as lspan:
+                    report = self._execute_leaf(leaf, pending, ccfg,
+                                                train_info, local_params,
+                                                truth_local, seed,
+                                                scoring_stats)
+                    lspan.set(oracle_calls=report.oracle_calls,
+                              reused=report.proxy_reused)
                 reports.append(report)
+                if report.mech is not None:
+                    last_mech[pending] = report.mech
+                    last_writer[pending] = order_pos[leaf.key]
                 vals = np.full(n, UNKNOWN, np.int8)
                 vals[pending] = report.labels.astype(np.int8)
                 leaf_values[leaf.key] = vals
@@ -1060,12 +1200,17 @@ class ScaleDocEngine:
             else:  # proxy_fallback
                 root, fallback_docs = self._proxy_fallback(
                     predicate, order, leaves, leaf_values, local_params,
-                    root, scoring_stats)
+                    root, scoring_stats, last_mech, last_writer)
 
         total = sum(o.calls - before
                     for o, before in calls_before.values())
+        mask = root == TRUE
+        provenance = self._assemble_provenance(
+            mask, last_mech, last_writer,
+            [lf.name for lf in order], leaves=leaves,
+            leaf_values=leaf_values, unresolved=unresolved)
         result = FilterResult(
-            mask=(root == TRUE),
+            mask=mask,
             oracle_calls_total=total,
             oracle_calls_train=sum(c for c, _ in train_info.values()),
             leaf_reports=reports,
@@ -1079,13 +1224,64 @@ class ScaleDocEngine:
             fallback_docs=fallback_docs,
             est_accuracy_debit=self._fallback_debit(reports, fallback_docs,
                                                     n),
-            error=str(degrade_error) if degrade_error is not None else None)
+            error=str(degrade_error) if degrade_error is not None else None,
+            provenance=provenance)
         if ground_truth is not None:
             truth = np.asarray(ground_truth).astype(bool)
             result.achieved_f1 = f1_score(result.mask, truth)
             result.achieved_exact = float(np.mean(result.mask == truth))
         self._notify("done")
         return result
+
+    @staticmethod
+    def _assemble_provenance(mask: np.ndarray, last_mech: np.ndarray,
+                             last_writer: np.ndarray,
+                             leaf_names: List[str], *,
+                             leaves: Optional[List[SemanticPredicate]]
+                             = None,
+                             leaf_values: Optional[Dict[str, np.ndarray]]
+                             = None,
+                             unresolved: Optional[np.ndarray] = None,
+                             topk_skip: Optional[np.ndarray] = None
+                             ) -> trace_mod.ProvenanceMap:
+        """Finalize the last-writer mechanism track into root-relative
+        provenance classes.
+
+        Leaf-level threshold codes are remapped against the root mask
+        (with negation in the tree, a leaf auto-accept can decide the
+        root False → ``proxy_reject``); a threshold decision that
+        short-circuited at least one later leaf (some leaf value still
+        UNKNOWN for that doc) becomes ``short_circuit``. Oracle /
+        cached-label decisions keep their mechanism even when they
+        short-circuit — the purchased label is what decided the doc.
+        ``unresolved`` (defer) and ``topk_skip`` overrides come last.
+        """
+        class_of = last_mech.copy()
+        leaf_of = last_writer.copy()
+        thresh = ((class_of == trace_mod.PROXY_ACCEPT)
+                  | (class_of == trace_mod.PROXY_REJECT))
+        if leaves is not None and leaf_values is not None \
+                and len(leaves) > 1:
+            skipped = np.zeros(len(mask), bool)
+            for lf in leaves:
+                vals = leaf_values.get(lf.key)
+                if vals is None:
+                    skipped[:] = True
+                    break
+                skipped |= vals == UNKNOWN
+            class_of[thresh & skipped] = trace_mod.SHORT_CIRCUIT
+            thresh &= ~skipped
+        class_of[thresh & mask] = trace_mod.PROXY_ACCEPT
+        class_of[thresh & ~mask] = trace_mod.PROXY_REJECT
+        if topk_skip is not None and len(topk_skip):
+            class_of[topk_skip] = trace_mod.TOPK_SKIP
+            leaf_of[topk_skip] = -1
+        if unresolved is not None and len(unresolved):
+            class_of[unresolved] = trace_mod.UNRESOLVED
+            leaf_of[unresolved] = -1
+        return trace_mod.ProvenanceMap(class_of=class_of,
+                                       leaf_of=leaf_of,
+                                       leaf_names=list(leaf_names))
 
     # -- semantic top-k ----------------------------------------------------
 
@@ -1132,9 +1328,12 @@ class ScaleDocEngine:
         leaves = child.leaves()
         scoring_stats = ScoringStats()
         self._notify("planning")
-        sel = (self._estimate_selectivities(leaves, scoring_stats)
-               if len(leaves) > 1 else {})
-        order, _ = child.plan(sel)
+        with self._tracer.span("plan", kind="engine",
+                               leaves=len(leaves), k=k) as pspan:
+            sel = (self._estimate_selectivities(leaves, scoring_stats)
+                   if len(leaves) > 1 else {})
+            order, _ = child.plan(sel)
+            pspan.set(order=" -> ".join(lf.name for lf in order))
 
         calls_before = {}
         for leaf in leaves:
@@ -1146,6 +1345,7 @@ class ScaleDocEngine:
                      for leaf in leaves}
         online_by_key = {leaf.key: 0 for leaf in leaves}
         build_calib = {leaf.key: 0 for leaf in leaves}
+        charged_by_key = {leaf.key: 0 for leaf in leaves}
         arts: Dict[str, LeafArtifact] = {}
         train_info: Dict[str, tuple] = {}
         accepted: List[int] = []
@@ -1154,20 +1354,31 @@ class ScaleDocEngine:
         degrade_error: Optional[OracleError] = None
         fallback_docs = 0
         unresolved = np.zeros(0, np.int64)
+        # provenance (last-writer-wins, same argument as filter())
+        last_mech = np.full(n, -1, np.int8)
+        last_writer = np.full(n, -1, np.int16)
         try:
             self._notify("training")
-            train_info, local_params = self._train_pending_leaves(
-                order, ccfg, seed)
+            with self._tracer.span("train", kind="engine",
+                                   leaves=len(order)) as tspan:
+                train_info, local_params = self._train_pending_leaves(
+                    order, ccfg, seed)
+                tspan.set(oracle_calls=sum(
+                    c for c, _ in train_info.values()))
             self._notify("scoring")
             if n <= DIRECT_LABEL_CUTOFF:
                 # tiny collection: label everything, keep the k lowest
                 # doc ids among members (stable, canonical)
-                for leaf in order:
+                for oi, leaf in enumerate(order):
                     oracle = self._session_oracle(leaf.oracle)
+                    mech = self._peek_mech(oracle, np.arange(n))
                     calls0 = oracle.calls
                     leaf_vals[leaf.key][:] = np.asarray(
                         oracle.label(np.arange(n)), bool).astype(np.int8)
                     online_by_key[leaf.key] += oracle.calls - calls0
+                    charged_by_key[leaf.key] += oracle.calls - calls0
+                    last_mech[:] = mech
+                    last_writer[:] = oi
                 order_idx = np.arange(n)
                 walked = n
                 member = child.evaluate(leaf_vals) == TRUE
@@ -1175,12 +1386,18 @@ class ScaleDocEngine:
             else:
                 for leaf in order:
                     dkey = (leaf.key, self.strategy, ccfg, seed)
-                    art, calib, online = self._leaf_artifact(
-                        leaf, dkey, ccfg, seed, local_params,
-                        scoring_stats)
+                    o = self._session_oracle(leaf.oracle)
+                    c0 = o.calls
+                    with self._tracer.span(f"leaf:{leaf.name}",
+                                           kind="leaf") as lspan:
+                        art, calib, online = self._leaf_artifact(
+                            leaf, dkey, ccfg, seed, local_params,
+                            scoring_stats)
+                        lspan.set(oracle_calls=calib + online)
                     arts[leaf.key] = art
                     build_calib[leaf.key] = calib
                     online_by_key[leaf.key] += online
+                    charged_by_key[leaf.key] += o.calls - c0
                 rank = self._fuzzy_rank(
                     child, {key: a.scores for key, a in arts.items()})
                 # stable argsort on -rank: ties break by ascending doc
@@ -1190,7 +1407,7 @@ class ScaleDocEngine:
                 while len(accepted) < k and walked < n:
                     cand = order_idx[walked:walked + batch]
                     walked += len(cand)
-                    for leaf in order:
+                    for oi, leaf in enumerate(order):
                         root_vals = child.evaluate(leaf_vals)
                         pend = cand[root_vals[cand] == UNKNOWN]
                         if not len(pend):
@@ -1200,10 +1417,14 @@ class ScaleDocEngine:
                         if not len(need):
                             continue
                         oracle = self._session_oracle(leaf.oracle)
-                        dec, _, online = self._decide_pending(
+                        c0 = oracle.calls
+                        dec, _, online, dmech = self._decide_pending(
                             arts[leaf.key], oracle, need)
                         vals[need] = np.asarray(dec, bool).astype(np.int8)
+                        last_mech[need] = dmech
+                        last_writer[need] = oi
                         online_by_key[leaf.key] += online
+                        charged_by_key[leaf.key] += oracle.calls - c0
                     member = child.evaluate(leaf_vals)[cand] == TRUE
                     newly = []
                     for doc in cand[member]:
@@ -1237,7 +1458,7 @@ class ScaleDocEngine:
                         name=name))
             else:  # proxy_fallback: 0.5-cut membership, rank cut on top
                 filled_any = np.zeros(n, bool)
-                for leaf in order:
+                for oi, leaf in enumerate(order):
                     art = arts.get(leaf.key)
                     if art is None:
                         continue
@@ -1245,6 +1466,8 @@ class ScaleDocEngine:
                     unk = np.nonzero(vals == UNKNOWN)[0]
                     vals[unk] = (art.scores[unk] > 0.5).astype(np.int8)
                     filled_any[unk] = True
+                    last_mech[unk] = trace_mod.PROXY_FALLBACK
+                    last_writer[unk] = oi
                 if order_idx is not None and len(arts) == len(leaves):
                     member_vals = child.evaluate(leaf_vals)
                     in_order = order_idx[
@@ -1258,6 +1481,19 @@ class ScaleDocEngine:
 
         walked_docs = (order_idx[:walked] if order_idx is not None
                        else np.zeros(0, np.int64))
+        # provenance: docs never walked, and walked members beyond k,
+        # were excluded by the rank cut itself -> topk_skip. Short-
+        # circuit remapping is skipped (the rank walk short-circuits by
+        # design; topk_skip is the informative class).
+        walked_mask = np.zeros(n, bool)
+        if len(walked_docs):
+            walked_mask[walked_docs] = True
+        member_vals = child.evaluate(leaf_vals)
+        skip_idx = np.nonzero(~mask & (~walked_mask
+                                       | (member_vals == TRUE)))[0]
+        provenance = self._assemble_provenance(
+            mask, last_mech, last_writer, [lf.name for lf in order],
+            unresolved=unresolved, topk_skip=skip_idx)
         reports: List[LeafReport] = []
         for leaf in order:
             art = arts.get(leaf.key)
@@ -1284,7 +1520,8 @@ class ScaleDocEngine:
                 proxy_reused=reused, cascade=cres,
                 pending=np.asarray(decided, np.int64),
                 scores=(art.scores[decided] if art is not None else None),
-                labels=(vals[decided] == TRUE)))
+                labels=(vals[decided] == TRUE),
+                oracle_docs_charged=charged_by_key[leaf.key]))
 
         total = sum(o.calls - before
                     for o, before in calls_before.values())
@@ -1305,7 +1542,8 @@ class ScaleDocEngine:
             est_accuracy_debit=self._fallback_debit(reports,
                                                     fallback_docs, n),
             error=str(degrade_error) if degrade_error is not None
-            else None)
+            else None,
+            provenance=provenance)
         if ground_truth is not None:
             truth = np.asarray(ground_truth).astype(bool)
             result.achieved_f1 = f1_score(result.mask, truth)

@@ -57,6 +57,7 @@ from repro.core.scoring import (_iter_chunks, _num_docs,
                                 _single_chunk_scores,
                                 _single_chunk_scores_impl, group_jobs)
 from repro.core.encoder import encoder_apply, l2_normalize
+from repro.runtime import trace as trace_mod
 from repro.sharding.rules import RuleSet
 
 DEFAULT_PREFETCH_DEPTH = 2
@@ -322,6 +323,11 @@ class ScoringExecutor:
             wall_seconds=time.perf_counter() - t0,
             devices=self._mesh_size if sharded else 1,
             paths=("shard",) if sharded else ("jnp",))
+        # ambient annotation: lands on the enclosing "score" span (the
+        # engine opens one per scoring pass); no-op outside a trace
+        trace_mod.annotate(tiles=tiles, bytes_streamed=nbytes,
+                           io_seconds=round(pre.io_seconds, 6),
+                           stall_seconds=round(pre.stall_seconds, 6))
         return out, stats
 
     def score_multi(self, jobs: Sequence[Tuple[Optional[Dict], np.ndarray]],

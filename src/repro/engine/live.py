@@ -62,6 +62,7 @@ from repro.engine.executor import ScoringStats
 from repro.engine.predicate import (FALSE, TRUE, UNKNOWN, Predicate,
                                     SemanticTopK)
 from repro.engine.store import DEFAULT_CHUNK, DocumentStore
+from repro.runtime import trace as trace_mod
 
 
 class LiveEngineClosed(RuntimeError):
@@ -407,6 +408,10 @@ class LiveEngine:
                                          cascade_cfg, **engine_kwargs)
         self.store = self.engine.store
         self.drift_cfg = drift or DriftConfig()
+        # observability: the serving layer attaches its tracer so pump
+        # cycles appear in the flight recorder (spans never affect
+        # decisions)
+        self.tracer = trace_mod.NULL_TRACER
         self._standing: Dict[str, StandingPredicate] = {}
         self._lock = threading.RLock()
         self._closed = False
@@ -483,30 +488,48 @@ class LiveEngine:
             if self._closed:
                 raise LiveEngineClosed("LiveEngine is closed")
             n = self._refresh()
-            for sp in list(self._standing.values()):
-                if sp.watermark < n:
-                    try:
+            with self.tracer.span("live.pump", kind="live",
+                                  watermark=n,
+                                  standing=len(self._standing)) as pspan:
+                return self._pump_locked(n, pspan)
+
+    def _pump_locked(self, n: int, pspan) -> int:
+        stalled = 0
+        for sp in list(self._standing.values()):
+            if sp.watermark < n:
+                try:
+                    with self.tracer.span(
+                            "live.delta", kind="live",
+                            standing=sp.name or sp.id,
+                            lo=int(sp.watermark), hi=int(n)):
                         self._process_delta(sp, sp.watermark, n)
-                    except OracleError:
-                        # oracle outage mid-delta: non-advancing pump.
-                        # _process_delta commits nothing before its
-                        # labeling completes, so the watermark is
-                        # unmoved, no batch was published, and the same
-                        # rows are retried next pump. The drift check is
-                        # skipped too — its window never saw these rows,
-                        # so an outage cannot masquerade as drift.
-                        sp.pumps_stalled += 1
-                        continue
-                    if sp.drift_cfg.auto and not sp.cancelled:
-                        if sp.drift_status()["triggered"]:
-                            sp.drift_trips += 1
-                            try:
+                except OracleError:
+                    # oracle outage mid-delta: non-advancing pump.
+                    # _process_delta commits nothing before its
+                    # labeling completes, so the watermark is
+                    # unmoved, no batch was published, and the same
+                    # rows are retried next pump. The drift check is
+                    # skipped too — its window never saw these rows,
+                    # so an outage cannot masquerade as drift.
+                    sp.pumps_stalled += 1
+                    stalled += 1
+                    continue
+                if sp.drift_cfg.auto and not sp.cancelled:
+                    if sp.drift_status()["triggered"]:
+                        sp.drift_trips += 1
+                        try:
+                            with self.tracer.span(
+                                    "live.revalidate", kind="live",
+                                    standing=sp.name or sp.id):
                                 self._revalidate_locked(sp, n)
-                            except OracleError:
-                                # drift stays triggered; retried on the
-                                # next pump that advances the watermark
-                                sp.pumps_stalled += 1
-            return n
+                        except OracleError:
+                            # drift stays triggered; retried on the
+                            # next pump that advances the watermark
+                            sp.pumps_stalled += 1
+                            stalled += 1
+        if stalled:
+            pspan.set(stalled=stalled)
+        return n
 
     def revalidate(self, sp: StandingPredicate) -> DeltaBatch:
         """Recalibrate-then-retrain ``sp`` over the full committed

@@ -18,6 +18,7 @@ import urllib.parse
 from typing import Dict, Iterator, Mapping, Optional
 
 from repro.engine.predicate import Predicate
+from repro.runtime import trace as trace_mod
 
 
 class GatewayError(RuntimeError):
@@ -84,14 +85,15 @@ class GatewayClient:
         return headers
 
     def _request(self, method: str, path: str, body: Optional[Dict] = None,
-                 timeout: Optional[float] = None, check: bool = True):
+                 timeout: Optional[float] = None, check: bool = True,
+                 headers: Optional[Dict[str, str]] = None):
         conn = http.client.HTTPConnection(
             self.host, self.port, timeout=timeout or self.timeout)
         try:
             payload = (json.dumps(body).encode()
                        if body is not None else None)
             conn.request(method, path, body=payload,
-                         headers=self._headers())
+                         headers={**self._headers(), **(headers or {})})
             resp = conn.getresponse()
             raw = resp.read()
             data = json.loads(raw) if raw else {}
@@ -128,10 +130,15 @@ class GatewayClient:
     def submit(self, predicate, *,
                oracles: Optional[Mapping[str, object]] = None,
                accuracy_target: Optional[float] = None, seed: int = 0,
-               name: Optional[str] = None) -> Dict:
+               name: Optional[str] = None,
+               trace_ctx=None) -> Dict:
         """Submit a predicate — either an already-encoded wire dict or a
         ``Predicate`` plus the ``oracles`` name registry it serializes
-        against. Returns the 202 body (``id``, ``state``, ...)."""
+        against. Returns the 202 body (``id``, ``state``,
+        ``trace_id``, ...). ``trace_ctx`` — a ``trace.SpanContext``, a
+        ``Span``, or a preformatted ``traceparent`` string — propagates
+        the caller's trace context so the server-side spans parent onto
+        it (and the returned ``trace_id`` is the caller's)."""
         if isinstance(predicate, Predicate):
             predicate = predicate.to_wire(oracles)
         body = {"predicate": predicate, "seed": seed}
@@ -139,7 +146,14 @@ class GatewayClient:
             body["accuracy_target"] = accuracy_target
         if name is not None:
             body["name"] = name
-        _, data = self._request("POST", "/v1/queries", body=body)
+        headers = {}
+        if trace_ctx is not None:
+            ctx = getattr(trace_ctx, "ctx", trace_ctx)
+            headers["traceparent"] = (
+                ctx if isinstance(ctx, str)
+                else trace_mod.make_traceparent(ctx))
+        _, data = self._request("POST", "/v1/queries", body=body,
+                                headers=headers)
         return data
 
     def status(self, session_id: str) -> Dict:
@@ -201,6 +215,33 @@ class GatewayClient:
 
     def cancel(self, session_id: str) -> Dict:
         _, data = self._request("DELETE", f"/v1/queries/{session_id}")
+        return data
+
+    def explain(self, session_id: str,
+                include_docs: bool = True) -> Dict:
+        """Decision provenance for a finished query: which mechanism
+        (proxy threshold / oracle / cached label / fallback / ...)
+        decided every document, and at which leaf."""
+        docs = "1" if include_docs else "0"
+        _, data = self._request(
+            "GET", f"/v1/queries/{session_id}/explain?docs={docs}")
+        return data
+
+    def traces(self, trace_id: Optional[str] = None,
+               limit: Optional[int] = None,
+               chrome: bool = False) -> Dict:
+        """Flight-recorder spans from the server's tracer, optionally
+        filtered to one trace id; ``chrome=True`` fetches Chrome-trace/
+        Perfetto JSON instead of the raw span list."""
+        params = {}
+        if trace_id is not None:
+            params["trace_id"] = trace_id
+        if limit is not None:
+            params["limit"] = str(limit)
+        if chrome:
+            params["format"] = "chrome"
+        qs = ("?" + urllib.parse.urlencode(params)) if params else ""
+        _, data = self._request("GET", f"/v1/traces{qs}")
         return data
 
     def iter_deltas(self, session_id: str,
@@ -320,6 +361,26 @@ class GatewayClient:
 
     def metrics(self) -> Dict:
         return self._request("GET", "/v1/metrics")[1]
+
+    def metrics_prometheus(self) -> str:
+        """The ``?format=prometheus`` text exposition, as a string."""
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+        try:
+            conn.request("GET", "/v1/metrics?format=prometheus",
+                         headers=self._headers())
+            resp = conn.getresponse()
+            raw = resp.read()
+            if resp.status >= 400:
+                data = {}
+                try:
+                    data = json.loads(raw)
+                except json.JSONDecodeError:
+                    pass
+                self._raise_for_status(resp, data)
+            return raw.decode("utf-8")
+        finally:
+            conn.close()
 
     def admin_sessions(self) -> Dict:
         return self._request("GET", "/v1/admin/sessions")[1]

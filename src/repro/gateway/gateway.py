@@ -13,6 +13,9 @@ service with per-tenant admission and a live ops surface.
     GET    /v1/queries/<id>/deltas   accepted/rejected doc-id deltas as
                                      server-sent events (final sentinel
                                      -> `done` event -> stream close)
+    GET    /v1/queries/<id>/explain  decision provenance: per-doc
+                                     deciding mechanism + leaf
+                                     (?docs=0 -> counts only)
     DELETE /v1/queries/<id>          cooperative cancel
     POST   /v1/standing              register a standing predicate over
                                      the live store (continuous query)
@@ -26,7 +29,14 @@ service with per-tenant admission and a live ops surface.
     GET    /healthz | /readyz        liveness | engine-resident+store-open
     GET    /v1/metrics               CounterSet snapshot: queue depth,
                                      micro-batch occupancy, per-tenant
-                                     counters, latency p50/p95/p99
+                                     counters, latency p50/p95/p99, the
+                                     cost ledger and tracer stats
+                                     (?format=prometheus -> text
+                                     exposition of the CounterSet)
+    GET    /v1/traces                flight-recorder spans
+                                     (?trace_id= filters one trace,
+                                     ?limit= caps, ?format=chrome ->
+                                     Chrome-trace/Perfetto JSON)
     GET    /v1/admin/sessions        live session registry with states
                                      (scoped to the caller's tenant
                                      unless it has ``admin=True``)
@@ -63,6 +73,9 @@ import numpy as np
 from repro.core.oracle import OracleUnavailable
 from repro.engine.predicate import WireFormatError, from_wire
 from repro.gateway.admission import TenantState, TenantTable
+from repro.runtime import trace as trace_mod
+from repro.runtime.metrics import (PROMETHEUS_CONTENT_TYPE,
+                                   render_prometheus)
 from repro.serve.server import (PredicateServer, QuerySession,
                                 ServerClosed, ServerSaturated,
                                 SessionCancelled, SessionState,
@@ -170,7 +183,9 @@ class PredicateGateway:
 
     # -- request-level operations (handler delegates here) ---------------
 
-    def submit(self, tenant: TenantState, body: Dict) -> QuerySession:
+    def submit(self, tenant: TenantState, body: Dict,
+               trace_ctx: Optional[trace_mod.SpanContext] = None
+               ) -> QuerySession:
         # breaker-open fast-fail: with degrade="fail" every session
         # would burn a worker slot just to fail — reject at the door
         # with the breaker's own retry horizon instead. Degrading
@@ -192,7 +207,8 @@ class PredicateGateway:
             accuracy_target=None if target is None else float(target),
             seed=int(body.get("seed", 0)),
             name=body.get("name"),
-            tenant=tenant.tenant.name)
+            tenant=tenant.tenant.name,
+            trace_ctx=trace_ctx)
         tenant.track(session)
         return session
 
@@ -383,7 +399,27 @@ class _Handler(BaseHTTPRequestHandler):
             if self._tenant() is None:   # closed table: 401, not a leak
                 return self._json(401, {"error": "unknown or missing "
                                                  "API key"})
+            if self._query.get("format") == "prometheus":
+                # the scrapeable form: just the CounterSet (counters,
+                # gauges + peaks, observation summaries) — the nested
+                # subsystem blocks stay JSON-only
+                return self._text(
+                    200, render_prometheus(self.gw.counters.snapshot()),
+                    content_type=PROMETHEUS_CONTENT_TYPE)
             return self._json(200, self.gw.metrics_snapshot())
+        if method == "GET" and parts == ["v1", "traces"]:
+            if self._tenant() is None:
+                return self._json(401, {"error": "unknown or missing "
+                                                 "API key"})
+            limit = self._query.get("limit")
+            try:
+                limit = int(limit) if limit is not None else None
+            except ValueError:
+                return self._json(400, {"error": f"bad limit parameter "
+                                                 f"{limit!r}"})
+            return self._json(200, self.gw.server.trace_snapshot(
+                trace_id=self._query.get("trace_id"), limit=limit,
+                chrome=self._query.get("format") == "chrome"))
         if method == "GET" and parts == ["v1", "admin", "sessions"]:
             tenant = self._tenant()
             if tenant is None:
@@ -425,6 +461,8 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._json(200, session.stats())
             if method == "GET" and rest[1:] == ["result"]:
                 return self._result(session)
+            if method == "GET" and rest[1:] == ["explain"]:
+                return self._explain(session)
             if method == "GET" and rest[1:] == ["deltas"]:
                 return self._sse(session)
             if method == "DELETE" and len(rest) == 1:
@@ -474,10 +512,21 @@ class _Handler(BaseHTTPRequestHandler):
                                f"{reason} limit",
                       "reason": reason, "retry_after": retry_after},
                 headers=_retry_header(retry_after))
+        # context propagation: a caller-supplied W3C `traceparent` header
+        # parents the whole server-side trace on the caller's span; the
+        # gateway's own request span sits between it and the session span
+        # (malformed headers parse to None — degrade, never reject)
+        ctx = trace_mod.parse_traceparent(self.headers.get("traceparent"))
+        gspan = self.gw.server.tracer.span(
+            "gateway.request", parent=ctx, kind="gateway",
+            route="POST /v1/queries", tenant=name)
         try:
             try:
-                body = self._body()
-                session = self.gw.submit(tenant, body)
+                with gspan:
+                    body = self._body()
+                    session = self.gw.submit(
+                        tenant, body, trace_ctx=gspan.ctx or ctx)
+                    gspan.set(session=session.id)
             except BaseException:
                 tenant.release()    # return the slot admit() reserved
                 raise
@@ -518,7 +567,8 @@ class _Handler(BaseHTTPRequestHandler):
         fold(counters, name, "submitted")
         self._json(202, {"id": session.id, "name": session.name,
                          "tenant": name,
-                         "state": session.state.value})
+                         "state": session.state.value,
+                         "trace_id": session.trace_id})
 
     def _subscribe(self, tenant: TenantState) -> None:
         name = tenant.tenant.name
@@ -598,6 +648,24 @@ class _Handler(BaseHTTPRequestHandler):
                                     "error": f"{type(exc).__name__}: "
                                              f"{exc}"})
         self._json(200, _result_payload(session))
+
+    def _explain(self, session: QuerySession) -> None:
+        """Decision provenance for a finished session: per-doc deciding
+        mechanism + leaf. ``?docs=0`` drops the O(n_docs) arrays."""
+        include = self._query.get("docs", "1") not in ("0", "false")
+        try:
+            payload = self.gw.server.explain(session.id,
+                                             include_docs=include)
+        except RuntimeError as exc:
+            # still running — provenance exists only once filter() ends
+            return self._json(409, {"error": str(exc),
+                                    "state": session.state.value,
+                                    "id": session.id})
+        except BaseException as exc:   # the session's own failure
+            return self._json(500, {"error": f"{type(exc).__name__}: "
+                                             f"{exc}",
+                                    "state": session.state.value})
+        self._json(200, payload)
 
     def _sse(self, session: QuerySession) -> None:
         """Stream the session's accepted/rejected deltas as server-sent
@@ -787,6 +855,16 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_header("Content-Length", str(len(body)))
         for key, value in (headers or {}).items():
             self.send_header(key, value)
+        self.end_headers()
+        self.wfile.write(body)
+        self._status = status
+
+    def _text(self, status: int, text: str, *,
+              content_type: str = "text/plain; charset=utf-8") -> None:
+        body = text.encode()
+        self.send_response(status)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
         self._status = status

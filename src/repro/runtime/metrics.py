@@ -12,6 +12,7 @@ from __future__ import annotations
 import json
 import math
 import random
+import re
 import threading
 import time
 from collections import deque
@@ -186,6 +187,59 @@ class CounterSet:
     def to_json(self, indent: Optional[int] = None) -> str:
         return json.dumps(self.snapshot(), indent=indent, sort_keys=True,
                           default=float)
+
+
+# Prometheus text exposition (format version 0.0.4). Metric names may
+# only contain [a-zA-Z0-9_:] and must not start with a digit.
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+_PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str, prefix: str) -> str:
+    name = _PROM_BAD.sub("_", name)
+    if name and name[0].isdigit():
+        name = "_" + name
+    return f"{prefix}_{name}" if prefix else name
+
+
+def _prom_value(value: float) -> str:
+    value = float(value)
+    if math.isinf(value):
+        return "+Inf" if value > 0 else "-Inf"
+    if math.isnan(value):
+        return "NaN"
+    return repr(value) if value != int(value) else str(int(value))
+
+
+def render_prometheus(snapshot: Dict, prefix: str = "scaledoc") -> str:
+    """Render a ``CounterSet.snapshot()`` in the Prometheus text
+    exposition format (0.0.4): counters as ``counter``, gauges as
+    ``gauge`` with a companion ``<name>_peak`` gauge, observations as
+    ``summary`` (``<name>{quantile=...}`` p50/p95/p99 over the
+    reservoir, plus exact ``_count``/``_sum`` from the running totals).
+    Serve with ``Content-Type: PROMETHEUS_CONTENT_TYPE``."""
+    lines: List[str] = []
+    for name in sorted(snapshot.get("counters", {})):
+        m = _prom_name(name, prefix)
+        lines.append(f"# TYPE {m} counter")
+        lines.append(f"{m} {_prom_value(snapshot['counters'][name])}")
+    for name in sorted(snapshot.get("gauges", {})):
+        g = snapshot["gauges"][name]
+        m = _prom_name(name, prefix)
+        lines.append(f"# TYPE {m} gauge")
+        lines.append(f"{m} {_prom_value(g['value'])}")
+        lines.append(f"# TYPE {m}_peak gauge")
+        lines.append(f"{m}_peak {_prom_value(g['peak'])}")
+    for name in sorted(snapshot.get("observations", {})):
+        s = snapshot["observations"][name]
+        m = _prom_name(name, prefix)
+        lines.append(f"# TYPE {m} summary")
+        for q in ("p50", "p95", "p99"):
+            lines.append(f'{m}{{quantile="0.{q[1:]}"}} '
+                         f"{_prom_value(s[q])}")
+        lines.append(f"{m}_sum {_prom_value(s['sum'])}")
+        lines.append(f"{m}_count {_prom_value(s['count'])}")
+    return "\n".join(lines) + "\n"
 
 
 class _Timer:

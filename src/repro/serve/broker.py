@@ -38,16 +38,22 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.oracle import CachedOracle, OracleUnavailable
+from repro.runtime import trace as trace_mod
 from repro.runtime.metrics import CounterSet
 
 DEFAULT_MAX_BATCH = 32
 DEFAULT_MAX_DELAY = 0.002       # seconds an open batch may age
 
+# a coalesced flush links the spans of every session whose ask landed in
+# the batch; bounded so a pathological fan-in cannot bloat the span
+MAX_FLUSH_LINKS = 64
+
 
 class _Batch:
     """One micro-batch being assembled or flushed."""
 
-    __slots__ = ("docs", "created", "deadline", "event", "error")
+    __slots__ = ("docs", "created", "deadline", "event", "error",
+                 "contributors")
 
     def __init__(self, deadline: float):
         self.docs: List[int] = []
@@ -55,21 +61,35 @@ class _Batch:
         self.deadline = self.created + deadline
         self.event = threading.Event()
         self.error: Optional[BaseException] = None
+        # span contexts of the sessions that enqueued or joined — the
+        # flush span *links* (not parents) each of them, reconnecting
+        # the coalesced oracle invocation to every tree it served
+        self.contributors: List[trace_mod.SpanContext] = []
 
 
 class _OracleLane:
     """Per-oracle batching state: one open batch plus the in-flight map."""
 
     def __init__(self, cached: CachedOracle, max_batch: int,
-                 max_delay: float, counters: CounterSet):
+                 max_delay: float, counters: CounterSet,
+                 broker: Optional["OracleBroker"] = None):
         self.cached = cached
         self.max_batch = max_batch
         self.max_delay = max_delay
         self.counters = counters
+        # back-reference for the tracer: the broker's tracer can be
+        # attached after lanes exist, so resolve it per flush
+        self._broker = broker
         self._lock = threading.Lock()
         self._open: Optional[_Batch] = None
         # doc -> batch it will be purchased in (open or in flight)
         self._pending: Dict[int, _Batch] = {}
+
+    @property
+    def _tracer(self) -> trace_mod.Tracer:
+        broker = self._broker
+        return broker.tracer if broker is not None else \
+            trace_mod.NULL_TRACER
 
     # -- enqueue ---------------------------------------------------------
 
@@ -90,19 +110,24 @@ class _OracleLane:
         itself stays usable for the next ask either way."""
         charged = 0
         last_error: Optional[BaseException] = None
-        for round_ in range(2):
-            need = self.cached.peek(indices)
-            if not need:
+        with self._tracer.span("broker.request", kind="broker",
+                               docs=len(indices)) as rspan:
+            for round_ in range(2):
+                need = self.cached.peek(indices)
+                if not need:
+                    if round_:
+                        self.counters.inc("oracle_rejoin_recovered")
+                    rspan.set(charged=charged)
+                    return charged
                 if round_:
-                    self.counters.inc("oracle_rejoin_recovered")
-                return charged
-            if round_:
-                self.counters.inc("oracle_waiter_retries")
-            got, errors = self._one_round(need, wait_cm)
-            charged += got
-            if not errors:
-                return charged
-            last_error = errors[-1]
+                    self.counters.inc("oracle_waiter_retries")
+                got, errors = self._one_round(need, wait_cm)
+                charged += got
+                if not errors:
+                    rspan.set(charged=charged)
+                    return charged
+                last_error = errors[-1]
+            rspan.set(charged=charged, failed=True)
         still = self.cached.peek(indices)
         if not still:
             return charged
@@ -124,6 +149,9 @@ class _OracleLane:
         charged = 0
         waits: List[_Batch] = []
         to_flush: Optional[_Batch] = None
+        # the enqueuing thread IS the session thread, so its ambient
+        # span identifies the session tree this ask belongs to
+        ctx = trace_mod.current_ctx()
         with self._lock:
             for doc in need:
                 got = self._pending.get(doc)
@@ -142,6 +170,11 @@ class _OracleLane:
             # flushes as ONE oracle invocation (fragmenting it would
             # multiply round trips — the opposite of micro-batching);
             # small asks sit out the deadline so other sessions can join
+            if ctx is not None:
+                for batch in waits:
+                    if (len(batch.contributors) < MAX_FLUSH_LINKS
+                            and ctx not in batch.contributors):
+                        batch.contributors.append(ctx)
             if (self._open is not None
                     and len(self._open.docs) >= self.max_batch):
                 to_flush, self._open = self._open, None
@@ -195,10 +228,21 @@ class _OracleLane:
 
     def _flush(self, batch: _Batch) -> None:
         t0 = time.perf_counter()
+        # a coalesced flush serves many sessions at once, so its span is
+        # a root of its own trace, *linked* to every contributor's span
+        # rather than parented under whichever session happened to pay
+        # the round trip
+        fspan = self._tracer.span("oracle.flush", parent=None,
+                                  kind="oracle", docs=len(batch.docs),
+                                  sessions=len(batch.contributors))
+        for ctx in batch.contributors:
+            fspan.link(ctx)
         try:
-            # CachedOracle.label re-checks misses under its own lock, so
-            # docs another path cached meanwhile are not re-purchased
-            self.cached.label(np.asarray(batch.docs, np.int64))
+            with fspan:
+                # CachedOracle.label re-checks misses under its own
+                # lock, so docs another path cached meanwhile are not
+                # re-purchased
+                self.cached.label(np.asarray(batch.docs, np.int64))
             self.counters.inc("oracle_flushes")
             self.counters.inc("oracle_docs_flushed", len(batch.docs))
             self.counters.observe("oracle_batch_occupancy",
@@ -235,6 +279,12 @@ class SessionOracleHandle:
     def flops_per_doc(self) -> float:
         return self._lane.cached.flops_per_doc
 
+    def peek(self, indices) -> List[int]:
+        """Uncached (would-be-purchased) indices — read-only passthrough
+        to the shared cache, used by provenance to split oracle-bought
+        from cache-served labels before the buy happens."""
+        return self._lane.cached.peek(indices)
+
     def label(self, indices) -> np.ndarray:
         indices = np.asarray(indices, np.int64)
         if len(indices):
@@ -255,12 +305,17 @@ class OracleBroker:
 
     def __init__(self, *, max_batch: int = DEFAULT_MAX_BATCH,
                  max_delay: float = DEFAULT_MAX_DELAY,
-                 counters: Optional[CounterSet] = None):
+                 counters: Optional[CounterSet] = None,
+                 tracer: Optional[trace_mod.Tracer] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
         self.max_delay = max_delay
         self.counters = counters if counters is not None else CounterSet()
+        # settable after construction (the server attaches its tracer);
+        # lanes resolve it per flush through their broker back-reference
+        self.tracer = tracer if tracer is not None else \
+            trace_mod.NULL_TRACER
         self._lock = threading.Lock()
         self._lanes: Dict[int, _OracleLane] = {}
         self._pins: List[CachedOracle] = []     # keep id()s stable
@@ -270,7 +325,7 @@ class OracleBroker:
             got = self._lanes.get(id(cached))
             if got is None or got.cached is not cached:
                 got = _OracleLane(cached, self.max_batch, self.max_delay,
-                                  self.counters)
+                                  self.counters, broker=self)
                 self._lanes[id(cached)] = got
                 self._pins.append(cached)
             return got

@@ -44,6 +44,10 @@ import numpy as np
 
 from repro.core.oracle import (CachedOracle, OracleError, OracleFault,
                                OracleTimeout, OracleUnavailable)
+# ambient span annotations only: retry/backoff/breaker events land on
+# whatever span the calling session (or broker flush) has open, with no
+# tracer plumbed through the policy layer. No-ops when nothing is open.
+from repro.runtime import trace as trace_mod
 
 __all__ = [
     "ChaosConfig", "ChaosOracle", "RetryPolicy", "BreakerConfig",
@@ -391,6 +395,8 @@ class ResilientOracle:
         allowed, retry_after = self.breaker.allow()
         if not allowed:
             self._count("breaker_rejects")
+            trace_mod.add_event("oracle.breaker_reject", docs=len(docs),
+                                retry_after=round(retry_after, 6))
             raise OracleUnavailable(
                 f"oracle circuit open ({len(docs)} docs refused)",
                 docs=docs, retry_after=retry_after, breaker_open=True)
@@ -422,6 +428,7 @@ class ResilientOracle:
         if not self.retry.bisect or len(docs) == 1:
             return list(docs), failed_exc
         self._count("bisects")
+        trace_mod.add_event("oracle.bisect", docs=len(docs), depth=depth)
         mid = len(docs) // 2
         left, right = docs[:mid], docs[mid:]
         f1, l1 = self._acquire(left, deadline, depth + 1)
@@ -449,6 +456,9 @@ class ResilientOracle:
                         self._rng, prev, self.retry.base_delay_s,
                         self.retry.max_delay_s)
                 self._count("retries")
+                trace_mod.add_event("oracle.retry", attempt=attempt,
+                                    docs=len(docs),
+                                    delay=round(min(prev, remaining), 6))
                 self._sleep(min(prev, remaining))
             try:
                 t0 = self._clock()

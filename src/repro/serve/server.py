@@ -42,6 +42,7 @@ from repro.engine.live import (DeltaBatch, DriftConfig, LiveEngine,
                                StandingPredicate, Subscription)
 from repro.engine.optimizer import QueryOptimizer
 from repro.engine.predicate import Predicate
+from repro.runtime import trace as trace_mod
 from repro.runtime.metrics import CounterSet
 from repro.serve.broker import OracleBroker
 
@@ -89,6 +90,10 @@ class QueryRequest:
     seed: int = 0
     name: Optional[str] = None
     tenant: Optional[str] = None    # admission identity (set by gateways)
+    # caller-propagated trace context (e.g. a gateway request span): the
+    # session's root span parents onto it, so one trace id follows the
+    # query from the HTTP edge through engine, broker and oracle
+    trace_ctx: Optional[trace_mod.SpanContext] = None
 
 
 @dataclass
@@ -114,6 +119,10 @@ class QuerySession:
         self.request = request
         self.name = request.name or f"session-{self.id[:6]}"
         self.tenant = request.tenant
+        # trace id of this session's root span (set by the worker when
+        # tracing is on; echoed through stats() so clients can fetch
+        # /v1/traces?trace_id=... for their own query)
+        self.trace_id: Optional[str] = None
         self._counters = counters
         self._cancel = False
         self._cond = threading.Condition()
@@ -276,6 +285,7 @@ class QuerySession:
                - self._started_at)
         return {
             "id": self.id, "name": self.name, "tenant": self.tenant,
+            "trace_id": self.trace_id,
             "state": self.state.value,
             "states": history,
             "accepted": accepted, "rejected": rejected,
@@ -365,7 +375,11 @@ class PredicateServer:
                  live: Optional[LiveEngine] = None,
                  degrade: Optional[str] = None,
                  optimize: bool = False,
-                 optimizer: Optional[QueryOptimizer] = None):
+                 optimizer: Optional[QueryOptimizer] = None,
+                 trace: bool = True,
+                 trace_capacity: int = 4096,
+                 tracer: Optional[trace_mod.Tracer] = None,
+                 ledger: Optional[trace_mod.CostLedger] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         if degrade is not None and degrade not in ("fail", "defer",
@@ -390,9 +404,23 @@ class PredicateServer:
         self.optimizer = optimizer or (QueryOptimizer() if optimize
                                        else None)
         self.counters = counters if counters is not None else CounterSet()
+        # observability plane: one tracer (bounded flight-recorder ring)
+        # and one cost ledger for the whole server. trace=False swaps in
+        # a disabled tracer whose spans are a shared no-op singleton —
+        # near-zero overhead and bitwise-identical decisions either way.
+        self.tracer = (tracer if tracer is not None
+                       else trace_mod.Tracer(enabled=trace,
+                                             capacity=trace_capacity))
+        self.ledger = ledger or trace_mod.CostLedger()
+        self._waste_seen = 0            # retry-waste already ledgered
         self.broker = broker or OracleBroker(max_batch=max_batch,
                                              max_delay=max_delay,
                                              counters=self.counters)
+        self.broker.tracer = self.tracer
+        # repair replays run on the engine itself (not a session view)
+        self.engine._tracer = self.tracer
+        if live is not None:
+            live.tracer = self.tracer
         self._queue: "queue.Queue" = queue.Queue(maxsize=queue_depth)
         self._closed = False
         self._lock = threading.Lock()
@@ -416,17 +444,28 @@ class PredicateServer:
                seed: int = 0, name: Optional[str] = None,
                tenant: Optional[str] = None,
                block: bool = False,
-               timeout: Optional[float] = None) -> QuerySession:
+               timeout: Optional[float] = None,
+               trace_ctx: Optional[trace_mod.SpanContext] = None
+               ) -> QuerySession:
         """Admit one query. Non-blocking by default: raises
         ``ServerSaturated`` when the admission queue is full (callers
         shed or retry); ``block=True`` waits up to ``timeout``.
         ``tenant`` tags the session with its admission identity (the
-        gateway's per-tenant accounting reads it back from stats)."""
+        gateway's per-tenant accounting reads it back from stats);
+        ``trace_ctx`` parents the session's root span on the caller's
+        span (e.g. the gateway's per-request span)."""
         request = QueryRequest(predicate=predicate,
                                accuracy_target=accuracy_target,
                                ground_truth=ground_truth, seed=seed,
-                               name=name, tenant=tenant)
+                               name=name, tenant=tenant,
+                               trace_ctx=trace_ctx)
         session = QuerySession(request, self.counters)
+        # the session's trace id is fixed at admission (inherited from
+        # the caller's context or minted fresh), not when a worker picks
+        # the session up — so the submit response can already carry it
+        if self.tracer.enabled:
+            session.trace_id = (trace_ctx.trace_id if trace_ctx is not None
+                                else trace_mod._new_trace_id())
         # closed-check and enqueue are one atomic step (shutdown takes
         # the same lock), so a session can never slip in behind the
         # worker stop sentinels and hang unserved. Workers never take
@@ -459,6 +498,7 @@ class PredicateServer:
         with self._lock:
             if self.live is None:
                 self.live = LiveEngine(self.engine, drift=drift)
+                self.live.tracer = self.tracer
             return self.live
 
     def subscribe(self, predicate: Predicate, *,
@@ -521,14 +561,31 @@ class PredicateServer:
             session._mark_started()
             view = self.engine.session_view(
                 oracle_wrap=self.broker.wrap_for(session),
-                observer=session, optimizer=self.optimizer)
+                observer=session, optimizer=self.optimizer,
+                tracer=self.tracer)
             req = session.request
+            # the session's root span: everything the engine/broker emit
+            # for this query nests under it; parented on the caller's
+            # propagated context (gateway request span) when present
+            sspan = self.tracer.span(
+                "session", parent=req.trace_ctx,
+                trace_id=session.trace_id, kind="server",
+                session=session.id, tenant=req.tenant or "public",
+                query=session.name, seed=req.seed)
+            if sspan.ctx is not None:
+                session.trace_id = sspan.ctx.trace_id
             try:
-                result = view.filter(
-                    req.predicate, accuracy_target=req.accuracy_target,
-                    ground_truth=req.ground_truth, seed=req.seed,
-                    degrade=self.degrade, name=session.name)
+                with sspan:
+                    result = view.filter(
+                        req.predicate,
+                        accuracy_target=req.accuracy_target,
+                        ground_truth=req.ground_truth, seed=req.seed,
+                        degrade=self.degrade, name=session.name)
+                    sspan.set(accepted=int(np.sum(result.mask)),
+                              oracle_calls=result.oracle_calls_total,
+                              degraded=result.degraded)
                 session._finish(result)
+                self._record_ledger(session, result)
                 self.counters.inc("sessions_done")
                 if result.degraded:
                     self.counters.inc("sessions_degraded")
@@ -548,6 +605,43 @@ class PredicateServer:
                                   else "sessions_failed")
             finally:
                 self.counters.gauge_delta("active_sessions", -1)
+
+    # -- cost attribution --------------------------------------------------
+
+    def _record_ledger(self, session: QuerySession,
+                       result: FilterResult) -> None:
+        """One finished session -> cost-ledger rows, per leaf. Oracle-doc
+        columns are the broker's per-session charge counts (LeafReport
+        train/calib/online), so per-tenant totals reconcile against the
+        broker's purchase counters fault-free. Proxy FLOPs estimate the
+        full-collection scoring pass; a CSE-reused leaf pays neither and
+        is credited the training labels it would have bought alone."""
+        n = result.n_docs
+        n_train = min(max(int(self.engine.proxy_cfg.train_fraction * n),
+                          16), n)
+        rows = []
+        for rep in result.leaf_reports:
+            reused = bool(rep.proxy_reused)
+            # charged = calib + online the session actually paid (handle-
+            # calls delta, cache hits/joins free); split it with calib
+            # first so the columns sum to the exact charge
+            charged = int(rep.oracle_docs_charged)
+            calib = min(int(rep.oracle_calls_calib), charged)
+            rows.append({
+                "leaf": rep.name,
+                "oracle_docs_train": int(rep.oracle_calls_train),
+                "oracle_docs_calib": calib,
+                "oracle_docs_online": charged - calib,
+                "proxy_flops": (0.0 if reused
+                                else n * self.ledger.proxy_flops_per_doc),
+                "reused": reused,
+                "cse_saved_docs": n_train if reused else 0,
+            })
+        self.ledger.record_session(
+            session_id=session.id, tenant=session.tenant,
+            name=session.name, trace_id=session.trace_id,
+            leaves=rows, wall_seconds=result.wall_seconds,
+            degraded=result.degraded)
 
     # -- degraded-mode operations ------------------------------------------
 
@@ -627,6 +721,47 @@ class PredicateServer:
         with self._lock:
             return self._closed
 
+    def explain(self, session_id: str, *,
+                include_docs: bool = True) -> Dict:
+        """Decision provenance for one finished query session: which
+        mechanism (proxy threshold / oracle / cached label / fallback /
+        ...) decided every document, and at which leaf. The body behind
+        ``GET /v1/queries/<id>/explain``. ``include_docs=False`` drops
+        the O(N) per-doc arrays and keeps the counts/legend."""
+        session = self.get_session(session_id)
+        if session is None:
+            raise KeyError(f"unknown session {session_id!r}")
+        if isinstance(session, StandingSession):
+            raise TypeError(
+                f"standing session {session_id!r} has no provenance map "
+                "(decisions stream incrementally; read standing stats)")
+        if not session.done():
+            raise RuntimeError(f"session {session_id} still "
+                               f"{session.state.value}; provenance is "
+                               "assembled when filter() finishes")
+        result = session.result(timeout=0)   # raises the stored error
+        payload = {"session": session.id, "name": session.name,
+                   "tenant": session.tenant,
+                   "trace_id": session.trace_id,
+                   "plan": result.plan, "degraded": result.degraded}
+        if result.provenance is not None:
+            payload.update(result.provenance.to_payload(
+                mask=result.mask, include_docs=include_docs))
+        else:                                # pre-provenance result shape
+            payload.update({"n_docs": result.n_docs, "counts": {},
+                            "complete": False})
+        return payload
+
+    def trace_snapshot(self, *, trace_id: Optional[str] = None,
+                       limit: Optional[int] = None,
+                       chrome: bool = False) -> Dict:
+        """Flight-recorder contents (the ``/v1/traces`` body): recent
+        spans, optionally filtered to one trace id, newest last.
+        ``chrome=True`` returns Chrome-trace/Perfetto JSON instead."""
+        if chrome:
+            return self.tracer.chrome_trace(trace_id)
+        return self.tracer.snapshot(trace_id, limit)
+
     def metrics_snapshot(self) -> Dict:
         """JSON-serializable view of the server's counters plus oracle
         cache totals (docs purchased / served from cache)."""
@@ -655,6 +790,20 @@ class PredicateServer:
         snap["optimizer"] = (self.optimizer.snapshot()
                              if self.optimizer is not None
                              else {"enabled": False})
+        # retry waste is lane-level (a retried flush serves every waiter
+        # at once, so no single tenant owns it): sync the docs burned by
+        # gave-up batches into the ledger's `_infra` pseudo-tenant,
+        # delta'd so repeated snapshots never double-count
+        waste = sum(l.get("gave_up_docs", 0) for l in lanes)
+        retries = sum(l.get("retries", 0) for l in lanes)
+        with self._lock:
+            d_waste, self._waste_seen = waste - self._waste_seen, waste
+        if d_waste > 0:
+            self.ledger.record_retry_waste(docs=d_waste, retries=retries)
+        snap["cost_ledger"] = self.ledger.snapshot()
+        snap["trace"] = {k: v
+                         for k, v in self.tracer.snapshot(limit=1).items()
+                         if k != "spans"}
         with self._lock:
             standing = list(self._standing)
         snap["standing"] = {

@@ -28,7 +28,7 @@ def test_doc_files_exist():
     assert {"README.md", "index.md", "architecture.md", "offline.md",
             "engine.md", "serving.md", "gateway.md", "live.md",
             "training.md", "kernels.md", "resilience.md",
-            "optimizer.md"} <= names
+            "optimizer.md", "observability.md"} <= names
 
 
 @pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)

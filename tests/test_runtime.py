@@ -201,6 +201,68 @@ def test_observation_single_value_percentiles():
     assert s["p50"] == s["p95"] == s["p99"] == 2.5
 
 
+def test_observation_running_totals_exact_past_reservoir():
+    """count/sum/mean/min/max come from running totals, not the sampled
+    reservoir — they stay *exact* even when far more values than
+    RESERVOIR_SIZE have been observed (the percentiles are the only
+    sampled statistics)."""
+    counters = CounterSet()
+    n = 3 * RESERVOIR_SIZE + 17          # well past the reservoir
+    for v in range(1, n + 1):
+        counters.observe("lat", float(v))
+    obs = counters._observations["lat"]
+    assert len(obs._reservoir) == RESERVOIR_SIZE   # memory stays bounded
+    s = counters.snapshot()["observations"]["lat"]
+    assert s["count"] == n
+    assert s["sum"] == n * (n + 1) / 2
+    assert s["mean"] == pytest.approx((n + 1) / 2)
+    assert s["min"] == 1.0 and s["max"] == float(n)
+    assert s["last"] == float(n)
+
+
+def test_render_prometheus_text_exposition():
+    from repro.runtime.metrics import (PROMETHEUS_CONTENT_TYPE,
+                                       render_prometheus)
+
+    counters = CounterSet()
+    counters.inc("sessions_done", 3)
+    counters.inc("tenant.acme.requests", 2)   # dots must sanitize
+    counters.gauge("queue_depth", 4)
+    counters.gauge("queue_depth", 2)          # peak stays at 4
+    for v in (1.0, 2.0, 3.0, 4.0):
+        counters.observe("latency_seconds", v)
+    text = render_prometheus(counters.snapshot())
+    assert text.endswith("\n")
+    assert "version=0.0.4" in PROMETHEUS_CONTENT_TYPE
+    assert "# TYPE scaledoc_sessions_done counter" in text
+    assert "scaledoc_sessions_done 3" in text
+    # name sanitization: [^a-zA-Z0-9_:] -> _
+    assert "scaledoc_tenant_acme_requests 2" in text
+    assert "scaledoc_queue_depth 2" in text
+    assert "scaledoc_queue_depth_peak 4" in text
+    assert "# TYPE scaledoc_latency_seconds summary" in text
+    assert 'scaledoc_latency_seconds{quantile="0.95"}' in text
+    assert "scaledoc_latency_seconds_count 4" in text
+    assert "scaledoc_latency_seconds_sum 10" in text
+    # every non-comment line is "name[{labels}] value"
+    for line in text.splitlines():
+        if not line.startswith("#"):
+            assert len(line.rsplit(" ", 1)) == 2
+
+
+def test_prometheus_name_sanitization_edge_cases():
+    from repro.runtime.metrics import _prom_name, _prom_value
+
+    assert _prom_name("9lives", "") == "_9lives"
+    assert _prom_name("a-b.c/d", "") == "a_b_c_d"
+    assert _prom_name("ok:subsystem", "pre") == "pre_ok:subsystem"
+    assert _prom_value(float("inf")) == "+Inf"
+    assert _prom_value(float("-inf")) == "-Inf"
+    assert _prom_value(float("nan")) == "NaN"
+    assert _prom_value(3.0) == "3"
+    assert _prom_value(0.25) == "0.25"
+
+
 def test_metrics_close_flushes_and_is_idempotent(tmp_path):
     path = tmp_path / "m" / "train.jsonl"
     metrics = Metrics(str(path))
